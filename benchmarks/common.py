@@ -1,0 +1,112 @@
+"""Shared infrastructure for the paper-table benchmarks.
+
+Probe training is cached on disk (results/probes/<key>) so the table scripts
+compose without retraining; REPRO_BENCH_QUICK=1 shrinks corpus/epochs for CI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import hashlib
+import json
+import os
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import restore, save_pytree
+from repro.core.pipeline import (TrainedProbe, evaluate_probe, make_labels,
+                                 train_ttt_probe)
+from repro.core.probe import ProbeConfig, init_outer
+from repro.core.static_probe import StaticProbe, fit_static_probe
+from repro.trajectories import TrajectorySet, corpus_splits, ood_benchmark
+
+QUICK = os.environ.get("REPRO_BENCH_QUICK", "0") == "1"
+D_PHI = 128 if QUICK else 192
+N_TRAIN, N_CAL, N_TEST = (360, 120, 120) if QUICK else (500, 170, 170)
+N_OOD = 120 if QUICK else 170
+EPOCHS = 25 if QUICK else 35
+DELTAS = (0.05, 0.1, 0.15, 0.2)
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+PROBE_DIR = os.path.join(RESULTS, "probes")
+
+
+@functools.lru_cache(maxsize=None)
+def corpus(d_phi: int = D_PHI, seed: int = 0):
+    return corpus_splits(N_TRAIN, N_CAL, N_TEST, d_phi=d_phi, seed=seed)
+
+
+@functools.lru_cache(maxsize=None)
+def ood(name: str, d_phi: int = D_PHI):
+    return ood_benchmark(name, N_OOD, d_phi=d_phi)
+
+
+def _probe_key(pc: ProbeConfig, mode: str, seed: int, tag: str) -> str:
+    blob = json.dumps([dataclasses.asdict(pc), mode, seed, tag, N_TRAIN,
+                       EPOCHS], sort_keys=True)
+    return hashlib.sha1(blob.encode()).hexdigest()[:16]
+
+
+_PROBE_MEMO: Dict[str, TrainedProbe] = {}
+
+
+def get_probe(train: TrajectorySet, mode: str, pc: ProbeConfig,
+              seed: int = 0, tag: str = "corpus", epochs: Optional[int] = None,
+              epoch_select: bool = True) -> TrainedProbe:
+    key = _probe_key(pc, mode, seed, tag) + ("" if epoch_select else "-nosel")
+    if key in _PROBE_MEMO:
+        return _PROBE_MEMO[key]
+    path = os.path.join(PROBE_DIR, key)
+    theta_tmpl = init_outer(pc, jax.random.PRNGKey(seed))
+    if os.path.isdir(os.path.join(path, "final")):
+        theta = restore(theta_tmpl, os.path.join(path, "final"))
+        with open(os.path.join(path, "final", "meta.json")) as f:
+            hist = json.load(f).get("history", [])
+        probe = TrainedProbe(pc, theta, hist)
+    else:
+        probe = train_ttt_probe(train, mode, pc, epochs=epochs or EPOCHS,
+                                seed=seed, epoch_select=epoch_select)
+        os.makedirs(PROBE_DIR, exist_ok=True)
+        save_pytree(probe.theta, path, meta={"history": probe.history})
+    _PROBE_MEMO[key] = probe
+    return probe
+
+
+_STATIC_MEMO: Dict[str, StaticProbe] = {}
+
+
+def get_static(train: TrajectorySet, mode: str, tag: str = "corpus"
+               ) -> StaticProbe:
+    key = f"{mode}-{tag}-{len(train)}"
+    if key not in _STATIC_MEMO:
+        _STATIC_MEMO[key] = fit_static_probe(
+            train.phis, make_labels(train, mode), train.mask)
+    return _STATIC_MEMO[key]
+
+
+def eval_rows(method: str, mode: str, scores_cal, cal, scores_test, test,
+              deltas: Sequence[float] = DELTAS) -> list:
+    ev = evaluate_probe(scores_cal, cal, scores_test, test, mode, deltas)
+    return [{"method": method, "mode": mode, **r.row()} for r in ev.results]
+
+
+def print_table(title: str, rows: list, cols: Sequence[str]):
+    print(f"\n### {title}")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(_fmt(r.get(c)) for c in cols))
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.3f}"
+    return str(v)
+
+
+def save_rows(name: str, rows: list):
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, f"{name}.json"), "w") as f:
+        json.dump(rows, f, indent=1, default=float)

@@ -1,0 +1,101 @@
+"""Run the full dry-run matrix: 10 archs x 4 shapes x {single, multi} meshes.
+
+Each pair runs in a fresh subprocess (the 512-device XLA flag must be set
+before jax init, and compilations are memory-heavy).  Results land in
+``results/dryrun/<arch>__<shape>__<mesh>.json``; failures keep stderr tails.
+
+    PYTHONPATH=src python -m benchmarks.dryrun_matrix [--workers 2]
+        [--mesh single|multi|both] [--only arch1,arch2] [--shapes a,b]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+from repro.configs import ALIASES, INPUT_SHAPES
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+           os.environ.get("REPRO_DRYRUN_DIR", "dryrun"))
+
+
+def run_one(arch: str, shape: str, multi: bool, timeout: int = 3600) -> dict:
+    mesh = "2x16x16" if multi else "16x16"
+    os.makedirs(RESULTS, exist_ok=True)
+    slug = f"{arch.replace('.', '_').replace('/', '_')}__{shape}__{mesh}"
+    out_json = os.path.join(RESULTS, slug + ".json")
+    if os.path.exists(out_json):
+        with open(out_json) as f:
+            prior = json.load(f)
+        if prior.get("status") in ("ok", "skip"):
+            return prior
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--json", out_json]
+    if multi:
+        cmd.append("--multi-pod")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    t0 = time.time()
+    try:
+        proc = subprocess.run(cmd, capture_output=True, text=True,
+                              timeout=timeout, env=env)
+    except subprocess.TimeoutExpired:
+        res = {"arch": arch, "shape": shape, "mesh": mesh,
+               "status": "timeout", "wall_s": timeout}
+        with open(out_json, "w") as f:
+            json.dump(res, f, indent=1)
+        return res
+    if proc.returncode != 0 or not os.path.exists(out_json):
+        res = {"arch": arch, "shape": shape, "mesh": mesh, "status": "error",
+               "wall_s": round(time.time() - t0, 1),
+               "stderr_tail": proc.stderr[-4000:]}
+        with open(out_json, "w") as f:
+            json.dump(res, f, indent=1)
+        return res
+    with open(out_json) as f:
+        res = json.load(f)
+    res["wall_s"] = round(time.time() - t0, 1)
+    with open(out_json, "w") as f:
+        json.dump(res, f, indent=1)
+    return res
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--shapes", default=None)
+    args = ap.parse_args(argv)
+    archs = sorted(ALIASES) if not args.only else args.only.split(",")
+    shapes = sorted(INPUT_SHAPES) if not args.shapes else args.shapes.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    work = [(a, s, m) for m in meshes for a in archs for s in shapes]
+    print(f"[matrix] {len(work)} dry-runs, {args.workers} workers")
+    failures = 0
+    with ThreadPoolExecutor(args.workers) as ex:
+        futs = {ex.submit(run_one, a, s, m): (a, s, m) for a, s, m in work}
+        for fut in futs:
+            pass
+        done = 0
+        for fut, key in list(futs.items()):
+            res = fut.result()
+            done += 1
+            ok = res["status"] in ("ok", "skip")
+            failures += not ok
+            mark = "OK " if res["status"] == "ok" else (
+                "SKP" if res["status"] == "skip" else "ERR")
+            print(f"[{done:3d}/{len(work)}] {mark} {key[0]:24s} {key[1]:12s} "
+                  f"{'multi' if key[2] else 'single'}  {res.get('wall_s','?')}s")
+    print(f"[matrix] done, {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,37 @@
+"""Figure 3 — calibration quality: actual test error vs target delta for
+every method; the LTT guarantee requires the curve to track/undershoot the
+diagonal."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.core.probe import ProbeConfig
+
+DELTAS = (0.02, 0.05, 0.08, 0.1, 0.15, 0.2, 0.25, 0.3)
+
+
+def run() -> list:
+    train, cal, test = C.corpus()
+    rows = []
+    static = C.get_static(train, "supervised")
+    probe = C.get_probe(train, "supervised", ProbeConfig(d_phi=C.D_PHI))
+    for name, s_cal, s_te in [
+        ("static", static.scores(cal.phis, cal.mask),
+         static.scores(test.phis, test.mask)),
+        ("ttt-noqk", probe.scores(cal), probe.scores(test)),
+    ]:
+        for r in C.eval_rows(name, "supervised", s_cal, cal, s_te, test,
+                             deltas=DELTAS):
+            rows.append({**r, "within_budget": r["error"] <= r["delta"] + 0.03})
+    C.print_table("Fig 3: risk-control diagonal (error <= delta expected "
+                  "up to finite-sample noise)", rows,
+                  ["method", "delta", "error", "savings", "within_budget"])
+    C.save_rows("fig3_calibration", rows)
+    viol = [r for r in rows if not r["within_budget"]]
+    print(f"# diagonal violations (> delta + 0.03 slack): {len(viol)}/{len(rows)}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Microbenchmarks: wall-time per call for the hot primitives on this host
+(CPU; TPU numbers come from the roofline model).  Emits name,us_per_call."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import ttt
+from repro.core.probe import ProbeConfig, init_outer
+from repro.kernels import flash_decode, make_unroll_kernel, ttt_probe_scan
+
+
+def timeit(fn, *args, reps: int = 5) -> float:
+    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run() -> list:
+    rows = []
+    n, t, f = 16, 96, C.D_PHI
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    phis = jax.random.normal(ks[0], (n, t, f))
+    mask = jnp.ones((n, t))
+    pc = ProbeConfig(d_phi=f)
+    theta = init_outer(pc, jax.random.PRNGKey(1))
+
+    us = timeit(lambda: ttt.deployed_scores(pc, theta, phis, mask))
+    rows.append({"name": f"ttt_unroll_scan(core) n{n}xT{t}xf{f}",
+                 "us_per_call": us, "derived": f"{n*t/us:.2f} steps/us"})
+    kern = make_unroll_kernel(t_chunk=32)
+    us = timeit(lambda: ttt.deployed_scores(pc, theta, phis, mask, kernel=kern))
+    rows.append({"name": f"ttt_unroll_pallas(interp) n{n}xT{t}xf{f}",
+                 "us_per_call": us, "derived": "interpret-mode (CPU)"})
+
+    b, h, kv, s, d = 2, 8, 8, 2048, 64
+    q = jax.random.normal(ks[1], (b, h, d))
+    k = jax.random.normal(ks[2], (b, kv, s, d))
+    v = jax.random.normal(ks[3], (b, kv, s, d))
+    valid = jnp.ones((b, s), bool)
+    from repro.kernels import ref as R
+    us = timeit(lambda: R.flash_decode_ref(q, k, v, valid))
+    rows.append({"name": f"decode_attn_ref b{b}h{h}s{s}", "us_per_call": us,
+                 "derived": f"{2*b*h*s*d*2/us/1e6:.2f} GFLOP/s"})
+
+    C.print_table("Microbenchmarks (host CPU)", rows,
+                  ["name", "us_per_call", "derived"])
+    C.save_rows("microbench", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

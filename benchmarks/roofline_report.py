@@ -1,0 +1,55 @@
+"""Roofline table: aggregate results/dryrun/*.json into the per-(arch x
+shape x mesh) three-term report (deliverable g)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks import common as C
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_all() -> list:
+    out = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def run() -> list:
+    rows = []
+    for d in load_all():
+        base = {"arch": d.get("arch"), "shape": d.get("shape"),
+                "mesh": d.get("mesh"), "status": d.get("status")}
+        r = d.get("roofline")
+        if r:
+            base.update({
+                "t_compute_s": r["t_compute"], "t_memory_s": r["t_memory"],
+                "t_collective_s": r["t_collective"], "dominant": r["dominant"],
+                "model_flops": r["model_flops"],
+                "flops_ratio": r["flops_ratio"],
+                "coll_GB": r["collective_bytes"] / 1e9,
+                "mem_per_dev_GB": (r.get("per_device_memory_bytes") or 0) / 1e9,
+            })
+        if d.get("status") == "skip":
+            base["dominant"] = d.get("reason", "")[:40]
+        rows.append(base)
+    rows.sort(key=lambda r: (r["mesh"] or "", r["arch"] or "", r["shape"] or ""))
+    C.print_table("Roofline: per (arch x shape x mesh) terms from the "
+                  "dry-run (seconds per step)", rows,
+                  ["mesh", "arch", "shape", "status", "dominant",
+                   "t_compute_s", "t_memory_s", "t_collective_s",
+                   "flops_ratio", "coll_GB", "mem_per_dev_GB"])
+    C.save_rows("roofline_report", rows)
+    ok = sum(1 for r in rows if r["status"] == "ok")
+    skip = sum(1 for r in rows if r["status"] == "skip")
+    err = sum(1 for r in rows if r["status"] not in ("ok", "skip"))
+    print(f"# dry-run matrix: {ok} ok, {skip} documented skips, {err} errors")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""Benchmark harness: one entry per paper table/figure + roofline + micro.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table2,fig3]
+    REPRO_BENCH_QUICK=1 shrinks corpora/epochs for CI.
+
+Each table prints CSV rows and persists json under results/.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import time
+import traceback
+
+TABLES = [
+    ("table2", "benchmarks.table2_indist"),
+    ("table3", "benchmarks.table3_ood"),
+    ("table4", "benchmarks.table4_crossmodel"),
+    ("table5", "benchmarks.table5_ablation"),
+    ("table7", "benchmarks.table7_variants"),
+    ("table9", "benchmarks.table9_token_savings"),
+    ("table10", "benchmarks.table10_epochs"),
+    ("fig3", "benchmarks.fig3_calibration"),
+    ("fig4", "benchmarks.fig4_distribution"),
+    ("fig5", "benchmarks.fig5_trajectory"),
+    ("roofline", "benchmarks.roofline_report"),
+    ("micro", "benchmarks.microbench"),
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list from: " + ",".join(k for k, _ in TABLES))
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+    failures = 0
+    for key, mod_name in TABLES:
+        if only and key not in only:
+            continue
+        t0 = time.time()
+        try:
+            importlib.import_module(mod_name).run()
+            print(f"# {key} done in {time.time()-t0:.1f}s")
+        except Exception:
+            failures += 1
+            print(f"# {key} FAILED:")
+            traceback.print_exc()
+    return failures
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,36 @@
+"""Table 10 — epoch selection: validation savings across meta-epochs for
+no-QK vs QK (paper: no-QK stable, QK peaks early and overfits)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.core.probe import ProbeConfig
+
+
+def run() -> list:
+    train, _, _ = C.corpus()
+    rows = []
+    for name, pc in [
+        ("noqk", ProbeConfig(d_phi=C.D_PHI)),
+        ("qk128", ProbeConfig(d_phi=C.D_PHI, variant="qk",
+                              d_h=min(128, C.D_PHI))),
+    ]:
+        probe = C.get_probe(train, "supervised", pc, tag=f"ep-{name}")
+        for h in probe.history:
+            if "val_savings" in h:
+                rows.append({"probe": name, "epoch": h["epoch"],
+                             "val_savings": h["val_savings"],
+                             "val_error": h.get("val_error", float("nan")),
+                             "loss": h["loss"]})
+    # print a decimated view
+    shown = [r for r in rows if r["epoch"] % 5 == 0 or r["epoch"] == 1]
+    C.print_table("Table 10: savings vs meta-epoch (epoch selection per "
+                  "paper §C.4)", shown,
+                  ["probe", "epoch", "val_savings", "val_error", "loss"])
+    C.save_rows("table10_epochs", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

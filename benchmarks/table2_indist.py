@@ -1,0 +1,33 @@
+"""Table 2 — in-distribution early-stopping: savings/error across risk
+levels, supervised + consistent labels, TTT (no-QK, QK) vs static probe."""
+from __future__ import annotations
+
+from benchmarks import common as C
+from repro.core.probe import ProbeConfig
+
+
+def run() -> list:
+    train, cal, test = C.corpus()
+    rows = []
+    for mode in ("supervised", "consistent"):
+        static = C.get_static(train, mode)
+        rows += C.eval_rows("static", mode,
+                            static.scores(cal.phis, cal.mask), cal,
+                            static.scores(test.phis, test.mask), test)
+        for name, pc in [
+            ("ttt-noqk", ProbeConfig(d_phi=C.D_PHI)),
+            ("ttt-qk128", ProbeConfig(d_phi=C.D_PHI, variant="qk",
+                                      d_h=min(128, C.D_PHI))),
+        ]:
+            probe = C.get_probe(train, mode, pc)
+            rows += C.eval_rows(name, mode, probe.scores(cal), cal,
+                                probe.scores(test), test)
+    C.print_table("Table 2: in-distribution (paper: TTT no-QK .475 vs "
+                  "static .380 @ delta=0.1 supervised)", rows,
+                  ["method", "mode", "delta", "savings", "error", "lambda"])
+    C.save_rows("table2_indist", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,70 @@
+"""Table 5 — core mechanism ablation (supervised, delta=0.1):
+
+  full TTT (meta-learn + online updates)      <- the method
+  standard supervised training, no updates    <- same arch, no TTT
+  random init + online updates                <- no meta-training
+  random init, no updates                     <- neither
+  static probe (PCA + logreg)                 <- baseline
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import ttt
+from repro.core.probe import ProbeConfig, init_outer, smooth_scores
+from repro.core.pipeline import evaluate_probe
+
+import jax.numpy as jnp
+
+
+def _scores(pc, theta, ts):
+    s = ttt.deployed_scores(pc, theta, jnp.asarray(ts.phis),
+                            jnp.asarray(ts.mask))
+    return np.asarray(s) * ts.mask
+
+
+def run() -> list:
+    train, cal, test = C.corpus()
+    mode = "supervised"
+    rows = []
+
+    def add(name, pc, theta):
+        ev = evaluate_probe(_scores(pc, theta, cal), cal,
+                            _scores(pc, theta, test), test, mode, (0.1,))
+        rows.append({"config": name, **ev.results[0].row()})
+
+    # full TTT (meta-learned, online updates at inference)
+    pc = ProbeConfig(d_phi=C.D_PHI)
+    probe = C.get_probe(train, mode, pc)
+    add("full-ttt(noqk)", pc, probe.theta)
+    # standard training: same architecture trained with eta=0 (no unroll
+    # dynamics) and deployed without online updates
+    pc_std = ProbeConfig(d_phi=C.D_PHI, eta=0.0)
+    probe_std = C.get_probe(train, mode, pc_std, tag="standard")
+    add("standard(noqk)", pc_std, probe_std.theta)
+    # meta-learned but deployed WITHOUT updates (isolates the online part)
+    add("meta-no-update", pc_std, probe.theta)
+    # no meta-training: random init + online updates
+    theta0 = init_outer(pc, jax.random.PRNGKey(123))
+    add("no-meta*", pc, theta0)
+    # neither
+    add("no-meta-no-update*", pc_std, theta0)
+    # static baseline
+    static = C.get_static(train, mode)
+    ev = evaluate_probe(static.scores(cal.phis, cal.mask), cal,
+                        static.scores(test.phis, test.mask), test, mode, (0.1,))
+    rows.append({"config": "static(PCA+logreg)", **ev.results[0].row()})
+
+    C.print_table("Table 5: mechanism ablation @ delta=0.1 (paper: full TTT "
+                  ".475 > standard .239, no-meta .254, static .380)", rows,
+                  ["config", "savings", "error", "lambda"])
+    C.save_rows("table5_ablation", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

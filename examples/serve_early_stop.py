@@ -1,0 +1,29 @@
+"""End-to-end serving driver (deliverable b): serve batched requests through
+a real model from the zoo with ORCA risk-controlled early stopping.
+
+    PYTHONPATH=src python examples/serve_early_stop.py [--arch smollm-360m]
+
+Pipeline: harvest calibration trajectories from the model itself
+(consistency labels — no ground truth needed), meta-train the probe,
+LTT-calibrate lambda*, then serve new requests with the fused
+decode+probe+stopping step (repro.serving.make_serve_step).
+"""
+import argparse
+
+from repro.launch import serve as serve_driver
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    args = ap.parse_args()
+    serve_driver.main([
+        "--arch", args.arch, "--reduced",
+        "--requests", "4", "--prompt-len", "16",
+        "--max-new-tokens", "96", "--tokens-per-step", "8",
+        "--train-trajectories", "24", "--delta", "0.25", "--epochs", "8",
+    ])
+
+
+if __name__ == "__main__":
+    main()

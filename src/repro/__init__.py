@@ -1,0 +1,10 @@
+"""repro — ORCA (Online Reasoning Calibration) reproduced as a production
+JAX training/serving framework.
+
+Layers: repro.core (the paper's contribution), repro.models (architecture
+zoo), repro.kernels (Pallas TPU kernels), repro.data / repro.trajectories /
+repro.optim / repro.checkpoint / repro.serving (substrates),
+repro.launch (meshes, dry-run, drivers), repro.roofline (perf analysis).
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,89 @@
+"""Pytree checkpointing: flattened-key npz + json metadata, atomic writes.
+
+Layout: <dir>/step_<N>/arrays.npz + meta.json.  Restoration matches by
+flattened key path against a template pytree (shape/dtype checked), so
+params / optimizer states / probe states all round-trip.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+_SEP = "//"
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_fmt(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _fmt(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    return str(p)
+
+
+def save_pytree(tree, directory: str, step: Optional[int] = None,
+                meta: Optional[Dict[str, Any]] = None) -> str:
+    sub = f"step_{step}" if step is not None else "final"
+    target = os.path.join(directory, sub)
+    tmp = tempfile.mkdtemp(dir=directory if os.path.isdir(directory)
+                           else None, prefix=".ckpt_tmp_")
+    try:
+        os.makedirs(directory, exist_ok=True)
+        flat = _flatten(tree)
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump({"step": step, **(meta or {})}, f)
+        if os.path.isdir(target):
+            shutil.rmtree(target)
+        os.replace(tmp, target)           # atomic publish
+    except Exception:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return target
+
+
+def load_pytree(path: str) -> Dict[str, np.ndarray]:
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        return {k: z[k] for k in z.files}
+
+
+def restore(template, path: str):
+    """Restore arrays into the structure of ``template`` (strict match)."""
+    flat = load_pytree(path)
+    leaves_paths = jax.tree_util.tree_flatten_with_path(template)
+    out_leaves = []
+    for pth, leaf in leaves_paths[0]:
+        key = _SEP.join(_fmt(p) for p in pth)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = flat[key]
+        want = getattr(leaf, "shape", None)
+        if want is not None and tuple(arr.shape) != tuple(want):
+            raise ValueError(f"{key}: shape {arr.shape} != template {want}")
+        out_leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(leaves_paths[1], out_leaves)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m:
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None

@@ -1,0 +1,8 @@
+from repro.configs.base import (ALIASES, ARCH_IDS, INPUT_SHAPES, InputShape,
+                                ModelConfig, MoEConfig, SSMConfig,
+                                VisionStubConfig, all_configs, get_config)
+
+__all__ = [
+    "ALIASES", "ARCH_IDS", "INPUT_SHAPES", "InputShape", "ModelConfig",
+    "MoEConfig", "SSMConfig", "VisionStubConfig", "all_configs", "get_config",
+]

@@ -1,0 +1,155 @@
+"""End-to-end ORCA pipeline: meta-train -> LTT-calibrate -> evaluate.
+
+This is the high-level API the examples and benchmark tables are written
+against.  It consumes ``TrajectorySet``s (synthetic or extracted from a real
+model by the serving engine) and produces the paper's (savings, error)
+metrics for the TTT probe and the static baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import calibration as C
+from repro.core import labels as L
+from repro.core import stopping as S
+from repro.core import ttt
+from repro.core.probe import ProbeConfig, init_outer
+from repro.core.static_probe import fit_static_probe
+from repro.optim import Adam
+from repro.trajectories import TrajectorySet
+
+
+def make_labels(ts: TrajectorySet, mode: str) -> np.ndarray:
+    if mode == "supervised":
+        return L.supervised_labels(ts.correct, ts.mask)
+    if mode == "consistent":
+        return L.consistent_labels(ts.answers, ts.mask)
+    raise ValueError(mode)
+
+
+@dataclasses.dataclass
+class TrainedProbe:
+    pc: ProbeConfig
+    theta: Dict[str, jnp.ndarray]
+    history: List[Dict[str, float]]
+
+    def scores(self, ts: TrajectorySet, kernel=None) -> np.ndarray:
+        s = ttt.deployed_scores(self.pc, self.theta,
+                                jnp.asarray(ts.phis), jnp.asarray(ts.mask),
+                                kernel=kernel)
+        return np.asarray(s) * ts.mask
+
+
+def train_ttt_probe(train: TrajectorySet, mode: str, pc: ProbeConfig,
+                    *, epochs: int = 40, batch_size: int = 64,
+                    outer_lr: float = 1e-2, seed: int = 0,
+                    epoch_select: bool = True, select_delta: float = 0.1,
+                    verbose: bool = False) -> TrainedProbe:
+    """Meta-train the TTT probe (Algorithm 1) with the paper's epoch-selection
+    protocol (§C.4 / Table 10): every epoch, the deployed procedure is scored
+    on a held-out validation slice of the TRAIN split and the epoch with the
+    best LTT-calibrated savings at ``select_delta`` is kept.  This is what
+    keeps the meta-learned probe out of the saturated over-trained regime
+    (the QK variant "peaks early and overfits" — Table 10).
+
+    NOTE: the paper meta-trains per-prompt (outer lr 1e-3, 20 epochs x 3000
+    prompts = 60K updates); we train with batched outer steps, so the
+    equivalent regime is fewer, larger steps at a higher lr (DESIGN.md §7).
+    """
+    labels_all = make_labels(train, mode)
+    if epoch_select:
+        n = len(train)
+        n_val = max(8, n // 10)
+        rs = np.random.RandomState(seed)
+        order = rs.permutation(n)
+        val_idx, tr_idx = order[:n_val], order[n_val:]
+        val, tr = train.subset(val_idx), train.subset(tr_idx)
+        labels = labels_all[tr_idx]
+        val_labels = labels_all[val_idx]
+    else:
+        tr, labels, val = train, labels_all, None
+    theta = init_outer(pc, jax.random.PRNGKey(seed))
+    opt = Adam(lr=outer_lr, clip_norm=1.0)
+
+    best = {"savings": -1.0, "theta": theta, "epoch": 0}
+
+    def eval_fn(th):
+        if val is None:
+            return {}
+        s = np.asarray(ttt.deployed_scores(pc, th, jnp.asarray(val.phis),
+                                           jnp.asarray(val.mask))) * val.mask
+        r = S.calibrate_and_evaluate(s, val_labels, val.mask,
+                                     s, val_labels, val.mask,
+                                     delta=select_delta)
+        if r.savings > best["savings"]:
+            best.update(savings=r.savings, theta=jax.tree.map(lambda x: x, th))
+        return {"val_savings": r.savings, "val_error": r.error}
+
+    theta, hist = ttt.meta_train(
+        pc, theta, opt, jnp.asarray(tr.phis), jnp.asarray(labels),
+        jnp.asarray(tr.mask), epochs=epochs, batch_size=batch_size,
+        rng=jax.random.PRNGKey(seed + 1), verbose=verbose,
+        eval_fn=eval_fn if epoch_select else None)
+    if epoch_select and best["savings"] >= 0:
+        theta = best["theta"]
+    return TrainedProbe(pc, theta, hist)
+
+
+@dataclasses.dataclass
+class ProcedureEval:
+    method: str
+    mode: str
+    results: List[S.EvalResult]
+
+    def at(self, delta: float) -> S.EvalResult:
+        for r in self.results:
+            if abs(r.delta - delta) < 1e-9:
+                return r
+        raise KeyError(delta)
+
+
+def evaluate_probe(scores_cal: np.ndarray, cal: TrajectorySet,
+                   scores_test: np.ndarray, test: TrajectorySet,
+                   mode: str, deltas: Sequence[float],
+                   eps: float = 0.05, method: str = "ttt") -> ProcedureEval:
+    """Calibrate on ``cal`` (labels in the SAME mode the probe was trained
+    with — label-free deployment for the consistent mode) and evaluate risk
+    against supervised ground truth on ``test`` (what the paper reports)."""
+    lab_cal = make_labels(cal, mode)
+    lab_test = L.supervised_labels(test.correct, test.mask)
+    results = S.sweep_deltas(
+        (scores_cal, lab_cal, cal.mask),
+        (scores_test, lab_test, test.mask),
+        deltas, eps=eps)
+    return ProcedureEval(method, mode, results)
+
+
+def run_orca(train: TrajectorySet, cal: TrajectorySet, test: TrajectorySet,
+             *, mode: str = "supervised", pc: Optional[ProbeConfig] = None,
+             deltas: Sequence[float] = (0.05, 0.1, 0.15, 0.2),
+             epochs: int = 40, eps: float = 0.05, seed: int = 0,
+             include_static: bool = True, verbose: bool = False
+             ) -> Dict[str, ProcedureEval]:
+    """The full paper pipeline on one corpus; returns {"ttt": ..., "static": ...}."""
+    d_phi = train.phis.shape[-1]
+    pc = pc or ProbeConfig(d_phi=d_phi)
+    probe = train_ttt_probe(train, mode, pc, epochs=epochs, seed=seed,
+                            verbose=verbose)
+    out: Dict[str, ProcedureEval] = {}
+    out["ttt"] = evaluate_probe(probe.scores(cal), cal, probe.scores(test),
+                                test, mode, deltas, eps=eps, method="ttt")
+    out["_probe"] = probe  # type: ignore
+    if include_static:
+        static = fit_static_probe(train.phis, make_labels(train, mode),
+                                  train.mask)
+        out["static"] = evaluate_probe(
+            static.scores(cal.phis, cal.mask), cal,
+            static.scores(test.phis, test.mask), test,
+            mode, deltas, eps=eps, method="static")
+        out["_static"] = static  # type: ignore
+    return out

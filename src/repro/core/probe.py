@@ -1,0 +1,136 @@
+"""ORCA probe: architecture variants of the calibration scorer.
+
+The probe scores a reasoning-step embedding phi_t in R^{d_phi}:
+
+    s_t = sigma( W . z_Q(phi_t) + b )          (score view)
+    l_t = ( sigma( W . z_K(phi_t) + b ) - C_t )^2   (update view, Brier)
+
+Fast weights (W, b) are updated online at inference (repro.core.ttt); the
+feature maps z_Q / z_K and the initialization (W0, b0, eta) are slow weights
+meta-learned in the outer loop.
+
+Variants (paper Section 3.3 + Table 6):
+  * no-QK        — z = phi (online-adaptive logistic regression, d_phi+1 params)
+  * QK           — z_Q = theta_Q phi, z_K = theta_K phi, d_h-dim subspace
+  * +layernorm   — LayerNorm on the projected features
+  * +residual    — z = LN(proj) + proj
+  * +shared QK   — theta_K == theta_Q
+  * +mlp         — one hidden GELU layer on the projection
+  * learnable eta — inner lr trained in the outer loop (log-parameterized)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbeConfig:
+    d_phi: int
+    variant: str = "noqk"        # noqk | qk
+    d_h: int = 128
+    layernorm: bool = False
+    residual: bool = False
+    shared_qk: bool = False
+    mlp: bool = False
+    learnable_eta: bool = False
+    eta: float = 0.01            # inner learning rate (init if learnable)
+    inner_label_mode: str = "zero"   # zero (inference-consistent) | true
+    bptt_truncation: int = 0     # 0 = full backprop through the unroll
+    smooth_window: int = 10      # rolling-mean smoothing of the score traj
+
+    @property
+    def feat_dim(self) -> int:
+        return self.d_phi if self.variant == "noqk" else self.d_h
+
+
+def init_outer(pc: ProbeConfig, rng) -> Dict[str, jnp.ndarray]:
+    """Slow weights Theta_outer = (theta_{Q,K}, W0, b0, [eta])."""
+    keys = jax.random.split(rng, 8)
+    d = pc.feat_dim
+    theta: Dict[str, jnp.ndarray] = {
+        "W0": jax.random.normal(keys[0], (d,), jnp.float32) / math.sqrt(d),
+        "b0": jnp.zeros((), jnp.float32),
+    }
+    if pc.variant == "qk":
+        scale = 1.0 / math.sqrt(pc.d_phi)
+        theta["theta_q"] = jax.random.normal(keys[1], (pc.d_phi, pc.d_h)) * scale
+        if not pc.shared_qk:
+            theta["theta_k"] = jax.random.normal(keys[2], (pc.d_phi, pc.d_h)) * scale
+        if pc.layernorm:
+            theta["ln_scale"] = jnp.ones((pc.d_h,))
+            theta["ln_bias"] = jnp.zeros((pc.d_h,))
+        if pc.mlp:
+            theta["mlp_w"] = jax.random.normal(keys[3], (pc.d_h, pc.d_h)) / math.sqrt(pc.d_h)
+            theta["mlp_b"] = jnp.zeros((pc.d_h,))
+    if pc.learnable_eta:
+        theta["log_eta"] = jnp.asarray(math.log(pc.eta), jnp.float32)
+    return theta
+
+
+def inner_lr(pc: ProbeConfig, theta) -> jnp.ndarray:
+    if pc.learnable_eta:
+        return jnp.exp(theta["log_eta"])
+    return jnp.asarray(pc.eta, jnp.float32)
+
+
+def _maybe_ln(pc: ProbeConfig, theta, z):
+    if not pc.layernorm:
+        return z
+    mu = jnp.mean(z, -1, keepdims=True)
+    var = jnp.var(z, -1, keepdims=True)
+    zn = (z - mu) * jax.lax.rsqrt(var + 1e-6)
+    return zn * theta["ln_scale"] + theta["ln_bias"]
+
+
+def features(pc: ProbeConfig, theta, phi) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """phi (..., d_phi) -> (z_Q, z_K), each (..., feat_dim)."""
+    phi = phi.astype(jnp.float32)
+    if pc.variant == "noqk":
+        return phi, phi
+    zq = phi @ theta["theta_q"]
+    zk = zq if pc.shared_qk else phi @ theta.get("theta_k", theta["theta_q"])
+    if pc.layernorm or pc.residual:
+        zq_n = _maybe_ln(pc, theta, zq)
+        zk_n = _maybe_ln(pc, theta, zk)
+        if pc.residual:
+            zq, zk = zq_n + zq, zk_n + zk
+        else:
+            zq, zk = zq_n, zk_n
+    if pc.mlp:
+        zq = jax.nn.gelu(zq @ theta["mlp_w"] + theta["mlp_b"])
+        zk = jax.nn.gelu(zk @ theta["mlp_w"] + theta["mlp_b"])
+    return zq, zk
+
+
+def score(fast: Tuple[jnp.ndarray, jnp.ndarray], z) -> jnp.ndarray:
+    """fast = (W, b); z (..., feat) -> sigma(W.z + b)."""
+    W, b = fast
+    return jax.nn.sigmoid(z @ W + b)
+
+
+def brier_grad(fast, z, c) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Analytic gradient of (sigma(W.z+b) - c)^2 wrt (W, b)."""
+    s = score(fast, z)
+    coeff = 2.0 * (s - c) * s * (1.0 - s)
+    return coeff * z, coeff
+
+
+def fast_init(pc: ProbeConfig, theta) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    return theta["W0"], theta["b0"]
+
+
+def smooth_scores(scores: jnp.ndarray, window: int) -> jnp.ndarray:
+    """Causal rolling mean over the step axis (last axis)."""
+    if window <= 1:
+        return scores
+    c = jnp.cumsum(scores, axis=-1)
+    shifted = jnp.concatenate(
+        [jnp.zeros_like(c[..., :window]), c[..., :-window]], axis=-1)
+    t = jnp.arange(scores.shape[-1])
+    denom = jnp.minimum(t + 1, window).astype(scores.dtype)
+    return (c - shifted) / denom

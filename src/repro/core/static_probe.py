@@ -1,0 +1,83 @@
+"""Static linear probe baseline (Wu et al., 2025): PCA + logistic regression.
+
+Built from scratch (no sklearn): PCA via SVD of the centered step-embedding
+matrix; logistic regression trained full-batch with Adam.  At inference the
+probe applies a single forward pass per step (no online adaptation), followed
+by the same rolling-window smoothing as the TTT probe, and is calibrated with
+the same LTT procedure — this is the paper's "Static Probe" row.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.probe import smooth_scores
+from repro.optim import Adam
+
+
+@dataclasses.dataclass
+class StaticProbe:
+    mean: np.ndarray          # (d,)
+    components: np.ndarray    # (d, k)
+    w: np.ndarray             # (k,)
+    b: float
+    smooth_window: int = 10
+
+    def scores(self, phis: np.ndarray, mask: Optional[np.ndarray] = None
+               ) -> np.ndarray:
+        """phis (N, T, d) -> smoothed scores (N, T)."""
+        z = (phis - self.mean) @ self.components
+        s = 1.0 / (1.0 + np.exp(-(z @ self.w + self.b)))
+        s = np.asarray(smooth_scores(jnp.asarray(s), self.smooth_window))
+        if mask is not None:
+            s = s * mask
+        return s
+
+
+def fit_pca(x: np.ndarray, k: int) -> Tuple[np.ndarray, np.ndarray]:
+    mean = x.mean(axis=0)
+    xc = x - mean
+    # economical SVD on (n, d)
+    _, _, vt = np.linalg.svd(xc, full_matrices=False)
+    return mean, vt[:k].T.astype(np.float64)
+
+
+def fit_static_probe(phis: np.ndarray, labels: np.ndarray,
+                     mask: Optional[np.ndarray] = None, *, n_components: int = 64,
+                     epochs: int = 200, lr: float = 1e-2,
+                     smooth_window: int = 10, seed: int = 0) -> StaticProbe:
+    """phis (N, T, d), labels (N, T) -> fitted PCA+LogReg probe."""
+    n, t, d = phis.shape
+    flat = phis.reshape(n * t, d).astype(np.float64)
+    y = labels.reshape(n * t).astype(np.float64)
+    if mask is not None:
+        keep = np.asarray(mask, bool).reshape(n * t)
+        flat, y = flat[keep], y[keep]
+    k = min(n_components, d, flat.shape[0])
+    mean, comps = fit_pca(flat, k)
+    z = jnp.asarray((flat - mean) @ comps, jnp.float32)
+    yj = jnp.asarray(y, jnp.float32)
+
+    params = {"w": jnp.zeros((k,), jnp.float32), "b": jnp.zeros((), jnp.float32)}
+    opt = Adam(lr=lr, clip_norm=None)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state):
+        def loss_fn(p):
+            logit = z @ p["w"] + p["b"]
+            return jnp.mean(
+                jnp.maximum(logit, 0) - logit * yj + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        upd, state = opt.update(grads, state, params)
+        return jax.tree.map(lambda p, u: p + u, params, upd), state, loss
+
+    for _ in range(epochs):
+        params, state, _ = step(params, state)
+    return StaticProbe(mean=mean, components=comps,
+                       w=np.asarray(params["w"], np.float64),
+                       b=float(params["b"]), smooth_window=smooth_window)

@@ -1,0 +1,155 @@
+"""TTT inner/outer loops (paper Section 3.2-3.3, Algorithm 1).
+
+Inner loop (per reasoning trajectory, *score-then-update*):
+    s_t  = sigma(W_{t-1} . z_Q(phi_t) + b_{t-1})
+    l    = (sigma(W_{t-1} . z_K(phi_t) + b_{t-1}) - C_t)^2
+    W_t  = W_{t-1} - eta * grad_W l           (online gradient descent)
+
+At inference C_t = 0 for every non-stopping step (self-supervised novelty
+detector, Appendix B).  In meta-training the inner labels follow
+``inner_label_mode``: "zero" keeps training == inference dynamics (default),
+"true" uses the trajectory labels as in Eq. (6).
+
+Outer loop (Algorithm 1): unroll the inner updates along the trajectory and
+minimize sum_t (s_t - C_t^true)^2 through the unroll (optionally truncated
+BPTT), training Theta_outer = (theta_QK, W0, b0, [eta]).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import probe as P
+from repro.core.probe import ProbeConfig
+
+
+class UnrollOut(NamedTuple):
+    scores: jnp.ndarray          # raw (unsmoothed) probe scores, (T,)
+    fast_final: Tuple[jnp.ndarray, jnp.ndarray]
+
+
+def inner_unroll(pc: ProbeConfig, theta, phis: jnp.ndarray,
+                 inner_labels: Optional[jnp.ndarray] = None,
+                 mask: Optional[jnp.ndarray] = None,
+                 kernel: Optional[Callable] = None) -> UnrollOut:
+    """Unroll the TTT inner loop over one trajectory.
+
+    phis: (T, d_phi); inner_labels: (T,) or None (=> all zeros, inference
+    mode); mask: (T,) validity for padded trajectories.  ``kernel`` optionally
+    swaps the step loop for the fused Pallas implementation.
+    """
+    T = phis.shape[0]
+    eta = P.inner_lr(pc, theta)
+    zq, zk = P.features(pc, theta, phis)              # (T, f)
+    c = jnp.zeros((T,), jnp.float32) if inner_labels is None else inner_labels
+    m = jnp.ones((T,), jnp.float32) if mask is None else mask.astype(jnp.float32)
+    if kernel is not None:
+        scores, W_f, b_f = kernel(zq, zk, c, m, theta["W0"], theta["b0"], eta)
+        return UnrollOut(scores, (W_f, b_f))
+
+    trunc = pc.bptt_truncation
+
+    def step(fast, xs):
+        zq_t, zk_t, c_t, m_t, t = xs
+        s_t = P.score(fast, zq_t)
+        gW, gb = P.brier_grad(fast, zk_t, c_t)
+        W, b = fast
+        W_new = W - eta * m_t * gW
+        b_new = b - eta * m_t * gb
+        if trunc > 0:
+            cut = (t % trunc) == 0
+            W_new = jnp.where(cut, jax.lax.stop_gradient(W_new), W_new)
+            b_new = jnp.where(cut, jax.lax.stop_gradient(b_new), b_new)
+        return (W_new, b_new), s_t
+
+    fast0 = P.fast_init(pc, theta)
+    xs = (zq, zk, c, m, jnp.arange(T))
+    fast_T, scores = jax.lax.scan(step, fast0, xs)
+    return UnrollOut(scores, fast_T)
+
+
+def batched_unroll(pc: ProbeConfig, theta, phis, inner_labels=None, mask=None,
+                   kernel: Optional[Callable] = None):
+    """phis (N, T, d_phi) -> scores (N, T)."""
+    fn = lambda p, c, m: inner_unroll(pc, theta, p, c, m, kernel=kernel).scores
+    c = (jnp.zeros(phis.shape[:2], jnp.float32)
+         if inner_labels is None else inner_labels)
+    m = jnp.ones(phis.shape[:2], jnp.float32) if mask is None else mask
+    return jax.vmap(fn)(phis, c, m)
+
+
+# ---------------------------------------------------------------------------
+# Outer (meta) objective — Algorithm 1
+
+def outer_loss(pc: ProbeConfig, theta, phis, labels, mask=None) -> jnp.ndarray:
+    """Mean over problems of sum_t m_t (s_t - C_t^true)^2.
+
+    phis (N,T,d); labels (N,T) in {0,1}; mask (N,T).
+    Inner updates use zeros ("zero" mode) or the true labels ("true" mode).
+    """
+    inner = None if pc.inner_label_mode == "zero" else labels
+    scores = batched_unroll(pc, theta, phis, inner_labels=inner, mask=mask)
+    m = jnp.ones_like(scores) if mask is None else mask.astype(scores.dtype)
+    per_problem = jnp.sum(m * jnp.square(scores - labels), axis=-1)
+    return jnp.mean(per_problem)
+
+
+def make_outer_step(pc: ProbeConfig, optimizer) -> Callable:
+    """jit'd meta-training step: (theta, opt_state, batch) -> (theta', opt', loss)."""
+
+    @jax.jit
+    def step(theta, opt_state, phis, labels, mask):
+        loss, grads = jax.value_and_grad(
+            lambda th: outer_loss(pc, th, phis, labels, mask))(theta)
+        updates, opt_state = optimizer.update(grads, opt_state, theta)
+        theta = jax.tree.map(lambda p, u: p + u, theta, updates)
+        return theta, opt_state, loss
+
+    return step
+
+
+def meta_train(pc: ProbeConfig, theta, optimizer, phis, labels, mask,
+               *, epochs: int, batch_size: int, rng,
+               eval_fn: Optional[Callable] = None,
+               verbose: bool = False):
+    """Full outer-loop training (Algorithm 1). Returns (theta, history)."""
+    n = phis.shape[0]
+    opt_state = optimizer.init(theta)
+    step = make_outer_step(pc, optimizer)
+    history = []
+    for epoch in range(epochs):
+        rng, prm = jax.random.split(rng)
+        order = jax.random.permutation(prm, n)
+        losses = []
+        for i in range(0, n - batch_size + 1, batch_size):
+            idx = order[i:i + batch_size]
+            theta, opt_state, loss = step(theta, opt_state, phis[idx],
+                                          labels[idx], mask[idx])
+            losses.append(float(loss))
+        rec = {"epoch": epoch + 1, "loss": sum(losses) / max(len(losses), 1)}
+        if eval_fn is not None:
+            rec.update(eval_fn(theta))
+        history.append(rec)
+        if verbose:
+            print(f"[meta] epoch {rec['epoch']:3d} loss {rec['loss']:.4f}")
+    return theta, history
+
+
+# ---------------------------------------------------------------------------
+# Deployment-time score trajectories (the "deployed procedure" scores)
+
+def deployed_scores(pc: ProbeConfig, theta, phis, mask=None,
+                    kernel: Optional[Callable] = None) -> jnp.ndarray:
+    """Scores produced by the deployed procedure (C_t = 0 inner updates),
+    smoothed with the configured rolling window.  phis (N,T,d) -> (N,T).
+
+    Note updating past the stopping time does not change s_1..s_tau (updates
+    are causal and label-free), so one pass serves every threshold lambda —
+    this is what makes LTT calibration of the full adaptive procedure cheap.
+    """
+    raw = batched_unroll(pc, theta, phis, inner_labels=None, mask=mask,
+                         kernel=kernel)
+    return P.smooth_scores(raw, pc.smooth_window)

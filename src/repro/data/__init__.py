@@ -1,0 +1,3 @@
+from repro.data.tokens import TokenPipeline, TokenPipelineConfig, device_batch
+
+__all__ = ["TokenPipeline", "TokenPipelineConfig", "device_batch"]

@@ -1,0 +1,6 @@
+from repro.kernels.ops import (default_interpret, flash_attention,
+                               flash_decode, make_unroll_kernel, on_tpu,
+                               ttt_probe_scan, wkv_scan)
+
+__all__ = ["default_interpret", "flash_attention", "flash_decode",
+           "make_unroll_kernel", "on_tpu", "ttt_probe_scan", "wkv_scan"]

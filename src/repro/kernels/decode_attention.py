@@ -1,0 +1,84 @@
+"""Flash-decode — single-query attention over a long KV cache (Pallas TPU).
+
+One new token attends to a cache of S positions: grid = (B, KV, S/BS) with
+the sequence chunk innermost, online-softmax running stats in VMEM.  The
+whole GQA group (G = H/KV query heads) is processed per program so the KV
+block is read once per group (bandwidth-bound op — the roofline term this
+kernel optimizes).  A validity mask supports ring-buffer SWA caches and
+partially-filled caches.
+
+q (B, H, d); k, v (B, KV, S, d); valid (B, S) -> out (B, H, d)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, m_s, l_s, acc_s, *,
+            bs: int, n_s: int, g: int, scale: float):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0, 0, :, :] * scale                     # (G, d)
+    k = k_ref[0, 0, :, :]                             # (bs, d)
+    v = v_ref[0, 0, :, :]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # (G, bs)
+    ok = valid_ref[0, :][None, :]                     # (1, bs)
+    s = jnp.where(ok, s, NEG_INF)
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_s[...] = l_s[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_s[...] = acc_s[...] * corr + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+
+    @pl.when(si == n_s - 1)
+    def _fin():
+        o_ref[0, 0, :, :] = (acc_s[...] /
+                          jnp.maximum(l_s[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def flash_decode(q, k, v, valid, *, bs: int = 512, interpret: bool = True):
+    b, h, d = q.shape
+    _, n_kv, s_len, _ = k.shape
+    assert h % n_kv == 0
+    g = h // n_kv
+    bs = min(bs, s_len)
+    assert s_len % bs == 0, (s_len, bs)
+    scale = 1.0 / (d ** 0.5)
+    qg = q.reshape(b, n_kv, g, d)
+    kernel = functools.partial(_kernel, bs=bs, n_s=s_len // bs, g=g, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, n_kv, s_len // bs),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b_, kv, si: (b_, kv, 0, 0)),
+            pl.BlockSpec((1, 1, bs, d), lambda b_, kv, si: (b_, kv, si, 0)),
+            pl.BlockSpec((1, 1, bs, d), lambda b_, kv, si: (b_, kv, si, 0)),
+            pl.BlockSpec((1, bs), lambda b_, kv, si: (b_, si)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda b_, kv, si: (b_, kv, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n_kv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k, v, valid)
+    return out.reshape(b, h, d)

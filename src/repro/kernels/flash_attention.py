@@ -1,0 +1,93 @@
+"""Flash attention (prefill) — Pallas TPU kernel with BlockSpec VMEM tiling.
+
+Online-softmax blockwise attention for the prefill path: grid =
+(B, H, Sq/BQ, Sk/BK); the KV index is the innermost (sequential) grid dim so
+the (m, l, acc) running statistics live in VMEM scratch across KV blocks.
+GQA is handled by indexing the KV block with h // group_size.  Causal and
+sliding-window masks are applied with position iota; out-of-range blocks are
+masked (TPU grids are static).
+
+q (B, Sq, H, d) ; k, v (B, Sk, KV, d) -> out (B, Sq, H, d)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
+            bq: int, bk: int, n_k: int, causal: bool, window, scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0, :, 0, :] * scale                      # (bq, d)
+    k = k_ref[0, :, 0, :]                              # (bk, d)
+    v = v_ref[0, :, 0, :]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+    m_prev = m_s[...]                                  # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_s[...] = l_s[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_s[...] = acc_s[...] * corr + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _fin():
+        o_ref[0, :, 0, :] = (acc_s[...] /
+                             jnp.maximum(l_s[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    bq: int = 128, bk: int = 128, interpret: bool = True):
+    b, sq, h, d = q.shape
+    _, sk, n_kv, _ = k.shape
+    assert h % n_kv == 0
+    g = h // n_kv
+    bq = min(bq, sq)
+    bk = min(bk, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    scale = 1.0 / (d ** 0.5)
+    kernel = functools.partial(_kernel, bq=bq, bk=bk, n_k=sk // bk,
+                               causal=causal, window=window, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, sq // bq, sk // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, d), lambda b_, h_, qi, ki: (b_, qi, h_, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda b_, h_, qi, ki: (b_, ki, h_ // g, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda b_, h_, qi, ki: (b_, ki, h_ // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, d), lambda b_, h_, qi, ki: (b_, qi, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sq, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out

@@ -1,0 +1,27 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernel bodies execute in interpret mode, which is how correctness is
+validated here) and to False on TPU, where the Mosaic-compiled kernels are
+the production hot path.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ttt_probe import make_unroll_kernel, ttt_probe_scan
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.decode_attention import flash_decode
+from repro.kernels.rwkv6_scan import wkv_scan
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def default_interpret() -> bool:
+    return not on_tpu()
+
+
+__all__ = ["ttt_probe_scan", "make_unroll_kernel", "flash_attention",
+           "flash_decode", "wkv_scan", "on_tpu", "default_interpret"]

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These share code with the model/core reference paths on purpose: the model
+zoo and ORCA core are *defined* by these semantics; the kernels must match.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.probe import ProbeConfig
+from repro.core import ttt as _ttt
+from repro.models.attention import attn_prefill_einsum, _decode_core
+from repro.models import rwkv6 as _rwkv6
+
+
+def ttt_probe_ref(zq, zk, c, m, w0, b0, eta):
+    """Batched inner-loop unroll. zq/zk (N,T,f) -> scores (N,T), wf, bf."""
+    def one(zq1, zk1, c1, m1):
+        def step(fast, xs):
+            zq_t, zk_t, c_t, m_t = xs
+            w, b = fast
+            s_q = jax.nn.sigmoid(jnp.dot(zq_t, w) + b)
+            s_k = jax.nn.sigmoid(jnp.dot(zk_t, w) + b)
+            coeff = 2.0 * (s_k - c_t) * s_k * (1 - s_k) * m_t * eta
+            return (w - coeff * zk_t, b - coeff), s_q
+        (wf, bf), scores = jax.lax.scan(step, (w0, b0), (zq1, zk1, c1, m1))
+        return scores, wf, bf
+    return jax.vmap(one)(zq, zk, c, m)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    return attn_prefill_einsum(q, k, v, causal=causal, window=window)
+
+
+def flash_decode_ref(q, k, v, valid):
+    b, h, d = q.shape
+    n_kv = k.shape[1]
+    qg = q.reshape(b, n_kv, h // n_kv, d).astype(jnp.float32)
+    out = _decode_core(qg, k.astype(jnp.float32), v.astype(jnp.float32), valid)
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def wkv_scan_ref(r, k, v, w, u, s0):
+    return _rwkv6.wkv_scan(r, k, v, w, u, s0)

@@ -1,0 +1,88 @@
+"""RWKV6 WKV recurrence — chunked Pallas TPU kernel.
+
+Per head: S_t = diag(w_t) S_{t-1} + k_t v_t^T ; out_t = r_t (diag(u) k_t v_t^T
++ S_{t-1}).  The recurrence is sequential in T; the kernel streams
+(r, k, v, w) chunks HBM->VMEM with grid = (B, H, T/CT) and carries the
+(d, d) state in VMEM scratch across chunks of the same (batch, head) — the
+TPU-native adaptation of the GPU chunked linear-attention formulation
+(sequential grid instead of a block-parallel prefix scan; see DESIGN.md §3).
+Inside a chunk the per-step rank-1 update runs on the VPU/MXU out of VMEM.
+
+r,k,v,w: (B, T, H, d) f32 ; u: (H, d) ; s0: (B, H, d, d)
+-> out (B, T, H, d), s_final (B, H, d, d)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sf_ref, s_s, *,
+            ct: int, n_c: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_s[...] = s0_ref[0, 0]
+
+    u = u_ref[0]                                       # (d,)
+
+    def step(i, _):
+        r = r_ref[0, i, 0, :]                          # (d,)
+        k = k_ref[0, i, 0, :]
+        v = v_ref[0, i, 0, :]
+        w = w_ref[0, i, 0, :]
+        kv = k[:, None] * v[None, :]                   # (d, d)
+        att = u[:, None] * kv + s_s[...]
+        o_ref[0, i, 0, :] = jnp.dot(r, att, preferred_element_type=jnp.float32)
+        s_s[...] = w[:, None] * s_s[...] + kv
+        return 0
+
+    jax.lax.fori_loop(0, ct, step, 0)
+
+    @pl.when(ci == n_c - 1)
+    def _fin():
+        sf_ref[0, 0] = s_s[...]
+
+
+@functools.partial(jax.jit, static_argnames=("ct", "interpret"))
+def wkv_scan(r, k, v, w, u, s0, *, ct: int = 64, interpret: bool = True):
+    b, t, h, d = r.shape
+    ct = min(ct, t)
+    pad = (-t) % ct
+    if pad:
+        zeros = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zeros(r), zeros(k), zeros(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    t_pad = r.shape[1]
+    n_c = t_pad // ct
+    f32 = jnp.float32
+    kernel = functools.partial(_kernel, ct=ct, n_c=n_c)
+    out, sf = pl.pallas_call(
+        kernel,
+        grid=(b, h, n_c),
+        in_specs=[
+            pl.BlockSpec((1, ct, 1, d), lambda b_, h_, ci: (b_, ci, h_, 0)),
+            pl.BlockSpec((1, ct, 1, d), lambda b_, h_, ci: (b_, ci, h_, 0)),
+            pl.BlockSpec((1, ct, 1, d), lambda b_, h_, ci: (b_, ci, h_, 0)),
+            pl.BlockSpec((1, ct, 1, d), lambda b_, h_, ci: (b_, ci, h_, 0)),
+            pl.BlockSpec((1, d), lambda b_, h_, ci: (h_, 0)),
+            pl.BlockSpec((1, 1, d, d), lambda b_, h_, ci: (b_, h_, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, ct, 1, d), lambda b_, h_, ci: (b_, ci, h_, 0)),
+            pl.BlockSpec((1, 1, d, d), lambda b_, h_, ci: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, t_pad, h, d), f32),
+            jax.ShapeDtypeStruct((b, h, d, d), f32),
+        ],
+        scratch_shapes=[pltpu.VMEM((d, d), f32)],
+        interpret=interpret,
+    )(r.astype(f32), k.astype(f32), v.astype(f32), w.astype(f32),
+      u.astype(f32), s0.astype(f32))
+    return out[:, :t], sf

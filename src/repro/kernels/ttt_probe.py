@@ -1,0 +1,124 @@
+"""Fused TTT-probe inner-loop scan — Pallas TPU kernel.
+
+The paper's hot loop (Algorithm 2 lines 8-16): for each trajectory, at every
+step score with the current fast weights, then apply one Brier-gradient
+update.  The recurrence is sequential in T, so the kernel exploits the TPU
+grid's sequential-iteration order: grid = (N, T/T_CHUNK); the fast weights
+(W, b) live in VMEM scratch and persist across the T-chunks of one
+trajectory while phi-chunks stream HBM->VMEM.  This is the same adaptation
+TTT-linear uses on TPU (DESIGN.md §3) — on GPU this loop is a per-step
+kernel launch or a fori_loop over HBM; on TPU the whole trajectory's
+adaptation runs out of VMEM.
+
+Layouts (f = feature dim, padded to a multiple of 128):
+    zq, zk : (N, T, f)   score / update views of the step features
+    c      : (N, T)      inner labels (zeros at deployment)
+    m      : (N, T)      validity mask (freezes updates on padding)
+    -> scores (N, T), W_final (N, f), b_final (N, 1)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_T_CHUNK = 128
+
+
+def _kernel(zq_ref, zk_ref, c_ref, m_ref, w0_ref, b0_ref, eta_ref,
+            scores_ref, wf_ref, bf_ref, w_s, b_s, *, t_chunk: int,
+            n_chunks: int):
+    t_idx = pl.program_id(1)
+
+    @pl.when(t_idx == 0)
+    def _init():
+        w_s[...] = w0_ref[...]
+        b_s[0, 0] = b0_ref[0]
+
+    eta = eta_ref[0]
+
+    def step(i, _):
+        w = w_s[...]                                  # (1, f)
+        b = b_s[0, 0]
+        zq = zq_ref[0, i, :][None, :]                 # (1, f)
+        zk = zk_ref[0, i, :][None, :]
+        s_q = jax.nn.sigmoid(jnp.sum(zq * w) + b)
+        scores_ref[0, i] = s_q
+        # Brier-gradient update on the K view (score-then-update)
+        s_k = jax.nn.sigmoid(jnp.sum(zk * w) + b)
+        coeff = 2.0 * (s_k - c_ref[0, i]) * s_k * (1.0 - s_k)
+        coeff = coeff * m_ref[0, i] * eta
+        w_s[...] = w - coeff * zk
+        b_s[0, 0] = b - coeff
+        return 0
+
+    jax.lax.fori_loop(0, t_chunk, step, 0)
+
+    @pl.when(t_idx == n_chunks - 1)
+    def _fin():
+        wf_ref[...] = w_s[...]
+        bf_ref[0, 0] = b_s[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("t_chunk", "interpret"))
+def ttt_probe_scan(zq, zk, c, m, w0, b0, eta, *, t_chunk: int = DEFAULT_T_CHUNK,
+                   interpret: bool = True):
+    """Run the fused inner-loop scan for a batch of trajectories.
+
+    zq/zk (N, T, f) f32; c/m (N, T) f32; w0 (f,); b0, eta scalars.
+    Returns (scores (N, T), w_final (N, f), b_final (N,)).
+    """
+    n, t, f = zq.shape
+    t_chunk = min(t_chunk, t)
+    if t % t_chunk:
+        pad = t_chunk - t % t_chunk
+        zq = jnp.pad(zq, ((0, 0), (0, pad), (0, 0)))
+        zk = jnp.pad(zk, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad)))
+        m = jnp.pad(m, ((0, 0), (0, pad)))
+    t_pad = zq.shape[1]
+    n_chunks = t_pad // t_chunk
+    f32 = jnp.float32
+    kernel = functools.partial(_kernel, t_chunk=t_chunk, n_chunks=n_chunks)
+    scores, wf, bf = pl.pallas_call(
+        kernel,
+        grid=(n, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, t_chunk, f), lambda i, j: (i, j, 0)),   # zq
+            pl.BlockSpec((1, t_chunk, f), lambda i, j: (i, j, 0)),   # zk
+            pl.BlockSpec((1, t_chunk), lambda i, j: (i, j)),         # c
+            pl.BlockSpec((1, t_chunk), lambda i, j: (i, j)),         # m
+            pl.BlockSpec((1, f), lambda i, j: (0, 0)),               # w0
+            pl.BlockSpec(memory_space=pltpu.SMEM),                   # b0
+            pl.BlockSpec(memory_space=pltpu.SMEM),                   # eta
+        ],
+        out_specs=[
+            pl.BlockSpec((1, t_chunk), lambda i, j: (i, j)),         # scores
+            pl.BlockSpec((1, f), lambda i, j: (i, 0)),               # w_final
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),               # b_final
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, t_pad), f32),
+            jax.ShapeDtypeStruct((n, f), f32),
+            jax.ShapeDtypeStruct((n, 1), f32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, f), f32), pltpu.VMEM((1, 1), f32)],
+        interpret=interpret,
+    )(zq.astype(f32), zk.astype(f32), c.astype(f32), m.astype(f32),
+      w0.astype(f32)[None, :], b0.reshape(1).astype(f32),
+      eta.reshape(1).astype(f32))
+    return scores[:, :t], wf, bf[:, 0]
+
+
+def make_unroll_kernel(t_chunk: int = DEFAULT_T_CHUNK, interpret: bool = True):
+    """Adapter with the signature repro.core.ttt.inner_unroll expects:
+    (zq, zk, c, m, W0, b0, eta) -> (scores, W_f, b_f) for ONE trajectory."""
+    def kern(zq, zk, c, m, w0, b0, eta):
+        s, wf, bf = ttt_probe_scan(zq[None], zk[None], c[None], m[None],
+                                   w0, jnp.asarray(b0), jnp.asarray(eta),
+                                   t_chunk=t_chunk, interpret=interpret)
+        return s[0], wf[0], bf[0]
+    return kern

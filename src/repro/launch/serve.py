@@ -1,0 +1,116 @@
+"""Serving driver: batched requests through the ORCA-calibrated engine.
+
+CPU demo (reduced config, synthetic prompts, freshly meta-trained probe):
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \
+        --requests 4 --max-new-tokens 96
+
+The probe is meta-trained on trajectories extracted from THIS model
+(repro.serving.extract_trajectories), LTT-calibrated at --delta, then the
+engine serves with the calibrated threshold — the full Algorithm 2 loop.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import stopping as S
+from repro.core.labels import consistent_labels
+from repro.core.pipeline import train_ttt_probe
+from repro.core.probe import ProbeConfig
+from repro.models import build
+from repro.serving import ServeConfig, ServingEngine, extract_trajectories
+from repro.trajectories.synthetic import TrajectorySet, TrajectoryDistribution
+
+
+def trajectories_from_model(model, params, n: int, prompt_len: int,
+                            max_new: int, tokens_per_step: int, seed: int
+                            ) -> TrajectorySet:
+    """Harvest step embeddings + self-consistency answers from the model."""
+    cfg = model.cfg
+    rng = jax.random.PRNGKey(seed)
+    batch = {"tokens": jax.random.randint(rng, (n, prompt_len), 0,
+                                          cfg.vocab_size)}
+    if cfg.arch_type == "vlm":
+        batch["patch_embeds"] = jnp.zeros(
+            (n, cfg.frontend.n_tokens, cfg.frontend.embed_dim))
+    if cfg.arch_type == "audio":
+        batch["frames"] = jax.random.normal(
+            rng, (n, cfg.frontend.n_tokens, cfg.d_model)) * 0.02
+    phis, toks = extract_trajectories(model, params, batch, prompt_len,
+                                      max_new, tokens_per_step)
+    n_steps = phis.shape[1]
+    # "answer" proxy per step: the last token of the step
+    answers = toks[:, tokens_per_step - 1::tokens_per_step][:, :n_steps]
+    mask = np.ones((n, n_steps), bool)
+    labels = consistent_labels(answers, mask)
+    tau = np.argmax(labels > 0.5, axis=1)
+    tau = np.where(labels.max(1) > 0.5, tau, n_steps)
+    return TrajectorySet(phis=phis.astype(np.float32), mask=mask,
+                         correct=labels > 0.5, answers=answers, tau=tau,
+                         lengths=np.full(n, n_steps),
+                         dist=TrajectoryDistribution("model"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new-tokens", type=int, default=96)
+    ap.add_argument("--tokens-per-step", type=int, default=8)
+    ap.add_argument("--train-trajectories", type=int, default=24)
+    ap.add_argument("--delta", type=float, default=0.2)
+    ap.add_argument("--epochs", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    print(f"[serve] {cfg.name}: harvesting {args.train_trajectories} "
+          "calibration trajectories from the model")
+    ts = trajectories_from_model(model, params, args.train_trajectories,
+                                 args.prompt_len, args.max_new_tokens,
+                                 args.tokens_per_step, args.seed)
+    half = len(ts) // 2
+    train, cal = ts.subset(np.arange(half)), ts.subset(np.arange(half, len(ts)))
+    pc = ProbeConfig(d_phi=cfg.d_model, smooth_window=4)
+    probe = train_ttt_probe(train, "consistent", pc, epochs=args.epochs,
+                            epoch_select=False, seed=args.seed)
+    s_cal = probe.scores(cal)
+    lab = consistent_labels(cal.answers, cal.mask)
+    res = S.calibrate_and_evaluate(s_cal, lab, cal.mask, s_cal, lab, cal.mask,
+                                   delta=args.delta)
+    lam = res.lam if np.isfinite(res.lam) else 0.99
+    print(f"[serve] LTT-calibrated lambda* = {lam:.3f} "
+          f"(cal savings {res.savings:.3f}, error {res.error:.3f})")
+
+    scfg = ServeConfig(tokens_per_step=args.tokens_per_step,
+                       max_new_tokens=args.max_new_tokens, lam=float(lam),
+                       burn_in=2)
+    eng = ServingEngine(model, params, pc, probe.theta, scfg)
+    rng = jax.random.PRNGKey(args.seed + 1)
+    batch = {"tokens": jax.random.randint(rng, (args.requests, args.prompt_len),
+                                          0, cfg.vocab_size)}
+    if cfg.arch_type == "vlm":
+        batch["patch_embeds"] = jnp.zeros(
+            (args.requests, cfg.frontend.n_tokens, cfg.frontend.embed_dim))
+    if cfg.arch_type == "audio":
+        batch["frames"] = jax.random.normal(
+            rng, (args.requests, cfg.frontend.n_tokens, cfg.d_model)) * 0.02
+    out = eng.serve(batch, prompt_len=args.prompt_len)
+    print(f"[serve] {args.requests} requests: stop steps {out.stop_step.tolist()} "
+          f"(-1 = budget), step savings {out.savings:.3f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,184 @@
+"""Sharding policies: logical axes -> mesh axes, per workload.
+
+Logical axis names used by the model zoo's Param declarations and activation
+constraints:
+
+    batch             activations' leading batch dim
+    vocab             embedding / lm-head vocab dim (padded to 256)
+    embed / embed2    d_model dims of weight matrices
+    qkv / kv_qkv      flattened (n_heads*d_head) / (n_kv*d_head) dims
+    mlp               d_ff
+    experts           MoE expert dim
+    inner / inner2    mamba d_inner / 2*d_inner
+    heads             per-head parameter tables (rwkv u) — kept replicated
+    layers            stacked-layer dim — never sharded
+
+Policies:
+    train "fsdp_tp"   batch -> (pod,)data; weights 2D-sharded
+                      (embed -> data, ffn/heads/vocab/experts -> model):
+                      ZeRO-3-style — GSPMD all-gathers weights per layer.
+    train "dp_tp"     weights replicated over data, TP over model (small
+                      models where FSDP gather traffic isn't worth it).
+    serve "tp"        weights TP over model only; batch -> data; KV cache
+                      sequence-sharded over model for flash-decode.
+
+Every full-scale divisibility requirement these policies rely on is asserted
+in tests/test_arch_smoke.py::test_divisibility_for_model_axis.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import InputShape, ModelConfig
+from repro.parallel import ParallelContext
+
+
+def data_axes(multi_pod: bool) -> Tuple[str, ...]:
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def train_rules(multi_pod: bool, fsdp: bool) -> Dict[str, Any]:
+    rules: Dict[str, Any] = {
+        "batch": data_axes(multi_pod),
+        "vocab": "model",
+        "mlp": "model",
+        "qkv": "model",
+        "kv_qkv": "model",
+        "experts": "model",
+        "inner": "model",
+        "inner2": "model",
+        "heads": None,
+        "embed2": None,
+        "layers": None,
+    }
+    if fsdp:
+        rules["embed"] = "data"       # second weight dim -> ZeRO-3 style
+    else:
+        rules["embed"] = None
+    return rules
+
+
+def serve_rules(multi_pod: bool) -> Dict[str, Any]:
+    rules = train_rules(multi_pod, fsdp=False)
+    rules["batch"] = data_axes(multi_pod)
+    # kv cache sequence dim for flash-decode partial-softmax sharding
+    rules["kv_seq"] = "model"
+    return rules
+
+
+def use_fsdp(cfg: ModelConfig) -> bool:
+    """FSDP pays off above a few B params (weight memory dominates)."""
+    return cfg.param_count() > 4e9
+
+
+# ---------------------------------------------------------------------------
+# batch / state specs
+
+def batch_spec_tree(batch_tree, rules) -> Any:
+    """PartitionSpecs for a train/prefill/decode input batch."""
+    b = rules["batch"]
+
+    def one(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name == "pos":
+            return P()
+        nd = len(leaf.shape)
+        return P(*((b,) + (None,) * (nd - 1))) if nd else P()
+
+    return jax.tree_util.tree_map_with_path(one, batch_tree)
+
+
+def decode_state_specs(cfg: ModelConfig, state_tree, rules,
+                       flash_decode: bool) -> Any:
+    """PartitionSpecs for the decode state pytree, by arch family."""
+    b = rules["batch"]
+    seq_ax = rules.get("kv_seq") if flash_decode else None
+
+    def one(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        shape = leaf.shape
+        if name in ("k", "v", "k_scale", "v_scale"):
+            # (L, B, KV, S, d) — sequence-shard for flash decode
+            return P(*((None, b, None, seq_ax, None)[:len(shape)]))
+        if name in ("cross_k", "cross_v"):
+            return P(None, b, None, None, None)
+        if name == "wkv":                       # (L,B,H,dk,dv)
+            return P(None, b, "model", None, None)
+        if name in ("tm_x", "cm_x"):            # (L,B,d)
+            return P(None, b, None)
+        if name == "conv":                      # (L,B,w-1,di)
+            return P(None, b, None, "model")
+        if name == "ssm":                       # (L,B,di,ds)
+            return P(None, b, "model", None)
+        # probe state etc: batch-leading
+        nd = len(shape)
+        return P(*((b,) + (None,) * (nd - 1))) if nd else P()
+
+    return jax.tree_util.tree_map_with_path(one, state_tree)
+
+
+def probe_state_specs(state_tree, rules) -> Any:
+    b = rules["batch"]
+
+    def one(leaf):
+        nd = len(leaf.shape)
+        return P(*((b,) + (None,) * (nd - 1))) if nd else P()
+
+    return jax.tree.map(one, state_tree)
+
+
+def with_shardings(tree, spec_tree, mesh):
+    """Attach NamedShardings to a ShapeDtypeStruct tree."""
+    def one(sds, spec):
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return jax.tree.map(one, tree, spec_tree)
+
+
+def replicated(tree, mesh):
+    return jax.tree.map(
+        lambda sds: jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                         sharding=NamedSharding(mesh, P())),
+        tree)
+
+
+def make_context(cfg: ModelConfig, mesh, shape: InputShape, *,
+                 multi_pod: bool) -> ParallelContext:
+    """The ParallelContext the launchers install while tracing."""
+    is_train = shape.kind == "train"
+    is_decode = shape.kind == "decode"
+    fsdp = use_fsdp(cfg) and is_train
+    rules = train_rules(multi_pod, fsdp) if is_train else serve_rules(multi_pod)
+    if cfg.moe is not None:
+        # expert weights are (E, d, f): experts already claim the model axis
+        rules = dict(rules)
+        rules["mlp"] = None
+        if is_train and cfg.param_count() < 4e9:
+            # §Perf B3: small fine-grained MoE — spend the model axis on
+            # experts ONLY; attention runs data-parallel (no per-layer TP
+            # all-reduce) and the now-replicated weights are FSDP-sharded
+            # over data to keep optimizer state per-device small.
+            rules["qkv"] = rules["kv_qkv"] = None
+            rules["embed"] = "data"   # vocab stays on model (logits sharding)
+    # batch must divide the data axes (long_500k has global_batch=1: the
+    # whole data axis goes idle and all parallelism is sequence/model-side)
+    n_data = 1
+    for a in data_axes(multi_pod):
+        n_data *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+    if shape.global_batch % n_data:
+        rules = dict(rules)
+        rules["batch"] = None
+    # flash-decode needs a sequence dim in the cache (not rwkv; hymba/dense ok)
+    flash = is_decode and cfg.arch_type != "ssm"
+    return ParallelContext(
+        mesh=mesh, rules=rules, data_axes=data_axes(multi_pod),
+        model_axis="model",
+        ep_moe=cfg.moe is not None,
+        flash_decode=flash,
+        attn_impl="blockwise",
+        remat=is_train,
+    )

@@ -1,0 +1,314 @@
+"""GQA attention: prefill (einsum / blockwise-flash), decode (full-cache,
+sequence-sharded flash-decode, ring-buffer sliding window), int8 KV cache.
+
+Layouts
+-------
+q:      (B, S, H, d_head)
+k, v:   (B, S, KV, d_head)
+cache:  {"k","v"}: (B, KV, S_cache, d_head)  (+ "k_scale","v_scale" for int8)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import parallel
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# KV cache (de)quantization
+
+def quantize_kv(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-(position, head) absmax int8 quantization. x: (..., d_head)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray, dtype) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def init_cache(cfg, batch: int, length: int, n_layers: Optional[int] = None,
+               abstract: bool = False) -> Dict[str, jnp.ndarray]:
+    """Stacked-layer KV cache: (L, B, KV, S, d_head)."""
+    L = cfg.n_layers if n_layers is None else n_layers
+    shape = (L, batch, cfg.n_kv_heads, length, cfg.d_head)
+    if cfg.kv_cache_dtype == "int8":
+        mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if abstract else \
+             (lambda s, d: jnp.zeros(s, d))
+        return {"k": mk(shape, jnp.int8), "v": mk(shape, jnp.int8),
+                "k_scale": mk(shape[:-1] + (1,), jnp.float32),
+                "v_scale": mk(shape[:-1] + (1,), jnp.float32)}
+    dt = jnp.dtype(cfg.dtype)
+    mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if abstract else \
+         (lambda s, d: jnp.zeros(s, d))
+    return {"k": mk(shape, dt), "v": mk(shape, dt)}
+
+
+def cache_write(cache_l: Dict[str, jnp.ndarray], k: jnp.ndarray, v: jnp.ndarray,
+                slot: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Write one token into a per-layer cache slice (B, KV, S, dh) at ``slot``."""
+    def upd(buf, val):
+        # val: (B, KV, d) -> (B, KV, 1, d)
+        return jax.lax.dynamic_update_slice_in_dim(buf, val[:, :, None, :], slot, axis=2)
+    out = dict(cache_l)
+    if "k_scale" in cache_l:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        out["k"] = upd(cache_l["k"], kq)
+        out["v"] = upd(cache_l["v"], vq)
+        out["k_scale"] = upd(cache_l["k_scale"], ks)
+        out["v_scale"] = upd(cache_l["v_scale"], vs)
+    else:
+        out["k"] = upd(cache_l["k"], k.astype(cache_l["k"].dtype))
+        out["v"] = upd(cache_l["v"], v.astype(cache_l["v"].dtype))
+    return out
+
+
+def cache_write_stacked(cache: Dict[str, jnp.ndarray], ks: jnp.ndarray,
+                        vs: jnp.ndarray, slot: jnp.ndarray
+                        ) -> Dict[str, jnp.ndarray]:
+    """Write one token for ALL layers at once: cache (L,B,KV,S,dh),
+    ks/vs (L,B,KV,dh).  One in-place (donated) update outside the layer scan
+    instead of copying the cache through scan outputs (§Perf C2)."""
+    def upd(buf, val):
+        return jax.lax.dynamic_update_slice_in_dim(
+            buf, val[:, :, :, None, :], slot, axis=3)
+    out = dict(cache)
+    if "k_scale" in cache:
+        kq, ksc = quantize_kv(ks)
+        vq, vsc = quantize_kv(vs)
+        out["k"] = upd(cache["k"], kq)
+        out["v"] = upd(cache["v"], vq)
+        out["k_scale"] = upd(cache["k_scale"], ksc)
+        out["v_scale"] = upd(cache["v_scale"], vsc)
+    else:
+        out["k"] = upd(cache["k"], ks.astype(cache["k"].dtype))
+        out["v"] = upd(cache["v"], vs.astype(cache["v"].dtype))
+    return out
+
+
+def cache_kv(cache_l: Dict[str, jnp.ndarray], dtype) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if "k_scale" in cache_l:
+        return (dequantize_kv(cache_l["k"], cache_l["k_scale"], dtype),
+                dequantize_kv(cache_l["v"], cache_l["v_scale"], dtype))
+    return cache_l["k"], cache_l["v"]
+
+
+# ---------------------------------------------------------------------------
+# Prefill attention
+
+def _gqa_split(q: jnp.ndarray, n_kv: int) -> jnp.ndarray:
+    """(B, S, H, d) -> (B, S, KV, G, d)."""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+def attn_prefill_einsum(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        q_offset: int = 0) -> jnp.ndarray:
+    """Reference O(S^2)-memory attention. q (B,Sq,H,d); k,v (B,Sk,KV,d)."""
+    b, sq, h, d = q.shape
+    n_kv = k.shape[2]
+    qg = _gqa_split(q, n_kv)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(d).astype(jnp.float32)
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def attn_prefill_blockwise(q, k, v, *, causal: bool = True,
+                           window: Optional[int] = None,
+                           q_block: int = 512, kv_block: int = 512,
+                           differentiable: bool = False) -> jnp.ndarray:
+    """Flash-style online-softmax attention in pure JAX (O(S*block) memory).
+
+    Sequential lax.scan over Q blocks; inner fori_loop over KV blocks with a
+    dynamic upper bound so causally-dead blocks are skipped (same FLOPs as a
+    TPU flash kernel).  This is the scalable path used in the dry-run; the
+    Pallas kernel in repro/kernels/flash_attention.py is the TPU hot path.
+    """
+    b, s, h, d = q.shape
+    n_kv = k.shape[2]
+    g = h // n_kv
+    assert s % q_block == 0 and s % kv_block == 0, (s, q_block, kv_block)
+    nq, nk = s // q_block, s // kv_block
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    kT = k.astype(jnp.float32).transpose(0, 2, 3, 1)   # (B,KV,d,S)
+    vT = v.astype(jnp.float32).transpose(0, 2, 1, 3)   # (B,KV,S,d)
+
+    def q_step(_, qi):
+        qb = jax.lax.dynamic_slice_in_dim(q, qi * q_block, q_block, axis=1)
+        qb = _gqa_split(qb.astype(jnp.float32), n_kv) * scale  # (B,qb,KV,G,d)
+        qb = qb.transpose(0, 2, 3, 1, 4)                       # (B,KV,G,qb,d)
+        qpos = qi * q_block + jnp.arange(q_block)
+
+        def kv_step(ki, carry):
+            m, l, acc = carry
+            kb = jax.lax.dynamic_slice_in_dim(kT, ki * kv_block, kv_block, axis=3)
+            vb = jax.lax.dynamic_slice_in_dim(vT, ki * kv_block, kv_block, axis=2)
+            sc = jnp.einsum("bkgqd,bkds->bkgqs", qb, kb)
+            kpos = ki * kv_block + jnp.arange(kv_block)
+            mask = jnp.ones((q_block, kv_block), bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum("bkgqs,bksd->bkgqd", p, vb)
+            return m_new, l_new, acc_new
+
+        m0 = jnp.full((b, n_kv, g, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, n_kv, g, q_block), jnp.float32)
+        a0 = jnp.zeros((b, n_kv, g, q_block, d), jnp.float32)
+        if differentiable:
+            # static-trip scan over ALL kv blocks (masked): reverse-mode safe.
+            # Each block is rematerialized in the backward pass (otherwise the
+            # scan stores every (bq x bk) probability block — the memory the
+            # flash formulation exists to avoid).
+            def kv_scan(carry, ki):
+                return kv_step(ki, carry), None
+            kv_scan = jax.checkpoint(kv_scan, prevent_cse=False)
+            (m, l, acc), _ = jax.lax.scan(kv_scan, (m0, l0, a0), jnp.arange(nk))
+        else:
+            # dynamic bounds skip causally-dead blocks (flash-kernel FLOPs)
+            if causal:
+                hi = (qi * q_block + q_block + kv_block - 1) // kv_block
+                hi = jnp.minimum(hi, nk)
+            else:
+                hi = nk
+            lo = 0
+            if window is not None:
+                lo = jnp.maximum(qi * q_block - (window - 1), 0) // kv_block
+            m, l, acc = jax.lax.fori_loop(lo, hi, kv_step, (m0, l0, a0))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        out = out.transpose(0, 3, 1, 2, 4).reshape(b, q_block, h, d)
+        return None, out.astype(q.dtype)
+
+    _, blocks = jax.lax.scan(q_step, None, jnp.arange(nq))
+    return blocks.transpose(1, 0, 2, 3, 4).reshape(b, s, h, d)
+
+
+def attn_prefill(q, k, v, *, causal: bool = True, window: Optional[int] = None):
+    impl = parallel.attn_impl()
+    if impl == "blockwise":
+        qb = min(512, q.shape[1])
+        kb = min(512, k.shape[1])
+        if q.shape[1] % qb == 0 and k.shape[1] % kb == 0:
+            # training (remat on) needs the reverse-mode-safe static scan;
+            # pure prefill keeps the dynamic-bound block skipping.
+            return attn_prefill_blockwise(
+                q, k, v, causal=causal, window=window, q_block=qb, kv_block=kb,
+                differentiable=parallel.remat_enabled())
+    return attn_prefill_einsum(q, k, v, causal=causal, window=window)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (single query against a READ-ONLY cache + current token)
+#
+# The cache never flows through the layer scan as an output: each layer
+# attends to the (stale-slot-masked) cache plus the freshly-projected
+# (k, v) of the current token passed as ``extra_kv``; the single in-place
+# cache write for all layers happens outside the scan (donated buffer).
+# This removes the full-cache copy per decode step (§Perf iteration C2).
+
+def _decode_partial(qg, k, v, valid):
+    """Unnormalized online-softmax pieces over the cache.
+    Returns (o_un (B,KV,G,d), l (B,KV,G), m (B,KV,G)).
+
+    k/v may be bf16 (int8 caches are dequantized to bf16 to halve the
+    transient copy — §Perf C3; the Pallas flash_decode kernel dequantizes
+    per VMEM block on TPU so no HBM-sized temp exists at all there);
+    contractions accumulate in f32."""
+    d = qg.shape[-1]
+    sc = jnp.einsum("bkgd,bksd->bkgs", qg.astype(k.dtype), k,
+                    preferred_element_type=jnp.float32)
+    sc = sc / jnp.sqrt(d).astype(jnp.float32)
+    sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+    m = jnp.max(sc, axis=-1)
+    p = jnp.exp(sc - m[..., None])
+    p = jnp.where(valid[:, None, None, :], p, 0.0)   # guard exp(-inf - -inf)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o, l, m
+
+
+def _decode_core(qg, k, v, valid) -> jnp.ndarray:
+    o, l, m = _decode_partial(qg, k, v, valid)
+    return o / jnp.maximum(l, 1e-30)[..., None]
+
+
+def attn_decode(q, cache_l, valid, dtype, extra_kv=None) -> jnp.ndarray:
+    """q (B,H,d); cache_l per-layer dict (B,KV,S,d) READ-ONLY; valid (B,S);
+    extra_kv: optional (k_new, v_new) each (B,KV,d) — the current token."""
+    b, h, d = q.shape
+    k, v = cache_kv(cache_l, jnp.bfloat16)   # bf16 dequant (§Perf C3)
+    n_kv = k.shape[1]
+    qg = q.reshape(b, n_kv, h // n_kv, d).astype(jnp.float32)
+    ctx = parallel.current_ctx()
+    seq_shardable = (ctx is not None and
+                     k.shape[2] % ctx.mesh.shape[ctx.model_axis] == 0)
+    if ctx is not None and ctx.flash_decode and seq_shardable:
+        o, l, m = _flash_decode_sharded(ctx, qg, k, v, valid)
+    else:
+        o, l, m = _decode_partial(qg, k, v, valid)
+    if extra_kv is not None:
+        k_x, v_x = extra_kv
+        k_x = k_x.astype(jnp.float32)
+        v_x = v_x.astype(jnp.float32)
+        s_x = jnp.einsum("bkgd,bkd->bkg", qg, k_x) / jnp.sqrt(d).astype(jnp.float32)
+        m_f = jnp.maximum(m, s_x)
+        w_c = jnp.where(jnp.isfinite(m), jnp.exp(m - m_f), 0.0)
+        w_x = jnp.exp(s_x - m_f)
+        o = o * w_c[..., None] + w_x[..., None] * v_x[:, :, None, :]
+        l = l * w_c + w_x
+    out = o / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, h, d).astype(dtype)
+
+
+def _flash_decode_sharded(ctx, qg, k, v, valid):
+    """Sequence-sharded flash-decode: KV cache sharded over the model axis on
+    the sequence dim; each shard computes a partial online softmax which is
+    combined with pmax/psum (one collective round instead of gathering the
+    cache).  Returns unnormalized (o, l, m) so the caller can merge the
+    current token's column."""
+    mesh = ctx.mesh
+    ax = ctx.model_axis
+    dspec = ctx.rules.get("batch")
+
+    def shard_fn(qg, k, v, valid):
+        o_loc, l_loc, m_loc = _decode_partial(qg, k, v, valid)
+        m_glb = jax.lax.pmax(m_loc, ax)
+        scale = jnp.where(jnp.isfinite(m_loc), jnp.exp(m_loc - m_glb), 0.0)
+        l_glb = jax.lax.psum(l_loc * scale, ax)
+        o_glb = jax.lax.psum(o_loc * scale[..., None], ax)
+        return o_glb, l_glb, m_glb
+
+    from jax.sharding import PartitionSpec as P
+    return jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(dspec), P(dspec, None, ax), P(dspec, None, ax), P(dspec, ax)),
+        out_specs=(P(dspec), P(dspec), P(dspec)),
+        check_vma=False,
+    )(qg, k, v, valid)

@@ -1,0 +1,259 @@
+"""Hymba — hybrid-head layers: parallel attention + Mamba(SSM) heads.
+
+[arXiv:2411.13676].  Each layer feeds the same normed input to (i) GQA
+attention with a sliding window and (ii) a selective-SSM (Mamba-style) head
+branch; the two branch outputs are RMS-normalized and mixed with learnable
+per-branch scales.  128 learnable *meta tokens* are prepended to the prompt
+and are always attendable (kept outside the SWA ring in decode).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import parallel
+from repro.models import attention as attn
+from repro.models.common import (Param, apply_norm, apply_rope, norm_decls,
+                                 rmsnorm, stack_decls)
+from repro.models.transformer import (_qkv, embed_tokens, logits_from_hidden,
+                                      mlp_apply, _mlp_decls)
+
+
+# ---------------------------------------------------------------------------
+# Mamba branch
+
+def mamba_decls(cfg) -> Dict[str, Param]:
+    d = cfg.d_model
+    di = cfg.ssm.expand * d
+    ds = cfg.ssm.state_dim
+    dtr = cfg.ssm.dt_rank or max(1, -(-d // 16))
+    return {
+        "w_in": Param((d, 2 * di), ("embed", "inner2")),
+        "conv_w": Param((cfg.ssm.conv_dim, di), (None, "inner")),
+        "conv_b": Param((di,), ("inner",), "zeros"),
+        "w_x_dt": Param((di, dtr), ("inner", None)),
+        "w_dt": Param((dtr, di), (None, "inner")),
+        "b_dt": Param((di,), ("inner",), "zeros"),
+        "w_B": Param((di, ds), ("inner", None)),
+        "w_C": Param((di, ds), ("inner", None)),
+        "A_log": Param((di, ds), ("inner", None), "small"),
+        "D": Param((di,), ("inner",), "ones"),
+        "w_out": Param((di, d), ("inner", "embed")),
+    }
+
+
+def mamba_init_state(cfg, batch: int):
+    di = cfg.ssm.expand * cfg.d_model
+    return {"conv": jnp.zeros((batch, cfg.ssm.conv_dim - 1, di), jnp.dtype(cfg.dtype)),
+            "ssm": jnp.zeros((batch, di, cfg.ssm.state_dim), jnp.float32)}
+
+
+def _mamba_core(p, xin, conv_state, ssm_state, cfg):
+    """xin (B,T,di) post-in-proj; returns (y (B,T,di), conv_state', ssm_state')."""
+    b, t, di = xin.shape
+    ds = cfg.ssm.state_dim
+    dt_ = xin.dtype
+    # depthwise causal conv over time
+    xpad = jnp.concatenate([conv_state.astype(dt_), xin], axis=1)
+    new_conv = xpad[:, -(cfg.ssm.conv_dim - 1):] if cfg.ssm.conv_dim > 1 else conv_state
+    win = cfg.ssm.conv_dim
+    idx = jnp.arange(t)[:, None] + jnp.arange(win)[None, :]       # (T, win)
+    xwin = jnp.take(xpad, idx, axis=1)                            # (B,T,win,di)
+    xc = jnp.einsum("btwd,wd->btd", xwin, p["conv_w"].astype(dt_)) + p["conv_b"].astype(dt_)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(dt_)
+    # data-dependent dt, B, C
+    dt_lr = (xc @ p["w_x_dt"].astype(dt_)) @ p["w_dt"].astype(dt_) + p["b_dt"].astype(dt_)
+    dt_pos = jax.nn.softplus(dt_lr.astype(jnp.float32))           # (B,T,di)
+    Bm = (xc @ p["w_B"].astype(dt_)).astype(jnp.float32)          # (B,T,ds)
+    Cm = (xc @ p["w_C"].astype(dt_)).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                  # (di,ds)
+    xf = xc.astype(jnp.float32)
+
+    def step(h, xs):
+        dt_t, B_t, C_t, x_t = xs                                  # (B,di),(B,ds),(B,ds),(B,di)
+        dA = jnp.exp(dt_t[..., None] * A[None])                   # (B,di,ds)
+        dBx = dt_t[..., None] * B_t[:, None, :] * x_t[..., None]
+        h = dA * h + dBx
+        y = jnp.einsum("bds,bs->bd", h, C_t)
+        return h, y
+
+    xs = (jnp.moveaxis(dt_pos, 1, 0), jnp.moveaxis(Bm, 1, 0),
+          jnp.moveaxis(Cm, 1, 0), jnp.moveaxis(xf, 1, 0))
+    ssm_state, ys = jax.lax.scan(step, ssm_state, xs)
+    y = jnp.moveaxis(ys, 0, 1) + xf * p["D"].astype(jnp.float32)[None, None]
+    return y.astype(dt_), new_conv, ssm_state
+
+
+def mamba_branch(cfg, p, x, state):
+    """x (B,T,d) -> (out (B,T,d), new_state)."""
+    dt_ = x.dtype
+    xz = x @ p["w_in"].astype(dt_)
+    di = cfg.ssm.expand * cfg.d_model
+    xin, z = xz[..., :di], xz[..., di:]
+    y, conv_s, ssm_s = _mamba_core(p, xin, state["conv"], state["ssm"], cfg)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(dt_)
+    return y @ p["w_out"].astype(dt_), {"conv": conv_s, "ssm": ssm_s}
+
+
+# ---------------------------------------------------------------------------
+# Hybrid layer
+
+def layer_decls(cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    out = {
+        "ln1": norm_decls(cfg), "ln2": norm_decls(cfg),
+        "attn": {
+            "wq": Param((d, cfg.attn_out_dim), ("embed", "qkv")),
+            "wk": Param((d, cfg.kv_out_dim), ("embed", "kv_qkv")),
+            "wv": Param((d, cfg.kv_out_dim), ("embed", "kv_qkv")),
+            "wo": Param((cfg.attn_out_dim, d), ("qkv", "embed")),
+        },
+        "mamba": mamba_decls(cfg),
+        "norm_attn": {"scale": Param((d,), (None,), "ones")},
+        "norm_ssm": {"scale": Param((d,), (None,), "ones")},
+        "beta": Param((2,), (None,), "ones"),
+        "mlp": _mlp_decls(cfg),
+    }
+    return out
+
+
+def decls(cfg) -> Dict[str, Any]:
+    vpad = cfg.padded_vocab()
+    return {
+        "embed": Param((vpad, cfg.d_model), ("vocab", "embed"), "embed"),
+        "meta_tokens": Param((cfg.n_meta_tokens, cfg.d_model), (None, "embed"), "embed"),
+        "final_norm": norm_decls(cfg),
+        "lm_head": Param((cfg.d_model, vpad), ("embed", "vocab")),
+        "layers": stack_decls(layer_decls(cfg), cfg.n_layers, "layers"),
+    }
+
+
+def init_state(cfg, batch: int, cache_len: int):
+    """Hybrid decode state: SWA ring KV cache + mamba states, per layer."""
+    win = min(cache_len, cfg.sliding_window or cache_len)
+    kv = attn.init_cache(cfg, batch, win)       # already (L, B, KV, W, dh)
+    ms = mamba_init_state(cfg, batch)
+    L = cfg.n_layers
+    return {
+        "kv": kv,
+        "mamba": jax.tree.map(lambda a: jnp.zeros((L,) + a.shape, a.dtype), ms),
+    }
+
+
+def _layer_prefill(cfg, p, x, positions, mamba_state):
+    b, s, d = x.shape
+    h = apply_norm(cfg, p["ln1"], x)
+    # attention branch (SWA; meta tokens are inside the sequence at prefill)
+    q, k, v = _qkv(cfg, p["attn"], h)
+    q = apply_rope(q.reshape(b, s, cfg.n_heads, cfg.d_head), positions,
+                   cfg.rope_theta, cfg.rotary_pct)
+    k = apply_rope(k.reshape(b, s, cfg.n_kv_heads, cfg.d_head), positions,
+                   cfg.rope_theta, cfg.rotary_pct)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    oa = attn.attn_prefill(q, k, v, causal=True, window=cfg.sliding_window)
+    oa = oa.reshape(b, s, cfg.attn_out_dim) @ p["attn"]["wo"].astype(x.dtype)
+    # mamba branch
+    om, mamba_state = mamba_branch(cfg, p["mamba"], h, mamba_state)
+    beta = p["beta"].astype(jnp.float32)
+    fused = (beta[0] * rmsnorm(oa, p["norm_attn"]["scale"]).astype(jnp.float32)
+             + beta[1] * rmsnorm(om, p["norm_ssm"]["scale"]).astype(jnp.float32))
+    x = x + fused.astype(x.dtype)
+    h = apply_norm(cfg, p["ln2"], x)
+    x = x + mlp_apply(cfg, p["mlp"], h)
+    return x, (k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)), mamba_state
+
+
+def forward(cfg, params, batch):
+    tokens = batch["tokens"]
+    x = embed_tokens(cfg, params, tokens)
+    meta = params["meta_tokens"].astype(x.dtype)
+    x = jnp.concatenate([jnp.broadcast_to(meta[None], (x.shape[0],) + meta.shape), x], 1)
+    x = parallel.constrain(x, "batch", None, None)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    st0 = init_state(cfg, b, cache_len=1)["mamba"]
+    ctx = parallel.current_ctx()
+
+    def body(x, xs):
+        p_l, st_l = xs
+        x, _, _ = _layer_prefill(cfg, p_l, x, positions, st_l)
+        return x, None
+
+    if ctx is not None and ctx.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, (params["layers"], st0))
+    h = apply_norm(cfg, params["final_norm"], x)
+    return logits_from_hidden(cfg, params, h), h, jnp.float32(0)
+
+
+def prefill(cfg, params, batch, cache_len: int):
+    tokens = batch["tokens"]
+    x = embed_tokens(cfg, params, tokens)
+    meta = params["meta_tokens"].astype(x.dtype)
+    x = jnp.concatenate([jnp.broadcast_to(meta[None], (x.shape[0],) + meta.shape), x], 1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    state = init_state(cfg, b, cache_len)
+    win = state["kv"]["k"].shape[3]
+
+    def body(x, xs):
+        p_l, st_l = xs
+        x, (k, v), m_st = _layer_prefill(cfg, p_l, x, positions, st_l)
+        if s >= win:
+            # keep the last `win` positions; entry j holds position s-win+j and
+            # must land at ring slot (s-win+j) % win -> roll by (s-win) % win.
+            kw = jnp.roll(k[:, :, -win:], (s - win) % win, axis=2)
+            vw = jnp.roll(v[:, :, -win:], (s - win) % win, axis=2)
+        else:
+            # prompt shorter than the window: slots 0..s-1, zero-pad the rest
+            pad = [(0, 0), (0, 0), (0, win - s), (0, 0)]
+            kw, vw = jnp.pad(k, pad), jnp.pad(v, pad)
+        cache_l = {"k": kw.astype(state["kv"]["k"].dtype),
+                   "v": vw.astype(state["kv"]["v"].dtype)}
+        return x, (cache_l, m_st)
+
+    x, (kv, mamba) = jax.lax.scan(body, x, (params["layers"], state["mamba"]))
+    h = apply_norm(cfg, params["final_norm"], x)
+    return {"kv": kv, "mamba": mamba}, h[:, -1], h
+
+
+def decode_step(cfg, params, token, state, pos):
+    """One-token decode; pos counts from end of prompt (absolute, incl meta)."""
+    b = token.shape[0]
+    x = embed_tokens(cfg, params, token)
+    win = state["kv"]["k"].shape[3]
+    slot = jnp.mod(pos, win)
+    idxs = jnp.arange(win)
+    stored = pos - jnp.mod(pos - idxs, win)
+    valid = jnp.broadcast_to(((stored >= 0) & (stored < pos))[None], (b, win))
+    positions = jnp.full((b,), pos, jnp.int32)
+
+    def body(x, xs):
+        p_l, kv_l, m_l = xs
+        h = apply_norm(cfg, p_l["ln1"], x[:, None, :])[:, 0]
+        q, k, v = _qkv(cfg, p_l["attn"], h)
+        q = apply_rope(q.reshape(b, 1, cfg.n_heads, cfg.d_head),
+                       positions[:, None], cfg.rope_theta, cfg.rotary_pct)[:, 0]
+        k = apply_rope(k.reshape(b, 1, cfg.n_kv_heads, cfg.d_head),
+                       positions[:, None], cfg.rope_theta, cfg.rotary_pct)[:, 0]
+        v = v.reshape(b, cfg.n_kv_heads, cfg.d_head)
+        oa = attn.attn_decode(q, kv_l, valid, x.dtype, extra_kv=(k, v))
+        oa = oa.reshape(b, cfg.attn_out_dim) @ p_l["attn"]["wo"].astype(x.dtype)
+        om, m_l = mamba_branch(cfg, p_l["mamba"], h[:, None, :], m_l)
+        om = om[:, 0]
+        beta = p_l["beta"].astype(jnp.float32)
+        fused = (beta[0] * rmsnorm(oa, p_l["norm_attn"]["scale"]).astype(jnp.float32)
+                 + beta[1] * rmsnorm(om, p_l["norm_ssm"]["scale"]).astype(jnp.float32))
+        x = x + fused.astype(x.dtype)
+        h2 = apply_norm(cfg, p_l["ln2"], x[:, None, :])
+        x = x + mlp_apply(cfg, p_l["mlp"], h2)[:, 0]
+        return x, ((k, v), m_l)
+
+    x, ((ks, vs), mamba) = jax.lax.scan(
+        body, x, (params["layers"], state["kv"], state["mamba"]))
+    kv = attn.cache_write_stacked(state["kv"], ks, vs, slot)
+    h = apply_norm(cfg, params["final_norm"], x[:, None, :])[:, 0]
+    logits = logits_from_hidden(cfg, params, h)
+    return logits, h, {"kv": kv, "mamba": mamba}

@@ -1,0 +1,231 @@
+"""Model registry: one uniform API over the six architecture families.
+
+``build(cfg)`` returns a ``Model`` with pure functions:
+
+    init(rng) -> params
+    forward(params, batch) -> (logits, hidden, aux_loss)       # teacher forced
+    loss(params, batch) -> (loss, metrics)
+    prefill(params, batch, cache_len) -> (state, last_hidden, hidden)
+    decode_step(params, token, state, pos) -> (logits, hidden, state)
+    init_decode_state(batch, cache_len, abstract) -> state pytree
+    make_batch(rng, shape) / batch_specs(shape) -> example inputs (real / SDS)
+
+Decode-state geometry (ring-buffer SWA vs full cache vs recurrent state) is
+resolved here from the config + input shape, so launchers and the serving
+engine are architecture-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import InputShape, ModelConfig
+from repro.models import attention as attn
+from repro.models import common, hymba, rwkv6, transformer, whisper
+from repro.models.common import init_params, param_specs, softmax_xent
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    decls: Any
+    forward: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_decode_state: Callable
+    decode_geometry: Callable    # shape -> (cache_len, window)
+
+    # ------------------------------------------------------------------
+    def init(self, rng) -> Any:
+        return init_params(self.decls, rng)
+
+    def abstract_params(self):
+        return common.param_shapes(self.decls)
+
+    def specs(self, rules: Dict[str, Any]):
+        return param_specs(self.decls, rules)
+
+    def loss(self, params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        logits, hidden, aux = self.forward(self.cfg, params, batch)
+        targets = batch["targets"]
+        logits = logits[:, -targets.shape[1]:]
+        # exclude vocab padding from the softmax with an elementwise iota
+        # mask — a scatter here would force GSPMD to all-gather the
+        # vocab-sharded logits (§Perf iteration B1)
+        vpad, v = self.cfg.padded_vocab(), self.cfg.vocab_size
+        if vpad != v:
+            pad = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                           logits.ndim - 1) >= v
+            logits = jnp.where(pad, jnp.asarray(-1e30, logits.dtype), logits)
+        xent = softmax_xent(logits, targets, batch.get("mask"))
+        loss = xent + aux
+        return loss, {"xent": xent, "aux": aux}
+
+    # ------------------------------------------------------------------
+    def text_len(self, shape: InputShape) -> int:
+        """Tokens fed as text so total model sequence == shape.seq_len."""
+        s = shape.seq_len
+        if self.cfg.arch_type == "vlm":
+            s -= self.cfg.frontend.n_tokens
+        if self.cfg.n_meta_tokens:
+            s -= self.cfg.n_meta_tokens
+        return max(s, 8)
+
+    def batch_specs(self, shape: InputShape) -> Dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStruct stand-ins for the dry-run (no allocation)."""
+        return self._batch(shape, abstract=True)
+
+    def make_batch(self, rng, shape: InputShape) -> Dict[str, jnp.ndarray]:
+        return self._batch(shape, abstract=False, rng=rng)
+
+    def _batch(self, shape: InputShape, abstract: bool, rng=None):
+        cfg = self.cfg
+        B = shape.global_batch
+        i32 = jnp.int32
+        dt = jnp.dtype(cfg.dtype)
+
+        def toks(shp, key):
+            if abstract:
+                return jax.ShapeDtypeStruct(shp, i32)
+            return jax.random.randint(key, shp, 0, cfg.vocab_size, i32)
+
+        def dense_arr(shp, key):
+            if abstract:
+                return jax.ShapeDtypeStruct(shp, dt)
+            return jax.random.normal(key, shp, jnp.float32).astype(dt)
+
+        keys = (jax.random.split(rng, 4) if rng is not None else [None] * 4)
+        out: Dict[str, Any] = {}
+        if shape.kind in ("train", "prefill"):
+            st = self.text_len(shape)
+            out["tokens"] = toks((B, st), keys[0])
+            if shape.kind == "train":
+                out["targets"] = toks((B, st), keys[1])
+            if cfg.arch_type == "vlm":
+                out["patch_embeds"] = dense_arr(
+                    (B, cfg.frontend.n_tokens, cfg.frontend.embed_dim), keys[2])
+            if cfg.arch_type == "audio":
+                out["frames"] = dense_arr(
+                    (B, cfg.frontend.n_tokens, cfg.d_model), keys[2])
+        else:  # decode
+            out["token"] = toks((B,), keys[0])
+            if abstract:
+                out["pos"] = jax.ShapeDtypeStruct((), i32)
+            else:
+                out["pos"] = jnp.asarray(shape.seq_len - 1, i32)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# family adapters
+
+# contexts up to this length decode with the NATIVE full cache; the
+# sliding-window variant is only the documented long_500k carve-out
+NATIVE_DECODE_MAX = 131_072
+
+
+def _dense_geometry(cfg):
+    def geom(shape: InputShape):
+        if shape.kind != "decode":
+            return shape.seq_len, None
+        if (cfg.long_context_variant == "sliding"
+                and shape.seq_len > NATIVE_DECODE_MAX):
+            w = cfg.long_context_window
+            return w, w
+        return shape.seq_len, None
+    return geom
+
+
+def _build_dense(cfg: ModelConfig) -> Model:
+    geom = _dense_geometry(cfg)
+
+    def init_decode_state(batch: int, cache_len: int, abstract: bool = False):
+        return attn.init_cache(cfg, batch, cache_len, abstract=abstract)
+
+    def decode_step(cfg, params, token, state, pos, window=None):
+        return transformer.decode_step(cfg, params, token, state, pos, window=window)
+
+    return Model(cfg=cfg, decls=transformer.decls(cfg),
+                 forward=transformer.forward,
+                 prefill=transformer.prefill,
+                 decode_step=decode_step,
+                 init_decode_state=init_decode_state,
+                 decode_geometry=geom)
+
+
+def _build_rwkv(cfg: ModelConfig) -> Model:
+    def init_decode_state(batch: int, cache_len: int, abstract: bool = False):
+        st = rwkv6.init_state(cfg, batch)
+        if abstract:
+            st = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), st)
+        return st
+
+    def geom(shape: InputShape):
+        return 1, None            # O(1) recurrent state
+
+    def decode_step(cfg, params, token, state, pos, window=None):
+        return rwkv6.decode_step(cfg, params, token, state, pos)
+
+    return Model(cfg=cfg, decls=rwkv6.decls(cfg), forward=rwkv6.forward,
+                 prefill=rwkv6.prefill, decode_step=decode_step,
+                 init_decode_state=init_decode_state, decode_geometry=geom)
+
+
+def _build_hymba(cfg: ModelConfig) -> Model:
+    def init_decode_state(batch: int, cache_len: int, abstract: bool = False):
+        st = hymba.init_state(cfg, batch, cache_len)
+        if abstract:
+            st = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), st)
+        return st
+
+    def geom(shape: InputShape):
+        if shape.kind != "decode":
+            return shape.seq_len, None
+        w = cfg.sliding_window or shape.seq_len
+        return min(w, shape.seq_len), w
+
+    def decode_step(cfg, params, token, state, pos, window=None):
+        return hymba.decode_step(cfg, params, token, state, pos)
+
+    return Model(cfg=cfg, decls=hymba.decls(cfg), forward=hymba.forward,
+                 prefill=hymba.prefill, decode_step=decode_step,
+                 init_decode_state=init_decode_state, decode_geometry=geom)
+
+
+def _build_whisper(cfg: ModelConfig) -> Model:
+    def init_decode_state(batch: int, cache_len: int, abstract: bool = False):
+        self_cache = attn.init_cache(cfg, batch, cache_len, abstract=abstract)
+        f = cfg.frontend.n_tokens
+        shp = (cfg.n_layers, batch, cfg.n_heads, f, cfg.d_head)
+        dt = jnp.dtype(cfg.dtype)
+        if abstract:
+            mk = lambda: jax.ShapeDtypeStruct(shp, dt)
+        else:
+            mk = lambda: jnp.zeros(shp, dt)
+        return {"self": self_cache, "cross_k": mk(), "cross_v": mk()}
+
+    def geom(shape: InputShape):
+        return shape.seq_len, None
+
+    def decode_step(cfg, params, token, state, pos, window=None):
+        return whisper.decode_step(cfg, params, token, state, pos)
+
+    return Model(cfg=cfg, decls=whisper.decls(cfg), forward=whisper.forward,
+                 prefill=whisper.prefill, decode_step=decode_step,
+                 init_decode_state=init_decode_state, decode_geometry=geom)
+
+
+def build(cfg: ModelConfig) -> Model:
+    if cfg.arch_type in ("dense", "moe", "vlm"):
+        return _build_dense(cfg)
+    if cfg.arch_type == "ssm":
+        return _build_rwkv(cfg)
+    if cfg.arch_type == "hybrid":
+        return _build_hymba(cfg)
+    if cfg.arch_type == "audio":
+        return _build_whisper(cfg)
+    raise ValueError(cfg.arch_type)

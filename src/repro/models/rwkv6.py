@@ -1,0 +1,220 @@
+"""RWKV6 "Finch" — attention-free WKV recurrence with data-dependent decay.
+
+[arXiv:2404.05892].  Per head h with key/value dims d:
+    out_t = r_t^T (diag(u) k_t v_t^T + S_{t-1})
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T
+where w_t = exp(-exp(w0 + tanh(x_w A) B)) is the data-dependent decay.
+Token shift uses learned per-channel interpolation (ddlerp low-rank term on
+the decay path, the signature RWKV6 component).
+
+The pure ``lax.scan`` recurrence here is the reference; the chunked Pallas
+kernel lives in repro/kernels/rwkv6_scan.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import parallel
+from repro.models.common import Param, layernorm, relu_sq, stack_decls
+
+DECAY_LORA = 64
+
+
+def layer_decls(cfg) -> Dict[str, Any]:
+    d, f = cfg.d_model, cfg.d_ff
+    H, dh = cfg.n_heads, cfg.ssm.head_dim
+    assert H * dh == d
+    ln = lambda: {"scale": Param((d,), (None,), "ones"),
+                  "bias": Param((d,), (None,), "zeros")}
+    return {
+        "ln1": ln(), "ln2": ln(),
+        "tm": {
+            "mu": Param((5, d), (None, None), "small"),       # r,k,v,w,g shifts
+            "w0": Param((d,), (None,), "small"),
+            "wA": Param((d, DECAY_LORA), ("embed", None), "small"),
+            "wB": Param((DECAY_LORA, d), (None, "embed"), "small"),
+            "u": Param((H, dh), ("heads", None), "small"),
+            "Wr": Param((d, d), ("embed", "qkv")),
+            "Wk": Param((d, d), ("embed", "qkv")),
+            "Wv": Param((d, d), ("embed", "qkv")),
+            "Wg": Param((d, d), ("embed", "qkv")),
+            "Wo": Param((d, d), ("qkv", "embed")),
+            "gn_scale": Param((d,), (None,), "ones"),
+            "gn_bias": Param((d,), (None,), "zeros"),
+        },
+        "cm": {
+            "mu_k": Param((d,), (None,), "small"),
+            "mu_r": Param((d,), (None,), "small"),
+            "Wk": Param((d, f), ("embed", "mlp")),
+            "Wv": Param((f, d), ("mlp", "embed")),
+            "Wr": Param((d, d), ("embed", "embed2")),
+        },
+    }
+
+
+def decls(cfg) -> Dict[str, Any]:
+    vpad = cfg.padded_vocab()
+    return {
+        "embed": Param((vpad, cfg.d_model), ("vocab", "embed"), "embed"),
+        "ln0": {"scale": Param((cfg.d_model,), (None,), "ones"),
+                "bias": Param((cfg.d_model,), (None,), "zeros")},
+        "final_norm": {"scale": Param((cfg.d_model,), (None,), "ones"),
+                       "bias": Param((cfg.d_model,), (None,), "zeros")},
+        "lm_head": Param((cfg.d_model, vpad), ("embed", "vocab")),
+        "layers": stack_decls(layer_decls(cfg), cfg.n_layers, "layers"),
+    }
+
+
+def _group_norm(x, scale, bias, n_groups, eps=64e-5):
+    """x (..., d) grouped into n_groups."""
+    shp = x.shape
+    xg = x.reshape(shp[:-1] + (n_groups, shp[-1] // n_groups)).astype(jnp.float32)
+    mu = jnp.mean(xg, -1, keepdims=True)
+    var = jnp.var(xg, -1, keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    x = xg.reshape(shp)
+    return (x * scale + bias).astype(jnp.float32)
+
+
+def decay_from_x(tm, xw):
+    """Data-dependent decay (the RWKV6 novelty). xw (..., d) -> w in (0,1)."""
+    dt = xw.dtype
+    lora = jnp.tanh(xw @ tm["wA"].astype(dt)) @ tm["wB"].astype(dt)
+    logw = tm["w0"].astype(jnp.float32) + lora.astype(jnp.float32)
+    return jnp.exp(-jnp.exp(logw))
+
+
+def wkv_scan(r, k, v, w, u, state0):
+    """Reference WKV recurrence.  r,k,v,w: (B,T,H,dh); u: (H,dh);
+    state0: (B,H,dh,dh).  Returns out (B,T,H,dh), state_T."""
+    def step(S, xs):
+        r_t, k_t, v_t, w_t = xs          # (B,H,dh)
+        kv = k_t[..., :, None] * v_t[..., None, :]        # (B,H,dhk,dhv)
+        att = (u[None, :, :, None] * kv) + S
+        out = jnp.einsum("bhk,bhkv->bhv", r_t, att)
+        S = w_t[..., :, None] * S + kv
+        return S, out
+
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (r, k, v, w))
+    state_T, out = jax.lax.scan(step, state0.astype(jnp.float32), xs)
+    return jnp.moveaxis(out, 0, 1), state_T
+
+
+def _shift(x, x_prev):
+    """Token shift: returns tensor of previous-token values.
+    x (B,T,d); x_prev (B,d) carried state."""
+    return jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+
+
+def time_mix(cfg, tm, x, x_prev, state0):
+    """x (B,T,d). Returns (out, new_x_prev, new_state)."""
+    b, t, d = x.shape
+    H, dh = cfg.n_heads, cfg.ssm.head_dim
+    xs = _shift(x, x_prev)
+    mu = tm["mu"].astype(x.dtype)
+    xr = x + (xs - x) * mu[0]
+    xk = x + (xs - x) * mu[1]
+    xv = x + (xs - x) * mu[2]
+    xw = x + (xs - x) * mu[3]
+    xg = x + (xs - x) * mu[4]
+    dt = x.dtype
+    r = (xr @ tm["Wr"].astype(dt)).reshape(b, t, H, dh)
+    k = (xk @ tm["Wk"].astype(dt)).reshape(b, t, H, dh)
+    v = (xv @ tm["Wv"].astype(dt)).reshape(b, t, H, dh)
+    g = xg @ tm["Wg"].astype(dt)
+    w = decay_from_x(tm, xw).reshape(b, t, H, dh)
+    out, state = wkv_scan(r, k, v, w, tm["u"].astype(jnp.float32), state0)
+    out = _group_norm(out.reshape(b, t, d), tm["gn_scale"].astype(jnp.float32),
+                      tm["gn_bias"].astype(jnp.float32), H)
+    out = out.astype(dt) * jax.nn.silu(g.astype(jnp.float32)).astype(dt)
+    return out @ tm["Wo"].astype(dt), x[:, -1], state
+
+
+def channel_mix(cfg, cm, x, x_prev):
+    xs = _shift(x, x_prev)
+    dt = x.dtype
+    xk = x + (xs - x) * cm["mu_k"].astype(dt)
+    xr = x + (xs - x) * cm["mu_r"].astype(dt)
+    kk = relu_sq(xk @ cm["Wk"].astype(dt))
+    r = jax.nn.sigmoid((xr @ cm["Wr"].astype(dt)).astype(jnp.float32)).astype(dt)
+    return r * (kk @ cm["Wv"].astype(dt)), x[:, -1]
+
+
+def init_state(cfg, batch: int):
+    """Recurrent state per layer stack: WKV state + token-shift states."""
+    H, dh = cfg.n_heads, cfg.ssm.head_dim
+    L, d = cfg.n_layers, cfg.d_model
+    return {
+        "wkv": jnp.zeros((L, batch, H, dh, dh), jnp.float32),
+        "tm_x": jnp.zeros((L, batch, d), jnp.dtype(cfg.dtype)),
+        "cm_x": jnp.zeros((L, batch, d), jnp.dtype(cfg.dtype)),
+    }
+
+
+def _layer(cfg, p, x, st):
+    h = layernorm(x, p["ln1"]["scale"], p["ln1"]["bias"])
+    out, tm_x, wkv = time_mix(cfg, p["tm"], h, st["tm_x"], st["wkv"])
+    x = x + out
+    h = layernorm(x, p["ln2"]["scale"], p["ln2"]["bias"])
+    out, cm_x = channel_mix(cfg, p["cm"], h, st["cm_x"])
+    x = x + out
+    return x, {"wkv": wkv, "tm_x": tm_x, "cm_x": cm_x}
+
+
+def forward(cfg, params, batch):
+    """Training forward over full sequences. Returns (logits, hidden, aux)."""
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"].astype(jnp.dtype(cfg.dtype)), tokens, axis=0)
+    x = layernorm(x, params["ln0"]["scale"], params["ln0"]["bias"])
+    x = parallel.constrain(x, "batch", None, None)
+    b = x.shape[0]
+    st0 = init_state(cfg, b)
+    ctx = parallel.current_ctx()
+
+    def body(x, xs):
+        p_l, st_l = xs
+        x, _ = _layer(cfg, p_l, x, st_l)
+        return x, None
+
+    if ctx is not None and ctx.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, (params["layers"], st0))
+    h = layernorm(x, params["final_norm"]["scale"], params["final_norm"]["bias"])
+    logits = h @ params["lm_head"].astype(h.dtype)
+    return parallel.constrain(logits, "batch", None, "vocab"), h, jnp.float32(0)
+
+
+def prefill(cfg, params, batch, cache_len: int = 0):
+    """Returns (state, last_hidden, hidden_all); cache_len unused (O(1) state)."""
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"].astype(jnp.dtype(cfg.dtype)), tokens, axis=0)
+    x = layernorm(x, params["ln0"]["scale"], params["ln0"]["bias"])
+    b = x.shape[0]
+    st0 = init_state(cfg, b)
+
+    def body(x, xs):
+        p_l, st_l = xs
+        return _layer(cfg, p_l, x, st_l)
+
+    x, st = jax.lax.scan(body, x, (params["layers"], st0))
+    h = layernorm(x, params["final_norm"]["scale"], params["final_norm"]["bias"])
+    return st, h[:, -1], h
+
+
+def decode_step(cfg, params, token, state, pos):
+    """One-token decode: state carries WKV + shift states; O(1) in context."""
+    x = jnp.take(params["embed"].astype(jnp.dtype(cfg.dtype)), token, axis=0)
+    x = layernorm(x, params["ln0"]["scale"], params["ln0"]["bias"])
+    x = x[:, None, :]                                   # (B,1,d)
+
+    def body(x, xs):
+        p_l, st_l = xs
+        return _layer(cfg, p_l, x, st_l)
+
+    x, st = jax.lax.scan(body, x, (params["layers"], state))
+    h = layernorm(x[:, 0], params["final_norm"]["scale"], params["final_norm"]["bias"])
+    logits = h @ params["lm_head"].astype(h.dtype)
+    return logits, h, st

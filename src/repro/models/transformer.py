@@ -1,0 +1,288 @@
+"""Decoder-only transformer covering the dense / moe / vlm families.
+
+Layers are homogeneous and stacked (leading ``L`` dim) so the layer loop is a
+``lax.scan`` — compile time and HLO size are O(1) in depth, which matters for
+the 40-pair dry-run.  Optional activation checkpointing wraps the scanned
+body.  The VLM variant consumes precomputed anyres patch embeddings through a
+learned projector (vision tower stubbed per the assignment carve-out).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import parallel
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models.common import (Param, apply_norm, apply_rope, cdtype, gelu,
+                                 norm_decls, stack_decls, swiglu)
+
+
+# ---------------------------------------------------------------------------
+# Declarations
+
+def _attn_decls(cfg) -> Dict[str, Param]:
+    d, qo, kvo = cfg.d_model, cfg.attn_out_dim, cfg.kv_out_dim
+    out = {
+        "wq": Param((d, qo), ("embed", "qkv")),
+        "wk": Param((d, kvo), ("embed", "kv_qkv")),
+        "wv": Param((d, kvo), ("embed", "kv_qkv")),
+        "wo": Param((qo, d), ("qkv", "embed")),
+    }
+    if cfg.qkv_bias:
+        out["bq"] = Param((qo,), ("qkv",), "zeros")
+        out["bk"] = Param((kvo,), ("kv_qkv",), "zeros")
+        out["bv"] = Param((kvo,), ("kv_qkv",), "zeros")
+    return out
+
+
+def _mlp_decls(cfg) -> Dict[str, Param]:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp == "swiglu":
+        return {"w_gate": Param((d, f), ("embed", "mlp")),
+                "w_up": Param((d, f), ("embed", "mlp")),
+                "w_down": Param((f, d), ("mlp", "embed"))}
+    return {"w_in": Param((d, f), ("embed", "mlp")),
+            "b_in": Param((f,), ("mlp",), "zeros"),
+            "w_out": Param((f, d), ("mlp", "embed")),
+            "b_out": Param((d,), (None,), "zeros")}
+
+
+def layer_decls(cfg) -> Dict[str, Any]:
+    out = {"ln1": norm_decls(cfg), "ln2": norm_decls(cfg),
+           "attn": _attn_decls(cfg)}
+    out["mlp"] = moe_mod.moe_decls(cfg) if cfg.moe is not None else _mlp_decls(cfg)
+    return out
+
+
+def decls(cfg) -> Dict[str, Any]:
+    vpad = cfg.padded_vocab()
+    tree: Dict[str, Any] = {
+        "embed": Param((vpad, cfg.d_model), ("vocab", "embed"), "embed"),
+        "final_norm": norm_decls(cfg),
+        "layers": stack_decls(layer_decls(cfg), cfg.n_layers, "layers"),
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = Param((cfg.d_model, vpad), ("embed", "vocab"))
+    if cfg.arch_type == "vlm":
+        vd = cfg.frontend.embed_dim
+        tree["projector"] = {
+            "w1": Param((vd, cfg.d_model), (None, "embed")),
+            "b1": Param((cfg.d_model,), (None,), "zeros"),
+            "w2": Param((cfg.d_model, cfg.d_model), ("embed", "embed2")),
+            "b2": Param((cfg.d_model,), (None,), "zeros"),
+        }
+    if cfg.n_meta_tokens:
+        tree["meta_tokens"] = Param((cfg.n_meta_tokens, cfg.d_model),
+                                    (None, "embed"), "embed")
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+
+def mlp_apply(cfg, p, x):
+    dt = x.dtype
+    if cfg.mlp == "swiglu":
+        h = swiglu(x @ p["w_gate"].astype(dt), x @ p["w_up"].astype(dt))
+        return h @ p["w_down"].astype(dt)
+    h = x @ p["w_in"].astype(dt) + p["b_in"].astype(dt)
+    h = gelu(h) if cfg.mlp == "gelu" else h
+    return h @ p["w_out"].astype(dt) + p["b_out"].astype(dt)
+
+
+def _qkv(cfg, p, x):
+    dt = x.dtype
+    q = x @ p["wq"].astype(dt)
+    k = x @ p["wk"].astype(dt)
+    v = x @ p["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    return q, k, v
+
+
+def layer_prefill(cfg, p, x, positions, window: Optional[int]):
+    """x (B,S,d) -> (x', (k,v)) for the cache."""
+    b, s, d = x.shape
+    h = apply_norm(cfg, p["ln1"], x)
+    q, k, v = _qkv(cfg, p["attn"], h)
+    q = q.reshape(b, s, cfg.n_heads, cfg.d_head)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.rotary_pct)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.rotary_pct)
+    q = parallel.constrain(q, "batch", None, "heads", None)
+    o = attn.attn_prefill(q, k, v, causal=True, window=window)
+    o = o.reshape(b, s, cfg.attn_out_dim) @ p["attn"]["wo"].astype(x.dtype)
+    x = x + parallel.constrain(o, "batch", None, None)
+    h = apply_norm(cfg, p["ln2"], x)
+    if cfg.moe is not None:
+        m, aux = moe_mod.moe_block(p["mlp"], h, cfg)
+    else:
+        m, aux = mlp_apply(cfg, p["mlp"], h), jnp.float32(0)
+    x = x + parallel.constrain(m, "batch", None, None)
+    # cache entries in (B, KV, S, dh) layout
+    return x, (k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)), aux
+
+
+def layer_decode(cfg, p, x, cache_l, pos, valid):
+    """x (B,d); cache_l per-layer (B,KV,S,dh) READ-ONLY; pos (B,) absolute
+    positions; valid (B,S) masks readable cache entries (current slot
+    excluded — the new token's (k, v) attends via extra_kv and is written
+    into the cache once, outside the layer scan)."""
+    b, d = x.shape
+    h = apply_norm(cfg, p["ln1"], x[:, None, :])[:, 0]
+    q, k, v = _qkv(cfg, p["attn"], h)
+    q = q.reshape(b, cfg.n_heads, cfg.d_head)
+    k = k.reshape(b, cfg.n_kv_heads, cfg.d_head)
+    v = v.reshape(b, cfg.n_kv_heads, cfg.d_head)
+    q = apply_rope(q[:, None], pos[:, None], cfg.rope_theta, cfg.rotary_pct)[:, 0]
+    k = apply_rope(k[:, None], pos[:, None], cfg.rope_theta, cfg.rotary_pct)[:, 0]
+    o = attn.attn_decode(q, cache_l, valid, x.dtype, extra_kv=(k, v))
+    o = o.reshape(b, cfg.attn_out_dim) @ p["attn"]["wo"].astype(x.dtype)
+    x = x + o
+    h = apply_norm(cfg, p["ln2"], x[:, None, :])
+    if cfg.moe is not None:
+        m, _ = moe_mod.moe_block(p["mlp"], h, cfg)
+    else:
+        m = mlp_apply(cfg, p["mlp"], h)
+    return x + m[:, 0], (k, v)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits
+
+def embed_tokens(cfg, params, tokens):
+    e = params["embed"].astype(cdtype(cfg))
+    return jnp.take(e, tokens, axis=0)
+
+
+def logits_from_hidden(cfg, params, h):
+    dt = h.dtype
+    if cfg.tie_embeddings:
+        logits = h @ params["embed"].astype(dt).T
+    else:
+        logits = h @ params["lm_head"].astype(dt)
+    axes = ("batch",) + (None,) * (logits.ndim - 2) + ("vocab",)
+    return parallel.constrain(logits, *axes)
+
+
+def project_patches(cfg, params, patch_embeds):
+    p = params["projector"]
+    dt = cdtype(cfg)
+    h = gelu(patch_embeds.astype(dt) @ p["w1"].astype(dt) + p["b1"].astype(dt))
+    return h @ p["w2"].astype(dt) + p["b2"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Full forward passes
+
+def _scan_layers(cfg, params, x, positions, window, collect_kv: bool = True):
+    ctx = parallel.current_ctx()
+
+    def body(x, p_l):
+        x, kv, aux = layer_prefill(cfg, p_l, x, positions, window)
+        return x, ((kv, aux) if collect_kv else (None, aux))
+
+    if ctx is not None and ctx.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, (kvs, auxs) = jax.lax.scan(body, x, params["layers"])
+    return x, kvs, jnp.sum(auxs)
+
+
+def forward(cfg, params, batch) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Training/prefill forward. Returns (logits, hidden, aux_loss).
+
+    batch: {"tokens": (B, S_text)} + optional {"patch_embeds"} (vlm).
+    """
+    tokens = batch["tokens"]
+    x = embed_tokens(cfg, params, tokens)
+    prefix = []
+    if cfg.arch_type == "vlm":
+        prefix.append(project_patches(cfg, params, batch["patch_embeds"]))
+    if cfg.n_meta_tokens:
+        meta = params["meta_tokens"].astype(x.dtype)
+        prefix.append(jnp.broadcast_to(meta[None], (x.shape[0],) + meta.shape))
+    if prefix:
+        x = jnp.concatenate(prefix + [x], axis=1)
+    x = parallel.constrain(x, "batch", None, None)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x, _, aux = _scan_layers(cfg, params, x, positions, cfg.sliding_window,
+                             collect_kv=False)
+    h = apply_norm(cfg, params["final_norm"], x)
+    logits = logits_from_hidden(cfg, params, h)
+    return logits, h, aux
+
+
+def prefill(cfg, params, batch, cache_len: int):
+    """Run the prompt, build the KV cache. Returns (cache, last_hidden, h_all)."""
+    tokens = batch["tokens"]
+    x = embed_tokens(cfg, params, tokens)
+    if cfg.arch_type == "vlm" and "patch_embeds" in batch:
+        x = jnp.concatenate([project_patches(cfg, params, batch["patch_embeds"]), x], 1)
+    if cfg.n_meta_tokens:
+        meta = params["meta_tokens"].astype(x.dtype)
+        x = jnp.concatenate(
+            [jnp.broadcast_to(meta[None], (x.shape[0],) + meta.shape), x], 1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x, kvs, _ = _scan_layers(cfg, params, x, positions, cfg.sliding_window)
+    h = apply_norm(cfg, params["final_norm"], x)
+    # place prefix kv into cache of length cache_len
+    k, v = kvs                                    # (L,B,KV,S,dh)
+    cache = attn.init_cache(cfg, b, cache_len)
+    if "k_scale" in cache:
+        kq, ks = attn.quantize_kv(k)
+        vq, vs = attn.quantize_kv(v)
+        cache["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, 0, axis=3)
+        cache["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, 0, axis=3)
+        cache["k_scale"] = jax.lax.dynamic_update_slice_in_dim(cache["k_scale"], ks, 0, axis=3)
+        cache["v_scale"] = jax.lax.dynamic_update_slice_in_dim(cache["v_scale"], vs, 0, axis=3)
+    else:
+        cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), 0, axis=3)
+        cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), 0, axis=3)
+    return cache, h[:, -1], h
+
+
+def decode_step(cfg, params, token, cache, pos, *, window: Optional[int] = None):
+    """One-token decode. token (B,), pos scalar int32 (current length).
+
+    With ``window`` set, the cache is a ring buffer of size window and
+    ``slot = pos % window``; otherwise slot = pos.  Returns (logits, hidden,
+    cache).
+    """
+    b = token.shape[0]
+    x = embed_tokens(cfg, params, token)
+    s_cache = cache["k"].shape[3]
+    if window is not None:
+        # ring buffer: index i holds the most recent position p <= pos with
+        # p % window == i; readable iff that position exists AND is < pos
+        # (the pos entry is stale until the post-scan write).
+        slot = jnp.mod(pos, window)
+        idxs = jnp.arange(s_cache)
+        stored = pos - jnp.mod(pos - idxs, window)
+        valid = jnp.broadcast_to(((stored >= 0) & (stored < pos))[None],
+                                 (b, s_cache))
+    else:
+        slot = pos
+        valid = jnp.broadcast_to((jnp.arange(s_cache) < pos)[None], (b, s_cache))
+    positions = jnp.full((b,), pos, jnp.int32)
+
+    def body(x, xs):
+        p_l, cache_l = xs
+        x, kv_new = layer_decode(cfg, p_l, x, cache_l, positions, valid)
+        return x, kv_new
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache))
+    new_cache = attn.cache_write_stacked(cache, ks, vs, slot)
+    h = apply_norm(cfg, params["final_norm"], x[:, None, :])[:, 0]
+    logits = logits_from_hidden(cfg, params, h)
+    return logits, h, new_cache

@@ -1,0 +1,192 @@
+"""Whisper backbone — encoder-decoder transformer. [arXiv:2212.04356]
+
+The mel-spectrogram + conv1d frontend is a STUB per the assignment carve-out:
+``input_specs`` provides precomputed frame embeddings (B, n_frames, d_model).
+We implement the transformer: bidirectional encoder with sinusoidal
+positions, causal decoder with learned positions and cross-attention.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import parallel
+from repro.models import attention as attn
+from repro.models.common import Param, apply_norm, gelu, norm_decls, stack_decls
+from repro.models.transformer import _qkv, logits_from_hidden
+
+MAX_TARGET_POSITIONS = 32768  # decoder learned positions (extended from 448)
+
+
+def _attn_decls(cfg):
+    d, qo = cfg.d_model, cfg.attn_out_dim
+    return {"wq": Param((d, qo), ("embed", "qkv")),
+            "wk": Param((d, qo), ("embed", "kv_qkv")),
+            "wv": Param((d, qo), ("embed", "kv_qkv")),
+            "wo": Param((qo, d), ("qkv", "embed")),
+            "bq": Param((qo,), ("qkv",), "zeros"),
+            "bk": Param((qo,), ("kv_qkv",), "zeros"),
+            "bv": Param((qo,), ("kv_qkv",), "zeros")}
+
+
+def _mlp_decls(cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    return {"w_in": Param((d, f), ("embed", "mlp")),
+            "b_in": Param((f,), ("mlp",), "zeros"),
+            "w_out": Param((f, d), ("mlp", "embed")),
+            "b_out": Param((d,), (None,), "zeros")}
+
+
+def enc_layer_decls(cfg):
+    return {"ln1": norm_decls(cfg), "attn": _attn_decls(cfg),
+            "ln2": norm_decls(cfg), "mlp": _mlp_decls(cfg)}
+
+
+def dec_layer_decls(cfg):
+    return {"ln1": norm_decls(cfg), "self_attn": _attn_decls(cfg),
+            "ln2": norm_decls(cfg), "cross_attn": _attn_decls(cfg),
+            "ln3": norm_decls(cfg), "mlp": _mlp_decls(cfg)}
+
+
+def decls(cfg) -> Dict[str, Any]:
+    vpad = cfg.padded_vocab()
+    return {
+        "embed": Param((vpad, cfg.d_model), ("vocab", "embed"), "embed"),
+        "pos_embed": Param((MAX_TARGET_POSITIONS, cfg.d_model), (None, "embed"), "embed"),
+        "enc_layers": stack_decls(enc_layer_decls(cfg), cfg.n_encoder_layers, "layers"),
+        "enc_norm": norm_decls(cfg),
+        "dec_layers": stack_decls(dec_layer_decls(cfg), cfg.n_layers, "layers"),
+        "final_norm": norm_decls(cfg),
+    }
+
+
+def _sinusoid(length: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-dim * (jnp.log(10000.0) / max(d // 2 - 1, 1)))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _mha(cfg, p, xq, xkv, causal: bool) -> jnp.ndarray:
+    b, sq, d = xq.shape
+    dt = xq.dtype
+    q = (xq @ p["wq"].astype(dt) + p["bq"].astype(dt))
+    k = (xkv @ p["wk"].astype(dt) + p["bk"].astype(dt))
+    v = (xkv @ p["wv"].astype(dt) + p["bv"].astype(dt))
+    q = q.reshape(b, sq, cfg.n_heads, cfg.d_head)
+    k = k.reshape(b, xkv.shape[1], cfg.n_heads, cfg.d_head)
+    v = v.reshape(b, xkv.shape[1], cfg.n_heads, cfg.d_head)
+    o = attn.attn_prefill(q, k, v, causal=causal)
+    return o.reshape(b, sq, cfg.attn_out_dim) @ p["wo"].astype(dt)
+
+
+def _mlp(cfg, p, x):
+    dt = x.dtype
+    h = gelu(x @ p["w_in"].astype(dt) + p["b_in"].astype(dt))
+    return h @ p["w_out"].astype(dt) + p["b_out"].astype(dt)
+
+
+def encode(cfg, params, frames) -> jnp.ndarray:
+    """frames (B, n_frames, d_model) from the stubbed conv frontend."""
+    dt = jnp.dtype(cfg.dtype)
+    x = frames.astype(dt) + _sinusoid(frames.shape[1], cfg.d_model).astype(dt)[None]
+    x = parallel.constrain(x, "batch", None, None)
+
+    def body(x, p_l):
+        h = apply_norm(cfg, p_l["ln1"], x)
+        x = x + _mha(cfg, p_l["attn"], h, h, causal=False)
+        h = apply_norm(cfg, p_l["ln2"], x)
+        return x + _mlp(cfg, p_l["mlp"], h), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return apply_norm(cfg, params["enc_norm"], x)
+
+
+def forward(cfg, params, batch):
+    """Teacher-forced training forward. batch: frames (B,F,d), tokens (B,S)."""
+    enc = encode(cfg, params, batch["frames"])
+    tokens = batch["tokens"]
+    dt = jnp.dtype(cfg.dtype)
+    b, s = tokens.shape
+    x = jnp.take(params["embed"].astype(dt), tokens, axis=0)
+    x = x + params["pos_embed"][:s].astype(dt)[None]
+    x = parallel.constrain(x, "batch", None, None)
+    ctx = parallel.current_ctx()
+
+    def body(x, p_l):
+        h = apply_norm(cfg, p_l["ln1"], x)
+        x = x + _mha(cfg, p_l["self_attn"], h, h, causal=True)
+        h = apply_norm(cfg, p_l["ln2"], x)
+        x = x + _mha(cfg, p_l["cross_attn"], h, enc, causal=False)
+        h = apply_norm(cfg, p_l["ln3"], x)
+        return x + _mlp(cfg, p_l["mlp"], h), None
+
+    if ctx is not None and ctx.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    h = apply_norm(cfg, params["final_norm"], x)
+    logits = h @ params["embed"].astype(h.dtype).T     # tied embeddings
+    return parallel.constrain(logits, "batch", None, "vocab"), h, jnp.float32(0)
+
+
+# ---------------------------------------------------------------------------
+# Serving: cross-KV computed once at prefill; decoder self-cache grows.
+
+def prefill(cfg, params, batch, cache_len: int):
+    enc = encode(cfg, params, batch["frames"])
+    b = enc.shape[0]
+    dt = jnp.dtype(cfg.dtype)
+
+    def cross_kv(carry, p_l):
+        k = (enc @ p_l["cross_attn"]["wk"].astype(dt) + p_l["cross_attn"]["bk"].astype(dt))
+        v = (enc @ p_l["cross_attn"]["wv"].astype(dt) + p_l["cross_attn"]["bv"].astype(dt))
+        f = enc.shape[1]
+        return carry, (k.reshape(b, f, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3),
+                       v.reshape(b, f, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3))
+
+    _, (ck, cv) = jax.lax.scan(cross_kv, 0, params["dec_layers"])
+    self_cache = attn.init_cache(cfg, b, cache_len)
+    state = {"self": self_cache, "cross_k": ck, "cross_v": cv}
+    # run BOS through decode to produce the first hidden
+    return state, None, enc
+
+
+def decode_step(cfg, params, token, state, pos):
+    b = token.shape[0]
+    dt = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"].astype(dt), token, axis=0)
+    x = x + jnp.take(params["pos_embed"].astype(dt), jnp.full((b,), pos), axis=0)
+    s_cache = state["self"]["k"].shape[3]
+    valid = jnp.broadcast_to((jnp.arange(s_cache) < pos)[None], (b, s_cache))
+
+    def body(x, xs):
+        p_l, cache_l, ck_l, cv_l = xs
+        h = apply_norm(cfg, p_l["ln1"], x[:, None, :])[:, 0]
+        pa = p_l["self_attn"]
+        q = (h @ pa["wq"].astype(dt) + pa["bq"].astype(dt)).reshape(b, cfg.n_heads, cfg.d_head)
+        k = (h @ pa["wk"].astype(dt) + pa["bk"].astype(dt)).reshape(b, cfg.n_heads, cfg.d_head)
+        v = (h @ pa["wv"].astype(dt) + pa["bv"].astype(dt)).reshape(b, cfg.n_heads, cfg.d_head)
+        o = attn.attn_decode(q, cache_l, valid, x.dtype, extra_kv=(k, v))
+        x = x + o.reshape(b, cfg.attn_out_dim) @ pa["wo"].astype(dt)
+        # cross attention against precomputed enc KV
+        h = apply_norm(cfg, p_l["ln2"], x[:, None, :])[:, 0]
+        pc = p_l["cross_attn"]
+        q = (h @ pc["wq"].astype(dt) + pc["bq"].astype(dt)).reshape(b, cfg.n_heads, cfg.d_head)
+        f = ck_l.shape[2]
+        cvalid = jnp.ones((b, f), bool)
+        o = attn.attn_decode(q, {"k": ck_l, "v": cv_l}, cvalid, x.dtype)
+        x = x + o.reshape(b, cfg.attn_out_dim) @ pc["wo"].astype(dt)
+        h = apply_norm(cfg, p_l["ln3"], x[:, None, :])[:, 0]
+        x = x + _mlp(cfg, p_l["mlp"], h)
+        return x, (k, v)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["dec_layers"], state["self"], state["cross_k"], state["cross_v"]))
+    self_cache = attn.cache_write_stacked(state["self"], ks, vs, pos)
+    h = apply_norm(cfg, params["final_norm"], x[:, None, :])[:, 0]
+    logits = h @ params["embed"].astype(h.dtype).T
+    state = {"self": self_cache, "cross_k": state["cross_k"], "cross_v": state["cross_v"]}
+    return logits, h, state

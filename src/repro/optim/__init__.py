@@ -1,0 +1,3 @@
+from repro.optim.adam import Adam, AdamState, cosine_schedule, global_norm
+
+__all__ = ["Adam", "AdamState", "cosine_schedule", "global_norm"]

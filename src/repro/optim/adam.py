@@ -1,0 +1,75 @@
+"""Optimizers from scratch (no optax): Adam(W) + gradient clipping + schedules.
+
+API mirrors optax minimally: ``opt.init(params)``, ``opt.update(grads, state,
+params) -> (updates, state)`` where ``params + updates`` is the step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+@dataclasses.dataclass(frozen=True)
+class Adam:
+    lr: Any = 1e-3                    # float or callable(step) -> float
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: Optional[float] = 1.0
+
+    def init(self, params) -> AdamState:
+        z = lambda: jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamState(jnp.zeros((), jnp.int32), z(), z())
+
+    def update(self, grads, state: AdamState, params=None):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.clip_norm is not None:
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gn, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        step = state.step + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        mu = jax.tree.map(lambda m, g: self.b1 * m + (1 - self.b1) * g,
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: self.b2 * v + (1 - self.b2) * g * g,
+                          state.nu, grads)
+        bc1 = 1 - self.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(m, v, p):
+            u = -(lr * (m / bc1) / (jnp.sqrt(v / bc2) + self.eps))
+            if self.weight_decay and p is not None:
+                u = u - lr * self.weight_decay * p.astype(jnp.float32)
+            return u.astype(p.dtype if p is not None else u.dtype)
+
+        if params is None:
+            updates = jax.tree.map(lambda m, v: upd(m, v, None), mu, nu)
+        else:
+            updates = jax.tree.map(upd, mu, nu, params)
+        return updates, AdamState(step, mu, nu)
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1) -> Callable:
+    def lr(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr

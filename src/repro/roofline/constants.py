@@ -1,0 +1,5 @@
+"""TPU v5e hardware constants for the roofline model (per chip)."""
+
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_LINK_BW = 50e9              # bytes/s per link (~ICI); DCN pod axis slower

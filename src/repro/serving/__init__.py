@@ -1,0 +1,8 @@
+from repro.serving.engine import (ProbeState, ServeConfig, ServeResult,
+                                  ServingEngine, extract_trajectories,
+                                  init_probe_state, make_serve_step,
+                                  probe_update)
+
+__all__ = ["ProbeState", "ServeConfig", "ServeResult", "ServingEngine",
+           "extract_trajectories", "init_probe_state", "make_serve_step",
+           "probe_update"]

@@ -1,0 +1,207 @@
+"""Batched serving engine with ORCA risk-controlled early stopping.
+
+The paper's technique is a first-class serving feature here: ``serve_step``
+fuses one decode step of the base model with the ORCA probe — step-embedding
+accumulation (mean-pooled hidden states over ``tokens_per_step`` tokens),
+score-then-update fast-weight dynamics (Algorithm 2 lines 8-16), rolling
+smoothing and the calibrated threshold test.  Sequences freeze once stopped
+(their compute is saved; in a production continuous-batching server they
+would be evicted and replaced — here the batch simply runs until all stop).
+
+This same ``serve_step`` is what the decode-shape dry-runs lower to the
+production mesh: the deployed procedure (model + adaptation + stopping) is
+exactly what gets calibrated, per the paper's validity argument.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import probe as P
+from repro.core.probe import ProbeConfig
+from repro.models.registry import Model
+
+
+class ProbeState(NamedTuple):
+    """Vectorized fast-weight + smoothing state for a batch of sequences."""
+    W: jnp.ndarray          # (B, f)
+    b: jnp.ndarray          # (B,)
+    hid_sum: jnp.ndarray    # (B, d_phi) accumulating the current step
+    tok_count: jnp.ndarray  # (B,) tokens into the current step
+    ring: jnp.ndarray       # (B, window) last raw scores
+    n_scores: jnp.ndarray   # (B,) number of scores emitted
+    smoothed: jnp.ndarray   # (B,) current smoothed score
+    stopped: jnp.ndarray    # (B,) bool
+    stop_step: jnp.ndarray  # (B,) reasoning step at which stopped (-1 active)
+
+
+def init_probe_state(pc: ProbeConfig, theta, batch: int,
+                     d_phi: int) -> ProbeState:
+    f = pc.feat_dim
+    return ProbeState(
+        W=jnp.broadcast_to(theta["W0"], (batch, f)).astype(jnp.float32),
+        b=jnp.broadcast_to(theta["b0"], (batch,)).astype(jnp.float32),
+        hid_sum=jnp.zeros((batch, d_phi), jnp.float32),
+        tok_count=jnp.zeros((batch,), jnp.int32),
+        ring=jnp.zeros((batch, pc.smooth_window), jnp.float32),
+        n_scores=jnp.zeros((batch,), jnp.int32),
+        smoothed=jnp.zeros((batch,), jnp.float32),
+        stopped=jnp.zeros((batch,), bool),
+        stop_step=jnp.full((batch,), -1, jnp.int32),
+    )
+
+
+def probe_update(pc: ProbeConfig, theta, st: ProbeState, hidden: jnp.ndarray,
+                 lam: float, tokens_per_step: int, burn_in: int) -> ProbeState:
+    """Accumulate one token's hidden state; at step boundaries run the
+    score-then-update protocol and the threshold stopping test."""
+    hid_sum = st.hid_sum + hidden.astype(jnp.float32)
+    tok_count = st.tok_count + 1
+    boundary = (tok_count >= tokens_per_step) & ~st.stopped
+
+    phi = hid_sum / jnp.maximum(tok_count, 1)[:, None]
+    zq, zk = P.features(pc, theta, phi)
+    # per-sequence fast weights: s_t = sigma(W_i . z_i + b_i), uses W_{t-1}
+    s = jax.nn.sigmoid(jnp.sum(zq * st.W, axis=-1) + st.b)      # (B,)
+    # rolling smoothing
+    ring = jnp.where(boundary[:, None],
+                     jnp.concatenate([st.ring[:, 1:], s[:, None]], axis=1),
+                     st.ring)
+    n_scores = st.n_scores + boundary.astype(jnp.int32)
+    w = pc.smooth_window
+    denom = jnp.minimum(n_scores, w).astype(jnp.float32)
+    smoothed = jnp.where(n_scores > 0,
+                         jnp.sum(ring, axis=1) / jnp.maximum(denom, 1.0),
+                         0.0)
+    # stopping decision (Algorithm 2 line 11), after the burn-in
+    stop_now = boundary & (smoothed >= lam) & (n_scores > burn_in)
+    stopped = st.stopped | stop_now
+    stop_step = jnp.where(stop_now & (st.stop_step < 0), n_scores, st.stop_step)
+    # inner-loop update with pseudo-target C_t = 0 (only while not stopped)
+    gW, gb = jax.vmap(lambda fast, z: P.brier_grad(fast, z, 0.0),
+                      in_axes=((0, 0), 0))((st.W, st.b), zk)
+    eta = P.inner_lr(pc, theta)
+    upd = (boundary & ~stopped).astype(jnp.float32)
+    W = st.W - eta * upd[:, None] * gW
+    b = st.b - eta * upd * gb
+    # reset accumulators at boundaries
+    hid_sum = jnp.where(boundary[:, None], 0.0, hid_sum)
+    tok_count = jnp.where(boundary, 0, tok_count)
+    return ProbeState(W, b, hid_sum, tok_count, ring, n_scores, smoothed,
+                      stopped, stop_step)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    tokens_per_step: int = 16     # tokens per "reasoning step" for phi_t
+    max_new_tokens: int = 256
+    lam: float = 0.9              # LTT-calibrated threshold lambda*
+    burn_in: int = 10             # steps before stopping is allowed
+    greedy: bool = True
+
+
+def make_serve_step(model: Model, pc: ProbeConfig, cfg: ServeConfig,
+                    window: Optional[int] = None):
+    """Build the fused decode+ORCA step:
+    (params, theta, token, cache, pos, probe_state) ->
+    (next_token, cache, probe_state)."""
+    mcfg = model.cfg
+
+    def serve_step(params, theta, token, cache, pos, st: ProbeState):
+        logits, hidden, cache = model.decode_step(mcfg, params, token, cache,
+                                                  pos, window=window)
+        st = probe_update(pc, theta, st, hidden, cfg.lam,
+                          cfg.tokens_per_step, cfg.burn_in)
+        nxt = jnp.argmax(logits[:, :mcfg.vocab_size], axis=-1).astype(jnp.int32)
+        # frozen sequences keep emitting their last token (no-op compute slot)
+        nxt = jnp.where(st.stopped, token, nxt)
+        return nxt, cache, st
+
+    return serve_step
+
+
+@dataclasses.dataclass
+class ServeResult:
+    tokens: np.ndarray        # (B, max_new_tokens)
+    stop_step: np.ndarray     # (B,) reasoning step at stop (-1 = budget)
+    steps_run: np.ndarray     # (B,) reasoning steps actually executed
+    savings: float
+    scores: np.ndarray        # (B, n_steps) smoothed score at each step
+    phis: np.ndarray          # (B, n_steps, d_phi) step embeddings
+
+
+class ServingEngine:
+    """Minimal batched server: prefill once, loop the fused serve_step."""
+
+    def __init__(self, model: Model, params, pc: ProbeConfig, theta,
+                 cfg: ServeConfig):
+        self.model, self.params, self.pc, self.theta, self.cfg = \
+            model, params, pc, theta, cfg
+
+    def serve(self, batch: Dict[str, jnp.ndarray], prompt_len: int,
+              cache_len: Optional[int] = None) -> ServeResult:
+        model, cfg = self.model, self.cfg
+        mcfg = model.cfg
+        B = next(iter(batch.values())).shape[0]
+        n_total = prompt_len + cfg.max_new_tokens
+        cache_len = cache_len or n_total
+        state, last_h, _ = model.prefill(mcfg, self.params, batch, cache_len)
+        step_fn = jax.jit(make_serve_step(model, self.pc, cfg))
+        st = init_probe_state(self.pc, self.theta, B, mcfg.d_model)
+        token = jnp.zeros((B,), jnp.int32)
+        toks, scores, phis = [], [], []
+        pos0 = prompt_len if mcfg.arch_type != "audio" else 0
+        for i in range(cfg.max_new_tokens):
+            pos = jnp.asarray(pos0 + i, jnp.int32)
+            prev_n = st.n_scores
+            token, state, st = step_fn(self.params, self.theta, token, state,
+                                       pos, st)
+            toks.append(np.asarray(token))
+            if int(np.asarray(jnp.max(st.n_scores))) > int(np.asarray(jnp.max(prev_n))):
+                scores.append(np.asarray(st.smoothed))
+            if bool(np.asarray(jnp.all(st.stopped))):
+                break
+        stop_step = np.asarray(st.stop_step)
+        n_steps = int(np.asarray(jnp.max(st.n_scores)))
+        steps_run = np.where(stop_step >= 0, stop_step,
+                             np.asarray(st.n_scores))
+        total = max(cfg.max_new_tokens // cfg.tokens_per_step, 1)
+        savings = float(np.mean(1.0 - steps_run / total))
+        return ServeResult(
+            tokens=np.stack(toks, axis=1) if toks else np.zeros((B, 0), np.int32),
+            stop_step=stop_step, steps_run=steps_run, savings=savings,
+            scores=np.stack(scores, axis=1) if scores else np.zeros((B, 0)),
+            phis=np.zeros((B, 0, mcfg.d_model)))
+
+
+def extract_trajectories(model: Model, params, batch, prompt_len: int,
+                         max_new_tokens: int, tokens_per_step: int,
+                         cache_len: Optional[int] = None):
+    """Run the model WITHOUT stopping and harvest step embeddings phi_t —
+    the trajectory source for meta-training probes on a real model."""
+    mcfg = model.cfg
+    B = next(iter(batch.values())).shape[0]
+    cache_len = cache_len or (prompt_len + max_new_tokens)
+    state, _, _ = model.prefill(mcfg, params, batch, cache_len)
+    token = jnp.zeros((B,), jnp.int32)
+    step_fn = jax.jit(functools.partial(model.decode_step, mcfg))
+    pos0 = prompt_len if mcfg.arch_type != "audio" else 0
+    phis, acc, cnt = [], jnp.zeros((B, mcfg.d_model), jnp.float32), 0
+    tokens = []
+    for i in range(max_new_tokens):
+        pos = jnp.asarray(pos0 + i, jnp.int32)
+        logits, hidden, state = step_fn(params, token, state, pos)
+        token = jnp.argmax(logits[:, :mcfg.vocab_size], -1).astype(jnp.int32)
+        tokens.append(np.asarray(token))
+        acc = acc + hidden.astype(jnp.float32)
+        cnt += 1
+        if cnt == tokens_per_step:
+            phis.append(np.asarray(acc / cnt))
+            acc, cnt = jnp.zeros_like(acc), 0
+    return (np.stack(phis, axis=1) if phis else np.zeros((B, 0, mcfg.d_model)),
+            np.stack(tokens, axis=1))

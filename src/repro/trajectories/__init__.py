@@ -1,0 +1,7 @@
+from repro.trajectories.synthetic import (DISTRIBUTIONS, TrajectorySet,
+                                          TrajectoryDistribution,
+                                          corpus_splits, generate,
+                                          ood_benchmark)
+
+__all__ = ["DISTRIBUTIONS", "TrajectorySet", "TrajectoryDistribution",
+           "corpus_splits", "generate", "ood_benchmark"]

@@ -1,0 +1,104 @@
+"""Per-architecture smoke tests on REDUCED variants (CPU).
+
+Every assigned architecture must (a) instantiate a reduced config of the same
+family (2 layers, d_model<=512, <=4 experts), (b) run one forward/train step,
+(c) run prefill + a few decode steps, asserting output shapes and no NaNs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, InputShape, get_config
+from repro.models import build
+
+SMOKE_TRAIN = InputShape("smoke_train", 64, 2, "train")
+
+
+@pytest.fixture(scope="module", params=ARCH_IDS)
+def arch(request):
+    cfg = get_config(request.param).reduced()
+    return build(cfg)
+
+
+def test_full_config_matches_assignment(arch):
+    full = get_config(arch.cfg.name)
+    assert full.arch_type in ("dense", "moe", "ssm", "hybrid", "vlm", "audio")
+    # reduced invariants from the assignment
+    assert arch.cfg.n_layers == 2
+    assert arch.cfg.d_model <= 512
+    if arch.cfg.moe is not None:
+        assert arch.cfg.moe.n_experts <= 4
+
+
+def test_forward_and_loss(arch):
+    rng = jax.random.PRNGKey(0)
+    params = arch.init(rng)
+    batch = arch.make_batch(jax.random.PRNGKey(1), SMOKE_TRAIN)
+    loss, metrics = arch.loss(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), f"{arch.cfg.name}: loss={loss}"
+    logits, hidden, aux = arch.forward(arch.cfg, params, batch)
+    assert logits.shape[-1] == arch.cfg.padded_vocab()
+    assert hidden.shape[-1] == arch.cfg.d_model
+    assert np.isfinite(np.asarray(hidden, np.float32)).all()
+
+
+def test_train_step_improves(arch):
+    """One SGD step on the smoke batch must reduce the loss (gradients flow)."""
+    rng = jax.random.PRNGKey(0)
+    params = arch.init(rng)
+    batch = arch.make_batch(jax.random.PRNGKey(1), SMOKE_TRAIN)
+
+    def lf(p):
+        return arch.loss(p, batch)[0]
+
+    l0, grads = jax.value_and_grad(lf)(params)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0
+    params2 = jax.tree.map(lambda p, g: p - 2e-2 * g.astype(p.dtype) /
+                           (gnorm.astype(p.dtype) + 1e-6), params, grads)
+    l1 = lf(params2)
+    assert float(l1) < float(l0), f"{arch.cfg.name}: {l0} -> {l1}"
+
+
+def test_prefill_decode(arch):
+    rng = jax.random.PRNGKey(0)
+    params = arch.init(rng)
+    cfg = arch.cfg
+    B, S_prompt, cache_len = 2, 16, 32
+    shape = InputShape("smoke_prefill", S_prompt + (cfg.frontend.n_tokens if
+                       cfg.arch_type in ("vlm",) else 0) + cfg.n_meta_tokens,
+                       B, "prefill")
+    batch = arch.make_batch(jax.random.PRNGKey(1), shape)
+    state, last_h, h_all = arch.prefill(cfg, params, batch, cache_len)
+    if last_h is not None:
+        assert last_h.shape == (B, cfg.d_model)
+        assert np.isfinite(np.asarray(last_h, np.float32)).all()
+    # a few decode steps
+    tok = jnp.zeros((B,), jnp.int32)
+    prompt_len = shape.seq_len if cfg.arch_type != "audio" else 0
+    cache_len_g, window = arch.decode_geometry(
+        InputShape("d", cache_len, B, "decode"))
+    for i in range(3):
+        pos = jnp.asarray(prompt_len + i, jnp.int32)
+        logits, hidden, state = arch.decode_step(cfg, params, tok, state, pos,
+                                                 window=window)
+        assert logits.shape == (B, cfg.padded_vocab())
+        assert hidden.shape == (B, cfg.d_model)
+        assert np.isfinite(np.asarray(hidden, np.float32)).all(), cfg.name
+        tok = jnp.argmax(logits[:, :cfg.vocab_size], -1).astype(jnp.int32)
+
+
+def test_divisibility_for_model_axis(arch):
+    """Full-scale sharding invariants: TP dims divisible by the 16-way model
+    axis, experts divisible too (checked on the FULL config)."""
+    cfg = get_config(arch.cfg.name)
+    assert cfg.d_ff % 16 == 0
+    assert (cfg.n_heads * cfg.d_head) % 16 == 0
+    assert (cfg.n_kv_heads * cfg.d_head) % 16 == 0
+    assert cfg.d_model % 16 == 0
+    assert cfg.padded_vocab() % 256 == 0
+    if cfg.moe is not None:
+        assert cfg.moe.n_experts % 16 == 0

@@ -1,0 +1,141 @@
+"""Tests for the TTT probe: inner-loop math, outer meta-training, variants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import probe as P
+from repro.core import ttt
+from repro.core.probe import ProbeConfig
+from repro.optim import Adam
+from repro.trajectories import corpus_splits
+
+
+def _phis(rng, t=12, d=8):
+    return jax.random.normal(rng, (t, d), jnp.float32)
+
+
+def test_score_then_update_protocol():
+    """s_t must use W_{t-1} (scores computed BEFORE the step's update)."""
+    pc = ProbeConfig(d_phi=4, eta=0.5)
+    theta = P.init_outer(pc, jax.random.PRNGKey(0))
+    phis = _phis(jax.random.PRNGKey(1), t=3, d=4)
+    out = ttt.inner_unroll(pc, theta, phis)
+    # manual step 1: score with W0
+    z = np.asarray(phis, np.float64)
+    W = np.asarray(theta["W0"], np.float64)
+    b = float(theta["b0"])
+    s0 = 1 / (1 + np.exp(-(z[0] @ W + b)))
+    assert float(out.scores[0]) == pytest.approx(s0, rel=1e-5)
+    # manual inner update with C=0 then score step 2
+    coeff = 2 * s0 * s0 * (1 - s0)
+    W1 = W - 0.5 * coeff * z[0]
+    b1 = b - 0.5 * coeff
+    s1 = 1 / (1 + np.exp(-(z[1] @ W1 + b1)))
+    assert float(out.scores[1]) == pytest.approx(s1, rel=1e-5)
+
+
+def test_inner_update_matches_autodiff():
+    """The analytic Brier gradient equals jax.grad of the loss."""
+    pc = ProbeConfig(d_phi=6)
+    theta = P.init_outer(pc, jax.random.PRNGKey(0))
+    z = jax.random.normal(jax.random.PRNGKey(1), (6,))
+    c = 1.0
+    fast = (theta["W0"], theta["b0"])
+    gW, gb = P.brier_grad(fast, z, c)
+
+    def loss(fast):
+        return jnp.square(P.score(fast, z) - c)
+
+    aW, ab = jax.grad(loss)(fast)
+    np.testing.assert_allclose(np.asarray(gW), np.asarray(aW), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(ab), rtol=1e-5)
+
+
+def test_mask_freezes_updates_and_eta_zero_is_static():
+    pc0 = ProbeConfig(d_phi=4, eta=0.0)
+    theta = P.init_outer(pc0, jax.random.PRNGKey(0))
+    phis = _phis(jax.random.PRNGKey(2), t=8, d=4)
+    out = ttt.inner_unroll(pc0, theta, phis)
+    # eta=0: all weights stay at W0 -> scores are the static probe's
+    zq, _ = P.features(pc0, theta, phis)
+    s_static = P.score((theta["W0"], theta["b0"]), zq)
+    np.testing.assert_allclose(np.asarray(out.scores), np.asarray(s_static),
+                               rtol=1e-6)
+    # masked-out steps do not change the weights
+    pc = ProbeConfig(d_phi=4, eta=0.3)
+    m0 = jnp.zeros((8,))
+    out_frozen = ttt.inner_unroll(pc, theta, phis, mask=m0)
+    np.testing.assert_allclose(np.asarray(out_frozen.fast_final[0]),
+                               np.asarray(theta["W0"]), rtol=1e-6)
+
+
+@pytest.mark.parametrize("variant_kwargs", [
+    dict(variant="noqk"),
+    dict(variant="qk", d_h=16),
+    dict(variant="qk", d_h=16, layernorm=True),
+    dict(variant="qk", d_h=16, layernorm=True, residual=True),
+    dict(variant="qk", d_h=16, shared_qk=True),
+    dict(variant="qk", d_h=16, mlp=True),
+    dict(variant="qk", d_h=16, learnable_eta=True),
+])
+def test_all_variants_train_and_score(variant_kwargs):
+    pc = ProbeConfig(d_phi=12, **variant_kwargs)
+    theta = P.init_outer(pc, jax.random.PRNGKey(0))
+    phis = jax.random.normal(jax.random.PRNGKey(1), (4, 10, 12))
+    labels = (jax.random.uniform(jax.random.PRNGKey(2), (4, 10)) > 0.5).astype(jnp.float32)
+    mask = jnp.ones((4, 10))
+    loss, grads = jax.value_and_grad(
+        lambda th: ttt.outer_loss(pc, th, phis, labels, mask))(theta)
+    assert np.isfinite(float(loss))
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+    s = ttt.deployed_scores(pc, theta, phis, mask)
+    assert s.shape == (4, 10)
+    assert ((np.asarray(s) >= 0) & (np.asarray(s) <= 1)).all()
+
+
+def test_outer_training_reduces_loss():
+    train, _, _ = corpus_splits(80, 10, 10, d_phi=32, seed=0)
+    pc = ProbeConfig(d_phi=32, eta=0.01)
+    theta = P.init_outer(pc, jax.random.PRNGKey(0))
+    opt = Adam(lr=1e-2, clip_norm=1.0)
+    from repro.core.labels import supervised_labels
+    labels = supervised_labels(train.correct, train.mask)
+    theta2, hist = ttt.meta_train(
+        pc, theta, opt, jnp.asarray(train.phis), jnp.asarray(labels),
+        jnp.asarray(train.mask), epochs=5, batch_size=40,
+        rng=jax.random.PRNGKey(1))
+    assert hist[-1]["loss"] < hist[0]["loss"]
+
+
+def test_smoothing_window():
+    s = jnp.asarray([[1.0, 0.0, 1.0, 0.0, 1.0]])
+    sm = P.smooth_scores(s, 2)
+    np.testing.assert_allclose(np.asarray(sm)[0], [1.0, 0.5, 0.5, 0.5, 0.5])
+    sm1 = P.smooth_scores(s, 1)
+    np.testing.assert_allclose(np.asarray(sm1), np.asarray(s))
+
+
+@given(st.integers(1, 12))
+@settings(max_examples=10, deadline=None)
+def test_smoothing_is_causal(w):
+    rs = np.random.RandomState(0)
+    a = rs.rand(1, 20).astype(np.float32)
+    b = a.copy()
+    b[0, 15:] = 9.0  # future change
+    sa = np.asarray(P.smooth_scores(jnp.asarray(a), w))
+    sb = np.asarray(P.smooth_scores(jnp.asarray(b), w))
+    np.testing.assert_allclose(sa[0, :15], sb[0, :15], rtol=1e-6)
+
+
+def test_bptt_truncation_still_trains():
+    pc = ProbeConfig(d_phi=8, bptt_truncation=4)
+    theta = P.init_outer(pc, jax.random.PRNGKey(0))
+    phis = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 8))
+    labels = jnp.concatenate([jnp.zeros((2, 8)), jnp.ones((2, 8))], axis=1)
+    loss, grads = jax.value_and_grad(
+        lambda th: ttt.outer_loss(pc, th, phis, labels))(theta)
+    assert np.isfinite(float(loss))
+    assert float(jnp.sum(jnp.abs(grads["W0"]))) > 0

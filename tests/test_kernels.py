@@ -1,0 +1,164 @@
+"""Per-kernel allclose tests: Pallas (interpret=True on CPU) vs pure-jnp
+oracle, swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (flash_attention, flash_decode, make_unroll_kernel,
+                           ttt_probe_scan, wkv_scan)
+from repro.kernels import ref as R
+from repro.core.probe import ProbeConfig
+from repro.core import ttt
+
+
+# ---------------------------------------------------------------------------
+# TTT probe fused scan
+
+@pytest.mark.parametrize("n,t,f", [(2, 16, 128), (3, 40, 256), (1, 130, 128)])
+def test_ttt_probe_scan_matches_ref(n, t, f):
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    zq = jax.random.normal(ks[0], (n, t, f))
+    zk = jax.random.normal(ks[1], (n, t, f))
+    c = (jax.random.uniform(ks[2], (n, t)) > 0.5).astype(jnp.float32)
+    m = jnp.ones((n, t))
+    w0 = jax.random.normal(ks[3], (f,)) / np.sqrt(f)
+    b0 = jnp.asarray(0.3)
+    eta = jnp.asarray(0.01)
+    s, wf, bf = ttt_probe_scan(zq, zk, c, m, w0, b0, eta, t_chunk=32)
+    s_r, wf_r, bf_r = R.ttt_probe_ref(zq, zk, c, m, w0, b0, eta)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_r), rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(wf), np.asarray(wf_r), rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(bf), np.asarray(bf_r), rtol=2e-4, atol=2e-5)
+
+
+def test_ttt_probe_scan_respects_mask():
+    n, t, f = 2, 24, 128
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    zq = jax.random.normal(ks[0], (n, t, f))
+    m = jnp.concatenate([jnp.ones((n, 12)), jnp.zeros((n, 12))], axis=1)
+    w0 = jax.random.normal(ks[1], (f,)) / np.sqrt(f)
+    _, wf, _ = ttt_probe_scan(zq, zq, jnp.zeros((n, t)), m, w0,
+                              jnp.asarray(0.0), jnp.asarray(0.05), t_chunk=8)
+    _, wf_r, _ = R.ttt_probe_ref(zq, zq, jnp.zeros((n, t)), m, w0,
+                                 jnp.asarray(0.0), jnp.asarray(0.05))
+    np.testing.assert_allclose(np.asarray(wf), np.asarray(wf_r), rtol=1e-4)
+
+
+def test_ttt_kernel_plugs_into_core_unroll():
+    """The kernel is a drop-in for the core inner loop at deployment."""
+    pc = ProbeConfig(d_phi=128)
+    from repro.core.probe import init_outer
+    theta = init_outer(pc, jax.random.PRNGKey(0))
+    phis = jax.random.normal(jax.random.PRNGKey(1), (3, 20, 128))
+    mask = jnp.ones((3, 20))
+    s_core = ttt.deployed_scores(pc, theta, phis, mask)
+    s_kern = ttt.deployed_scores(pc, theta, phis, mask,
+                                 kernel=make_unroll_kernel(t_chunk=16))
+    np.testing.assert_allclose(np.asarray(s_core), np.asarray(s_kern),
+                               rtol=2e-4, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (prefill)
+
+@pytest.mark.parametrize("b,sq,sk,h,kv,d", [
+    (1, 128, 128, 4, 4, 64),     # MHA
+    (2, 128, 128, 8, 2, 64),     # GQA
+    (1, 256, 256, 4, 1, 128),    # MQA, larger head
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(b, sq, sk, h, kv, d, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, sq, h, d)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, sk, kv, d)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, sk, kv, d)).astype(dtype)
+    out = flash_attention(q, k, v, causal=True, bq=64, bk=64)
+    ref = R.flash_attention_ref(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=tol, atol=tol)
+
+
+def test_flash_attention_sliding_window():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (1, 128, 4, 64))
+    k = jax.random.normal(ks[1], (1, 128, 4, 64))
+    v = jax.random.normal(ks[2], (1, 128, 4, 64))
+    out = flash_attention(q, k, v, causal=True, window=32, bq=32, bk=32)
+    ref = R.flash_attention_ref(q, k, v, causal=True, window=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Flash decode
+
+@pytest.mark.parametrize("b,h,kv,s,d", [
+    (2, 8, 8, 512, 64), (2, 8, 2, 1024, 64), (1, 16, 4, 2048, 128)])
+def test_flash_decode_matches_ref(b, h, kv, s, d):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, h, d))
+    k = jax.random.normal(ks[1], (b, kv, s, d))
+    v = jax.random.normal(ks[2], (b, kv, s, d))
+    # partially filled cache: positions >= fill are invalid
+    fill = s // 2 + 3
+    valid = jnp.broadcast_to(jnp.arange(s) < fill, (b, s))
+    out = flash_decode(q, k, v, valid, bs=256)
+    ref = R.flash_decode_ref(q, k, v, valid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_decode_ragged_valid():
+    """Per-row validity (ring buffers) is honored."""
+    b, h, kv, s, d = 3, 4, 4, 256, 64
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (b, h, d))
+    k = jax.random.normal(ks[1], (b, kv, s, d))
+    v = jax.random.normal(ks[2], (b, kv, s, d))
+    valid = jax.random.uniform(jax.random.PRNGKey(5), (b, s)) > 0.4
+    valid = valid.at[:, 0].set(True)
+    out = flash_decode(q, k, v, valid, bs=64)
+    ref = R.flash_decode_ref(q, k, v, valid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 WKV scan
+
+@pytest.mark.parametrize("b,t,h,d", [(1, 32, 2, 32), (2, 100, 4, 64)])
+def test_wkv_scan_matches_ref(b, t, h, d):
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    r = jax.random.normal(ks[0], (b, t, h, d)) * 0.5
+    k = jax.random.normal(ks[1], (b, t, h, d)) * 0.5
+    v = jax.random.normal(ks[2], (b, t, h, d)) * 0.5
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, t, h, d)))  # decay in (0,1)
+    u = jax.random.normal(ks[4], (h, d)) * 0.1
+    s0 = jnp.zeros((b, h, d, d))
+    out, sf = wkv_scan(r, k, v, w, u, s0, ct=16)
+    out_r, sf_r = R.wkv_scan_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_r),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(sf_r),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_wkv_scan_state_carry():
+    """Chunked state carry: running two halves sequentially == one pass."""
+    b, t, h, d = 1, 64, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    r = jax.random.normal(ks[0], (b, t, h, d)) * 0.5
+    k = jax.random.normal(ks[1], (b, t, h, d)) * 0.5
+    v = jax.random.normal(ks[2], (b, t, h, d)) * 0.5
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, t, h, d)))
+    u = jax.random.normal(ks[4], (h, d)) * 0.1
+    s0 = jnp.zeros((b, h, d, d))
+    out_full, sf_full = wkv_scan(r, k, v, w, u, s0, ct=16)
+    o1, s1 = wkv_scan(r[:, :32], k[:, :32], v[:, :32], w[:, :32], u, s0, ct=16)
+    o2, s2 = wkv_scan(r[:, 32:], k[:, 32:], v[:, 32:], w[:, 32:], u, s1, ct=16)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([o1, o2], 1)),
+                               np.asarray(out_full), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(sf_full),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,90 @@
+"""Unit tests for the roofline analysis: HLO collective parsing, analytic
+FLOP/byte model, report assembly."""
+import numpy as np
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.roofline import analytic, build_report, parse_collectives
+from repro.roofline.analysis import _shape_bytes
+
+HLO = """\
+HloModule jit_train_step
+
+%while_body.1 (arg: (f32[8,128], s32[])) -> (f32[8,128], s32[]) {
+  %p = f32[8,128]{1,0} parameter(0)
+  %ar = f32[8,128]{1,0} all-reduce(%x), replica_groups={}
+  %ag = bf16[16,256]{1,0} all-gather(%y), dimensions={1}
+}
+
+ENTRY %main (a: f32[4]) -> f32[4] {
+  %top = f32[1024]{0} all-reduce(%a), replica_groups={}
+  %cp = f32[512]{0} collective-permute(%b)
+  ROOT %r = f32[4]{0} add(%a, %a)
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[8,128]{1,0}") == 8 * 128 * 4
+    assert _shape_bytes("bf16[16,256]") == 16 * 256 * 2
+    assert _shape_bytes("(f32[2,2], s8[4])") == 16 + 4
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_parse_collectives_loop_multiplier():
+    stats = parse_collectives(HLO, loop_multiplier=10)
+    # in-body ops x10, entry ops x1
+    want_ar = 8 * 128 * 4 * 10 + 1024 * 4
+    want_ag = 16 * 256 * 2 * 10
+    want_cp = 512 * 4
+    assert stats.by_op["all-reduce"] == want_ar
+    assert stats.by_op["all-gather"] == want_ag
+    assert stats.by_op["collective-permute"] == want_cp
+    assert stats.count == 4
+    assert stats.bytes_total == want_ar + want_ag + want_cp
+
+
+def test_analytic_moe_active_vs_full():
+    cfg = get_config("phi3.5-moe-42b-a6.6b")
+    n_full = analytic.non_embedding_params(cfg)
+    n_act = analytic.non_embedding_params(cfg, active=True)
+    assert n_act < n_full
+    # 16 experts top-2: ffn params ratio ~ 2/16 -> active well under half
+    assert n_act / n_full < 0.45
+    # ballpark the config name: ~42B total, ~6.6B active (non-embedding)
+    assert 25e9 < n_full < 60e9
+    assert 3e9 < n_act < 10e9
+
+
+def test_analytic_decode_memory_dominated_by_cache_or_weights():
+    cfg = get_config("qwen1.5-32b")
+    est = analytic.estimate(cfg, INPUT_SHAPES["decode_32k"])
+    # decode reads >= active weights once
+    assert est.bytes >= analytic.non_embedding_params(cfg, active=True) * 2
+    # one token per sequence: tiny model_flops vs train
+    est_tr = analytic.estimate(cfg, INPUT_SHAPES["train_4k"])
+    assert est.model_flops < est_tr.model_flops / 1000
+
+
+def test_analytic_sliding_window_caps_decode_context():
+    cfg = get_config("llama3.2-3b")
+    e_long = analytic.estimate(cfg, INPUT_SHAPES["long_500k"])
+    e_dec = analytic.estimate(cfg, INPUT_SHAPES["decode_32k"])
+    # 500k sliding-window decode attends <= window (8192) < 32768 full cache,
+    # but decode_32k has batch 128 vs 1 — compare per-sequence context bytes
+    ctx_long = analytic.attention_context(cfg, INPUT_SHAPES["long_500k"])
+    ctx_dec = analytic.attention_context(cfg, INPUT_SHAPES["decode_32k"])
+    assert ctx_long == cfg.long_context_window
+    assert ctx_dec == 32768.0
+
+
+def test_build_report_terms_and_dominance():
+    cfg = get_config("smollm-360m")
+    rep = build_report(cfg, INPUT_SHAPES["train_4k"], "16x16", 256, HLO,
+                       cost={"flops": 1e12, "bytes accessed": 1e9})
+    assert rep.dominant in ("compute", "memory", "collective")
+    assert rep.t_compute > 0 and rep.t_memory > 0
+    assert 0 < rep.flops_ratio <= 1.0
+    assert rep.cost_analysis_flops == 1e12
+    # train is compute-bound for this config at these constants
+    assert rep.dominant == "compute"

@@ -1,0 +1,175 @@
+"""Tests for the substrate layers: data pipeline, optimizer, checkpointing,
+serving engine (incl. the fused ORCA serve_step)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import InputShape, get_config
+from repro.core.probe import ProbeConfig, init_outer
+from repro.data import TokenPipeline, TokenPipelineConfig
+from repro.models import build
+from repro.optim import Adam, cosine_schedule, global_norm
+from repro.checkpoint import latest_step, restore, save_pytree
+from repro.serving import (ServeConfig, ServingEngine, extract_trajectories,
+                           init_probe_state, make_serve_step)
+
+
+# ---------------------------------------------------------------------------
+# data
+
+def test_token_pipeline_deterministic_and_shaped():
+    cfg = TokenPipelineConfig(vocab_size=100, seq_len=32, global_batch=4, seed=3)
+    p1, p2 = TokenPipeline(cfg), TokenPipeline(cfg)
+    b1, b2 = p1.batch(7), p2.batch(7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].shape == (4, 32)
+    # targets are next-token shifted
+    np.testing.assert_array_equal(p1._batch_np(0)[:, 1:],
+                                  p1.batch(0)["targets"])
+    assert (b1["tokens"] < 100).all() and (b1["tokens"] >= 0).all()
+    assert not np.array_equal(p1.batch(0)["tokens"], p1.batch(1)["tokens"])
+
+
+def test_token_pipeline_has_learnable_structure():
+    """Markov blend: P(next | prev state) is peaked vs the unigram prior."""
+    cfg = TokenPipelineConfig(vocab_size=50, seq_len=256, global_batch=16)
+    toks = TokenPipeline(cfg).batch(0)["tokens"].reshape(-1)
+    pairs = {}
+    for a, b in zip(toks[:-1], toks[1:]):
+        pairs.setdefault(a % 64, []).append(b)
+    # top continuation should be much more likely than uniform
+    top_frac = []
+    for vs in pairs.values():
+        if len(vs) >= 30:
+            _, counts = np.unique(vs, return_counts=True)
+            top_frac.append(counts.max() / len(vs))
+    assert np.mean(top_frac) > 3.0 / 50
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+
+def test_adam_converges_quadratic():
+    opt = Adam(lr=0.1, clip_norm=None)
+    params = {"x": jnp.asarray([3.0, -2.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"x": 2 * params["x"]}
+        upd, state = opt.update(grads, state, params)
+        params = jax.tree.map(lambda p, u: p + u, params, upd)
+    assert float(jnp.abs(params["x"]).max()) < 1e-2
+
+
+def test_adam_clipping_and_schedule():
+    sched = cosine_schedule(1.0, warmup=10, total=100)
+    assert float(sched(jnp.asarray(5))) == pytest.approx(0.5)
+    assert float(sched(jnp.asarray(10))) == pytest.approx(1.0, abs=1e-3)
+    assert float(sched(jnp.asarray(100))) == pytest.approx(0.1, abs=1e-3)
+    opt = Adam(lr=1.0, clip_norm=1.0)
+    g = {"x": jnp.asarray([30.0, 40.0])}   # norm 50 -> scaled to 1
+    st = opt.init(g)
+    upd, _ = opt.update(g, st, g)
+    assert np.isfinite(np.asarray(upd["x"])).all()
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "nested": {"b": jnp.ones((4,), jnp.int32)},
+            "tup": (jnp.zeros((2,)), jnp.ones((1,)))}
+    d = str(tmp_path)
+    save_pytree(tree, d, step=3)
+    save_pytree(tree, d, step=10)
+    assert latest_step(d) == 10
+    template = jax.tree.map(lambda x: jnp.zeros_like(x), tree)
+    back = restore(template, os.path.join(d, "step_10"))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    d = str(tmp_path)
+    save_pytree({"a": jnp.zeros((2,))}, d, step=0)
+    with pytest.raises(ValueError):
+        restore({"a": jnp.zeros((3,))}, os.path.join(d, "step_0"))
+
+
+# ---------------------------------------------------------------------------
+# serving engine with ORCA stopping
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("smollm_360m").reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def test_serve_step_stops_on_high_scores(small_model):
+    model, params = small_model
+    mcfg = model.cfg
+    B, prompt = 2, 8
+    pc = ProbeConfig(d_phi=mcfg.d_model, smooth_window=2)
+    theta = init_outer(pc, jax.random.PRNGKey(1))
+    # force immediate stopping: huge positive bias, lam tiny, burn_in 0
+    theta["b0"] = jnp.asarray(50.0)
+    cfg = ServeConfig(tokens_per_step=2, max_new_tokens=24, lam=0.5, burn_in=0)
+    eng = ServingEngine(model, params, pc, theta, cfg)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (B, prompt),
+                                          0, mcfg.vocab_size)}
+    res = eng.serve(batch, prompt_len=prompt, cache_len=prompt + 32)
+    assert (res.stop_step >= 0).all()          # everyone stopped early
+    assert res.savings > 0.0
+
+
+def test_serve_step_budget_exhaustion(small_model):
+    model, params = small_model
+    mcfg = model.cfg
+    pc = ProbeConfig(d_phi=mcfg.d_model)
+    theta = init_outer(pc, jax.random.PRNGKey(1))
+    theta["b0"] = jnp.asarray(-50.0)           # never stop
+    cfg = ServeConfig(tokens_per_step=4, max_new_tokens=16, lam=0.99, burn_in=0)
+    eng = ServingEngine(model, params, pc, theta, cfg)
+    batch = {"tokens": jnp.zeros((1, 4), jnp.int32)}
+    res = eng.serve(batch, prompt_len=4, cache_len=32)
+    assert (res.stop_step == -1).all()
+    assert res.savings == 0.0
+
+
+def test_extract_trajectories_shapes(small_model):
+    model, params = small_model
+    mcfg = model.cfg
+    batch = {"tokens": jnp.zeros((2, 4), jnp.int32)}
+    phis, toks = extract_trajectories(model, params, batch, prompt_len=4,
+                                      max_new_tokens=12, tokens_per_step=3,
+                                      cache_len=20)
+    assert phis.shape == (2, 4, mcfg.d_model)
+    assert toks.shape == (2, 12)
+    assert np.isfinite(phis).all()
+
+
+def test_probe_state_freezes_after_stop(small_model):
+    """Stopped sequences must not update fast weights further."""
+    model, params = small_model
+    mcfg = model.cfg
+    pc = ProbeConfig(d_phi=mcfg.d_model, smooth_window=1)
+    theta = init_outer(pc, jax.random.PRNGKey(1))
+    theta["b0"] = jnp.asarray(50.0)
+    cfg = ServeConfig(tokens_per_step=1, max_new_tokens=6, lam=0.5, burn_in=0)
+    step_fn = jax.jit(make_serve_step(model, pc, cfg))
+    state = model.init_decode_state(1, 16)
+    st = init_probe_state(pc, theta, 1, mcfg.d_model)
+    token = jnp.zeros((1,), jnp.int32)
+    W_hist = []
+    for i in range(4):
+        token, state, st = step_fn(params, theta, token, state,
+                                   jnp.asarray(i, jnp.int32), st)
+        W_hist.append(np.asarray(st.W))
+    assert bool(np.asarray(st.stopped).all())
+    # after stopping, W frozen
+    np.testing.assert_array_equal(W_hist[-1], W_hist[-2])

@@ -1,0 +1,89 @@
+"""End-to-end behaviour tests for the ORCA system (paper-level claims on a
+small synthetic corpus) + driver smoke tests."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.pipeline import evaluate_probe, run_orca
+from repro.core.probe import ProbeConfig
+from repro.trajectories import corpus_splits, ood_benchmark
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(scope="module")
+def orca_run():
+    train, cal, test = corpus_splits(240, 90, 90, d_phi=96, seed=1)
+    out = run_orca(train, cal, test, mode="supervised",
+                   pc=ProbeConfig(d_phi=96), deltas=(0.1, 0.2), epochs=25,
+                   seed=1)
+    return train, cal, test, out
+
+
+def test_risk_control_holds(orca_run):
+    """LTT guarantee: test error <= delta (+ finite-sample slack) whenever a
+    threshold was selected."""
+    *_, out = orca_run
+    for method in ("ttt", "static"):
+        for r in out[method].results:
+            if np.isfinite(r.lam):
+                assert r.error <= r.delta + 0.08, (method, r.delta, r.error)
+
+
+def test_ttt_beats_static_in_distribution(orca_run):
+    *_, out = orca_run
+    t = out["ttt"].at(0.1)
+    s = out["static"].at(0.1)
+    assert t.savings >= s.savings - 0.02, (t.savings, s.savings)
+
+
+def test_ttt_ood_gap(orca_run):
+    """Zero-shot OOD: TTT savings should exceed static by a clear margin
+    (paper's Table 3 headline)."""
+    train, cal, test, out = orca_run
+    probe, static = out["_probe"], out["_static"]
+    ood = ood_benchmark("math500", 90, d_phi=96)
+    e_t = evaluate_probe(probe.scores(cal), cal, probe.scores(ood), ood,
+                         "supervised", (0.1,)).results[0]
+    e_s = evaluate_probe(static.scores(cal.phis, cal.mask), cal,
+                         static.scores(ood.phis, ood.mask), ood,
+                         "supervised", (0.1,)).results[0]
+    assert e_t.savings > e_s.savings, (e_t.savings, e_s.savings)
+
+
+def test_consistent_mode_is_label_free_and_works(orca_run):
+    train, cal, test, _ = orca_run
+    out = run_orca(train, cal, test, mode="consistent",
+                   pc=ProbeConfig(d_phi=96), deltas=(0.1,), epochs=25,
+                   include_static=False, seed=1)
+    r = out["ttt"].results[0]
+    assert r.error <= 0.1 + 0.08
+    assert r.savings >= 0.0
+
+
+def test_train_driver_cli(tmp_path):
+    """The training driver runs end-to-end (reduced config, 25 steps) and
+    reduces the loss (exit code 0 asserts this)."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "smollm-360m",
+         "--reduced", "--steps", "25", "--batch", "4", "--seq", "64",
+         "--lr", "1e-3", "--ckpt-dir", str(tmp_path / "ck"),
+         "--log-every", "10"],
+        capture_output=True, text=True, timeout=900, env=env)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert (tmp_path / "ck").exists()
+
+
+def test_dryrun_cli_skip_path():
+    """The dry-run CLI handles the documented skip without device setup."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "whisper-tiny",
+         "--shape", "long_500k"],
+        capture_output=True, text=True, timeout=600, env=env)
+    assert proc.returncode == 0, proc.stderr
+    assert '"skip"' in proc.stdout
