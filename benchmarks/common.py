@@ -17,11 +17,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import api as orca
 from repro.checkpoint import restore, save_pytree
-from repro.core.pipeline import (TrainedProbe, evaluate_probe, make_labels,
-                                 train_ttt_probe)
+from repro.core.pipeline import TrainedProbe, evaluate_probe, make_labels
 from repro.core.probe import ProbeConfig, init_outer
-from repro.core.static_probe import StaticProbe, fit_static_probe
+from repro.core.static_probe import StaticProbe
 from repro.trajectories import TrajectorySet, corpus_splits, ood_benchmark
 
 QUICK = os.environ.get("REPRO_BENCH_QUICK", "0") == "1"
@@ -67,8 +67,9 @@ def get_probe(train: TrajectorySet, mode: str, pc: ProbeConfig,
             hist = json.load(f).get("history", [])
         probe = TrainedProbe(pc, theta, hist)
     else:
-        probe = train_ttt_probe(train, mode, pc, epochs=epochs or EPOCHS,
-                                seed=seed, epoch_select=epoch_select)
+        probe = orca.fit(train, mode=mode, method="ttt", pc=pc,
+                         epochs=epochs or EPOCHS, seed=seed,
+                         epoch_select=epoch_select).probe
         os.makedirs(PROBE_DIR, exist_ok=True)
         save_pytree(probe.theta, path, meta={"history": probe.history})
     _PROBE_MEMO[key] = probe
@@ -82,8 +83,7 @@ def get_static(train: TrajectorySet, mode: str, tag: str = "corpus"
                ) -> StaticProbe:
     key = f"{mode}-{tag}-{len(train)}"
     if key not in _STATIC_MEMO:
-        _STATIC_MEMO[key] = fit_static_probe(
-            train.phis, make_labels(train, mode), train.mask)
+        _STATIC_MEMO[key] = orca.fit(train, mode=mode, method="static").probe
     return _STATIC_MEMO[key]
 
 

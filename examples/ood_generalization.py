@@ -2,14 +2,13 @@
 
     PYTHONPATH=src python examples/ood_generalization.py
 
-Trains TTT + static probes once on the in-distribution corpus, then applies
-both ZERO-SHOT to all five OOD benchmarks at delta=0.1, showing the static
-probe's calibration break (conservative on math500-like, premature on
-gpqa-like) while the TTT probe adapts instance-wise.
+Trains TTT + static calibrators once on the in-distribution corpus through
+the ``repro.api`` facade, then applies both ZERO-SHOT to all five OOD
+benchmarks at delta=0.1, showing the static probe's calibration break
+(conservative on math500-like, premature on gpqa-like) while the TTT probe
+adapts instance-wise.
 """
-import numpy as np
-
-from repro.core.pipeline import evaluate_probe, run_orca
+from repro import api as orca
 from repro.core.probe import ProbeConfig
 from repro.trajectories import corpus_splits, ood_benchmark
 
@@ -18,20 +17,18 @@ BENCHES = ("math500", "gpqa", "aime24", "aime25", "aime26")
 
 def main():
     train, cal, test = corpus_splits(400, 150, 150, d_phi=128, seed=0)
-    out = run_orca(train, cal, test, mode="supervised",
-                   pc=ProbeConfig(d_phi=128), deltas=(0.1,), epochs=30)
-    probe, static = out["_probe"], out["_static"]
-    r_t, r_s = out["ttt"].results[0], out["static"].results[0]
+    ttt = orca.fit(train, mode="supervised", method="ttt",
+                   pc=ProbeConfig(d_phi=128), epochs=30)
+    static = orca.fit(train, mode="supervised", method="static")
+    r_t = orca.evaluate(ttt, cal, test, deltas=(0.1,)).results[0]
+    r_s = orca.evaluate(static, cal, test, deltas=(0.1,)).results[0]
     print(f"in-dist @0.1: ttt {r_t.savings:.3f}/{r_t.error:.3f}  "
           f"static {r_s.savings:.3f}/{r_s.error:.3f}")
     print("\nbench     ttt.sav ttt.err   static.sav static.err")
     for b in BENCHES:
         ts = ood_benchmark(b, 150, d_phi=128)
-        e_t = evaluate_probe(probe.scores(cal), cal, probe.scores(ts), ts,
-                             "supervised", (0.1,)).results[0]
-        e_s = evaluate_probe(static.scores(cal.phis, cal.mask), cal,
-                             static.scores(ts.phis, ts.mask), ts,
-                             "supervised", (0.1,)).results[0]
+        e_t = orca.evaluate(ttt, cal, ts, deltas=(0.1,)).results[0]
+        e_s = orca.evaluate(static, cal, ts, deltas=(0.1,)).results[0]
         print(f"{b:9s} {e_t.savings:.3f}   {e_t.error:.3f}     "
               f"{e_s.savings:.3f}      {e_s.error:.3f}")
 

@@ -1,15 +1,16 @@
-"""Quickstart: the whole ORCA pipeline in ~2 minutes on CPU.
+"""Quickstart: the whole ORCA pipeline in ~2 minutes on CPU, through the
+``repro.api`` facade.
 
     PYTHONPATH=src python examples/quickstart.py
 
 1. generate a synthetic reasoning-trajectory corpus (3:1:1 split),
-2. meta-train the TTT probe (Algorithm 1) + fit the static baseline,
-3. LTT-calibrate the stopping threshold at delta=0.1 (Algorithm 2A),
-4. evaluate deployed savings/error (Algorithm 2B) in- and out-of-distribution.
+2. ``orca.fit`` the TTT calibrator (Algorithm 1) + the static baseline,
+3. ``orca.evaluate``: LTT-calibrate lambda* (Algorithm 2A) and report
+   deployed savings/error (Algorithm 2B) in- and out-of-distribution.
 """
 import numpy as np
 
-from repro.core.pipeline import evaluate_probe, run_orca
+from repro import api as orca
 from repro.core.probe import ProbeConfig
 from repro.trajectories import corpus_splits, ood_benchmark
 
@@ -20,24 +21,24 @@ def main():
     print(f"corpus: {len(train)} train / {len(cal)} cal / {len(test)} test "
           f"trajectories, d_phi={train.phis.shape[-1]}")
 
-    out = run_orca(train, cal, test, mode="supervised",
-                   pc=ProbeConfig(d_phi=96), deltas=(0.05, 0.1, 0.2),
-                   epochs=25, verbose=False)
+    calibrators = {
+        "ttt": orca.fit(train, mode="supervised", method="ttt",
+                        pc=ProbeConfig(d_phi=96), epochs=25),
+        "static": orca.fit(train, mode="supervised", method="static"),
+    }
     print("\nmethod   delta  savings  error   lambda*")
-    for method in ("ttt", "static"):
-        for r in out[method].results:
+    for method, calib in calibrators.items():
+        ev = orca.evaluate(calib, cal, test, deltas=(0.05, 0.1, 0.2))
+        for r in ev.results:
             print(f"{method:8s} {r.delta:.2f}   {r.savings:.3f}    "
                   f"{r.error:.3f}   {r.lam:.3f}" if np.isfinite(r.lam) else
                   f"{method:8s} {r.delta:.2f}   {r.savings:.3f}    "
                   f"{r.error:.3f}   never-stop")
 
-    probe, static = out["_probe"], out["_static"]
     ood = ood_benchmark("math500", 100, d_phi=96)
-    e_t = evaluate_probe(probe.scores(cal), cal, probe.scores(ood), ood,
-                         "supervised", (0.1,)).results[0]
-    e_s = evaluate_probe(static.scores(cal.phis, cal.mask), cal,
-                         static.scores(ood.phis, ood.mask), ood,
-                         "supervised", (0.1,)).results[0]
+    e_t = orca.evaluate(calibrators["ttt"], cal, ood, deltas=(0.1,)).results[0]
+    e_s = orca.evaluate(calibrators["static"], cal, ood,
+                        deltas=(0.1,)).results[0]
     print(f"\nzero-shot OOD (math500-like) @ delta=0.1:")
     print(f"  ttt    savings {e_t.savings:.3f}  error {e_t.error:.3f}")
     print(f"  static savings {e_s.savings:.3f}  error {e_s.error:.3f}")

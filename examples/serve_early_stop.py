@@ -1,12 +1,14 @@
-"""End-to-end serving driver (deliverable b): serve batched requests through
-a real model from the zoo with ORCA risk-controlled early stopping.
+"""End-to-end serving driver (deliverable b): a request queue served by the
+continuous-batching ORCA scheduler on a real model from the zoo.
 
     PYTHONPATH=src python examples/serve_early_stop.py [--arch smollm-360m]
 
 Pipeline: harvest calibration trajectories from the model itself
-(consistency labels — no ground truth needed), meta-train the probe,
-LTT-calibrate lambda*, then serve new requests with the fused
-decode+probe+stopping step (repro.serving.make_serve_step).
+(consistency labels — no ground truth needed), ``orca.fit`` the TTT
+calibrator, LTT-calibrate lambda*, then serve the queue through
+``repro.api.engine`` — each ORCA stop evicts its slot, which is refilled
+from the queue on the next step (plus the static-batch baseline for
+comparison).
 """
 import argparse
 
@@ -16,12 +18,14 @@ from repro.launch import serve as serve_driver
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--slots", type=int, default=2)
     args = ap.parse_args()
     serve_driver.main([
         "--arch", args.arch, "--reduced",
-        "--requests", "4", "--prompt-len", "16",
+        "--requests", "8", "--slots", str(args.slots), "--prompt-len", "16",
         "--max-new-tokens", "96", "--tokens-per-step", "8",
         "--train-trajectories", "24", "--delta", "0.25", "--epochs", "8",
+        "--static-baseline",
     ])
 
 

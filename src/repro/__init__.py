@@ -7,4 +7,12 @@ repro.optim / repro.checkpoint / repro.serving (substrates),
 repro.launch (meshes, dry-run, drivers), repro.roofline (perf analysis).
 """
 
-__version__ = "1.0.0"
+__version__ = "1.1.0"
+
+
+def __getattr__(name):
+    # lazy facade alias: `from repro import orca` == `import repro.api`
+    if name in ("orca", "api"):
+        import repro.api as _api
+        return _api
+    raise AttributeError(name)

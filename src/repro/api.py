@@ -1,0 +1,113 @@
+"""repro.api — the ORCA facade: fit -> evaluate -> engine.
+
+One import gives the whole paper pipeline plus the serving stack, without
+re-plumbing the train -> calibrate -> serve path by hand:
+
+    from repro import api as orca
+
+    cal   = orca.fit(train, mode="supervised", method="ttt", epochs=25)
+    ev    = orca.evaluate(cal, cal_split, test_split, deltas=(0.1,))
+    lam   = cal.calibrate(cal_split, delta=0.1)          # LTT lambda*
+    sched = orca.engine(model, params, cal, n_slots=4,
+                        tokens_per_step=8, max_new_tokens=96)
+    done, fleet = orca.serve_requests(sched, prompt_token_rows)
+
+``fit``/``evaluate`` work for every registered Calibrator ("ttt",
+"static"); ``engine`` needs a calibrator that can hand (ProbeConfig,
+theta) to the fused serve step (the TTT probe).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.calibrator import (Calibrator, StaticCalibrator,
+                                   TTTCalibrator, make_calibrator)
+from repro.core.pipeline import ProcedureEval, evaluate_probe
+from repro.serving.engine import ServeConfig
+from repro.serving.scheduler import OrcaScheduler
+from repro.trajectories import TrajectorySet
+
+__all__ = ["Calibrator", "StaticCalibrator", "TTTCalibrator",
+           "calibrated_lambda", "engine", "evaluate", "fit",
+           "make_calibrator", "serve_requests"]
+
+DELTAS = (0.05, 0.1, 0.15, 0.2)
+
+
+def fit(train: TrajectorySet, mode: str = "supervised",
+        method: str = "ttt", **kwargs) -> Calibrator:
+    """Train a calibrator on ``train``.
+
+    ``method`` picks the implementation ("ttt" — the paper's meta-learned
+    probe — or "static"); ``kwargs`` go to its constructor (e.g.
+    ``epochs=25, seed=1, pc=ProbeConfig(...)`` for ttt).
+    """
+    return make_calibrator(method, **kwargs).fit(train, mode)
+
+
+def evaluate(calibrator: Calibrator, cal: TrajectorySet, test: TrajectorySet,
+             *, deltas: Sequence[float] = DELTAS,
+             eps: float = 0.05) -> ProcedureEval:
+    """LTT-calibrate on ``cal`` and report deployed savings/error on ``test``
+    (risk against supervised ground truth — what the paper's tables show)."""
+    return evaluate_probe(calibrator.scores(cal), cal,
+                          calibrator.scores(test), test,
+                          calibrator.mode, deltas, eps=eps,
+                          method=calibrator.method)
+
+
+def calibrated_lambda(calibrator: Calibrator, cal: TrajectorySet,
+                      delta: float, *, eps: float = 0.05,
+                      fallback: float = math.inf) -> float:
+    """``calibrate()`` with ONE policy for "LTT selected nothing".
+
+    The honest default keeps lambda* = inf (never stop early — zero savings,
+    zero stopping risk; ``engine()`` then serves with stopping disabled).
+    Demos on tiny random-weight models may pass ``fallback=0.99`` (the most
+    aggressive grid threshold) to keep eviction observable — an explicit
+    opt-out of the guarantee, in one place instead of per driver.
+    """
+    lam = calibrator.calibrate(cal, delta, eps)
+    if not math.isfinite(lam):
+        return float(fallback)
+    return lam
+
+
+def engine(model, params, calibrator: Calibrator, *,
+           n_slots: int = 4, cache_len: Optional[int] = None,
+           lam: Optional[float] = None,
+           serve: Optional[ServeConfig] = None,
+           **serve_kwargs) -> OrcaScheduler:
+    """Build a continuous-batching ``OrcaScheduler`` serving the calibrated
+    procedure.
+
+    The threshold comes from an explicit ``serve`` config (exclusive with
+    ``lam``/``serve_kwargs``), else ``lam``, else ``calibrator.threshold()``
+    (requires a prior ``calibrate()``).  A non-finite lambda* (LTT selected
+    nothing) serves with stopping disabled — scores never cross a threshold
+    above 1.
+    """
+    pc, theta = calibrator.serving_params()
+    if serve is not None:
+        if lam is not None or serve_kwargs:
+            raise ValueError("pass either a full ServeConfig via serve= or "
+                             "lam=/ServeConfig kwargs, not both")
+    else:
+        if lam is None:
+            lam = calibrator.threshold()
+        if not math.isfinite(lam):
+            lam = 2.0               # sigmoid scores <= 1: never stop early
+        serve = ServeConfig(lam=float(lam), **serve_kwargs)
+    return OrcaScheduler(model, params, pc, theta, serve,
+                         n_slots=n_slots, cache_len=cache_len)
+
+
+def serve_requests(scheduler: OrcaScheduler, prompts: np.ndarray):
+    """Convenience: one Request per row of ``prompts`` (N, prompt_len),
+    driven through the scheduler.  Returns (requests, FleetMetrics)."""
+    from repro.serving.request import make_request
+    reqs = [make_request(np.asarray(prompts[i])) for i in range(len(prompts))]
+    return scheduler.run(reqs)

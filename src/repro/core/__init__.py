@@ -15,17 +15,21 @@ from repro.core.calibration import (LTTResult, binomial_pvalue,
                                     conformal_quantile, default_grid,
                                     ltt_calibrate)
 from repro.core.stopping import (EvalResult, calibrate_and_evaluate,
-                                 procedure_risk, savings, stop_times,
-                                 sweep_deltas)
+                                 procedure_risk, savings, step_savings,
+                                 stop_times, sweep_deltas)
 from repro.core.labels import (consistent_labels, supervised_labels,
                                transition_time)
 from repro.core.static_probe import StaticProbe, fit_static_probe
+from repro.core.calibrator import (Calibrator, StaticCalibrator,
+                                   TTTCalibrator, make_calibrator)
 
 __all__ = [
     "ProbeConfig", "init_outer", "smooth_scores", "batched_unroll",
     "deployed_scores", "inner_unroll", "meta_train", "outer_loss",
     "LTTResult", "binomial_pvalue", "conformal_quantile", "default_grid",
     "ltt_calibrate", "EvalResult", "calibrate_and_evaluate", "procedure_risk",
-    "savings", "stop_times", "sweep_deltas", "consistent_labels",
-    "supervised_labels", "transition_time", "StaticProbe", "fit_static_probe",
+    "savings", "step_savings", "stop_times", "sweep_deltas",
+    "consistent_labels", "supervised_labels", "transition_time",
+    "StaticProbe", "fit_static_probe", "Calibrator", "StaticCalibrator",
+    "TTTCalibrator", "make_calibrator",
 ]

@@ -1,0 +1,174 @@
+"""Unified ``Calibrator`` protocol: fit -> scores -> calibrate -> threshold.
+
+Every probe the paper compares (the meta-learned TTT probe, the static
+PCA+logreg baseline) is a *calibrated stopping procedure*: it scores step
+embeddings, gets LTT-calibrated on a held-out split and yields a threshold
+lambda* that the serving engine deploys.  Before this module each caller
+re-plumbed that path by hand (``TrainedProbe`` vs ``StaticProbe`` vs ad-hoc
+driver glue); now both implementations expose one protocol and the
+``repro.api`` facade composes them with the serving stack.
+
+    cal = TTTCalibrator(epochs=25).fit(train, mode="supervised")
+    lam = cal.calibrate(cal_split, delta=0.1)      # LTT lambda*
+    s   = cal.scores(test_split)                   # deployed smoothed scores
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core import calibration as C
+from repro.core import stopping as S
+from repro.core.probe import ProbeConfig
+from repro.trajectories import TrajectorySet
+
+
+@runtime_checkable
+class Calibrator(Protocol):
+    """The unified probe-side API the facade and drivers are written against."""
+    method: str                    # "ttt" | "static"
+    mode: str                      # label mode bound at fit() time
+
+    def fit(self, train: TrajectorySet, mode: str) -> "Calibrator":
+        """Train on ``train`` with "supervised" or "consistent" labels."""
+        ...
+
+    def scores(self, ts: TrajectorySet) -> np.ndarray:
+        """Deployed-procedure smoothed scores, (N, T) masked."""
+        ...
+
+    def calibrate(self, cal: TrajectorySet, delta: float,
+                  eps: float = 0.05) -> float:
+        """LTT-calibrate lambda* at risk level delta (FWER eps)."""
+        ...
+
+    def threshold(self) -> float:
+        """The calibrated lambda* (inf => never stop early)."""
+        ...
+
+
+class _LTTMixin:
+    """Shared calibrate/threshold: LTT over the deployed score trajectories,
+    with labels in the SAME mode the probe was fitted with (label-free
+    deployment for the consistent mode)."""
+    mode: str = ""
+    _lam: Optional[float] = None
+    _ltt: Optional[C.LTTResult] = None
+
+    def calibrate(self, cal: TrajectorySet, delta: float, eps: float = 0.05,
+                  grid: Optional[np.ndarray] = None) -> float:
+        from repro.core.pipeline import make_labels
+        if not self.mode:
+            raise RuntimeError("fit() must run before calibrate()")
+        grid = C.default_grid() if grid is None else grid
+        labels = make_labels(cal, self.mode)
+        s = self.scores(cal)
+        tau = S.stop_times(s, grid, cal.mask)
+        risk = S.procedure_risk(tau, labels, cal.mask)
+        self._ltt = C.ltt_calibrate(risk, grid, delta=delta, eps=eps)
+        self._lam = self._ltt.lam
+        return self._lam
+
+    def threshold(self) -> float:
+        if self._lam is None:
+            raise RuntimeError("calibrate() must run before threshold()")
+        return self._lam
+
+    @property
+    def ltt(self) -> Optional[C.LTTResult]:
+        return self._ltt
+
+
+@dataclasses.dataclass
+class TTTCalibrator(_LTTMixin):
+    """The paper's probe: meta-trained TTT fast-weight scorer (Algorithm 1).
+
+    Thin stateful wrapper over ``repro.core.pipeline.train_ttt_probe`` —
+    identical numbers, protocol-shaped.  ``serving_params()`` hands the
+    (ProbeConfig, theta) pair to the fused serving engine.
+    """
+    pc: Optional[ProbeConfig] = None
+    epochs: int = 40
+    batch_size: int = 64
+    outer_lr: float = 1e-2
+    seed: int = 0
+    epoch_select: bool = True
+    verbose: bool = False
+    method: str = dataclasses.field(default="ttt", init=False)
+    mode: str = dataclasses.field(default="", init=False)
+    probe: Optional[object] = dataclasses.field(default=None, init=False)
+
+    def fit(self, train: TrajectorySet, mode: str) -> "TTTCalibrator":
+        from repro.core.pipeline import train_ttt_probe
+        pc = self.pc or ProbeConfig(d_phi=train.phis.shape[-1])
+        self.probe = train_ttt_probe(
+            train, mode, pc, epochs=self.epochs, batch_size=self.batch_size,
+            outer_lr=self.outer_lr, seed=self.seed,
+            epoch_select=self.epoch_select, verbose=self.verbose)
+        self.pc, self.mode = pc, mode
+        return self
+
+    def scores(self, ts: TrajectorySet) -> np.ndarray:
+        if self.probe is None:
+            raise RuntimeError("fit() must run before scores()")
+        return self.probe.scores(ts)
+
+    def serving_params(self):
+        """(ProbeConfig, theta) for the fused serve step / scheduler."""
+        if self.probe is None:
+            raise RuntimeError("fit() must run before serving_params()")
+        return self.probe.pc, self.probe.theta
+
+
+@dataclasses.dataclass
+class StaticCalibrator(_LTTMixin):
+    """The static baseline: PCA + logistic regression, no online adaptation.
+
+    Protocol-shaped wrapper over ``fit_static_probe`` (Wu et al., 2025 —
+    the paper's "Static Probe" row).  It cannot run in the fused TTT serving
+    engine (no fast weights), so ``serving_params`` raises.
+    """
+    n_components: int = 64
+    epochs: int = 200
+    lr: float = 1e-2
+    smooth_window: int = 10
+    seed: int = 0
+    method: str = dataclasses.field(default="static", init=False)
+    mode: str = dataclasses.field(default="", init=False)
+    probe: Optional[object] = dataclasses.field(default=None, init=False)
+
+    def fit(self, train: TrajectorySet, mode: str) -> "StaticCalibrator":
+        from repro.core.pipeline import make_labels
+        from repro.core.static_probe import fit_static_probe
+        self.probe = fit_static_probe(
+            train.phis, make_labels(train, mode), train.mask,
+            n_components=self.n_components, epochs=self.epochs, lr=self.lr,
+            smooth_window=self.smooth_window, seed=self.seed)
+        self.mode = mode
+        return self
+
+    def scores(self, ts: TrajectorySet) -> np.ndarray:
+        if self.probe is None:
+            raise RuntimeError("fit() must run before scores()")
+        return self.probe.scores(ts.phis, ts.mask)
+
+    def serving_params(self):
+        raise NotImplementedError(
+            "the static probe has no fast-weight state to serve; use a "
+            "TTTCalibrator for the fused engine")
+
+
+_REGISTRY = {"ttt": TTTCalibrator, "static": StaticCalibrator}
+
+
+def make_calibrator(method: str, **kwargs) -> Calibrator:
+    """Factory over the registered Calibrator implementations."""
+    try:
+        cls = _REGISTRY[method]
+    except KeyError:
+        raise ValueError(f"unknown calibrator {method!r}; "
+                         f"known: {sorted(_REGISTRY)}") from None
+    return cls(**kwargs)

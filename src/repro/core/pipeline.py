@@ -135,21 +135,23 @@ def run_orca(train: TrajectorySet, cal: TrajectorySet, test: TrajectorySet,
              epochs: int = 40, eps: float = 0.05, seed: int = 0,
              include_static: bool = True, verbose: bool = False
              ) -> Dict[str, ProcedureEval]:
-    """The full paper pipeline on one corpus; returns {"ttt": ..., "static": ...}."""
-    d_phi = train.phis.shape[-1]
-    pc = pc or ProbeConfig(d_phi=d_phi)
-    probe = train_ttt_probe(train, mode, pc, epochs=epochs, seed=seed,
-                            verbose=verbose)
+    """DEPRECATED shim over the ``repro.api`` facade (kept so existing
+    callers and the seed tests keep passing; same numbers by construction).
+
+    New code:  ``orca.fit(train, mode) -> orca.evaluate(cal, test)``.
+    Returns {"ttt": ProcedureEval, "static": ..., "_probe": TrainedProbe,
+    "_static": StaticProbe} exactly as before.
+    """
+    from repro import api
+    pc = pc or ProbeConfig(d_phi=train.phis.shape[-1])
+    ttt_cal = api.fit(train, mode=mode, method="ttt", pc=pc, epochs=epochs,
+                      seed=seed, verbose=verbose)
     out: Dict[str, ProcedureEval] = {}
-    out["ttt"] = evaluate_probe(probe.scores(cal), cal, probe.scores(test),
-                                test, mode, deltas, eps=eps, method="ttt")
-    out["_probe"] = probe  # type: ignore
+    out["ttt"] = api.evaluate(ttt_cal, cal, test, deltas=deltas, eps=eps)
+    out["_probe"] = ttt_cal.probe  # type: ignore
     if include_static:
-        static = fit_static_probe(train.phis, make_labels(train, mode),
-                                  train.mask)
-        out["static"] = evaluate_probe(
-            static.scores(cal.phis, cal.mask), cal,
-            static.scores(test.phis, test.mask), test,
-            mode, deltas, eps=eps, method="static")
-        out["_static"] = static  # type: ignore
+        static_cal = api.fit(train, mode=mode, method="static")
+        out["static"] = api.evaluate(static_cal, cal, test, deltas=deltas,
+                                     eps=eps)
+        out["_static"] = static_cal.probe  # type: ignore
     return out

@@ -76,6 +76,20 @@ def procedure_risk(tau: np.ndarray, labels: np.ndarray,
     return (early & ~lab_at_tau).astype(np.float64)
 
 
+def step_savings(steps_used: np.ndarray, budget: np.ndarray) -> np.ndarray:
+    """THE savings metric: per-problem fraction of the step budget not spent,
+    ``1 - steps_used / budget`` (clipped at 0).
+
+    Shared by the offline evaluation (``savings``, budget = per-trajectory
+    length T_i) and the serving engine / scheduler (budget =
+    max_new_tokens // tokens_per_step), so served savings and
+    offline-evaluated savings are directly comparable.
+    """
+    steps_used = np.asarray(steps_used, np.float64)
+    budget = np.asarray(budget, np.float64)
+    return np.maximum(1.0 - steps_used / np.maximum(budget, 1.0), 0.0)
+
+
 def savings(tau: np.ndarray, mask: Optional[np.ndarray] = None,
             lengths: Optional[np.ndarray] = None) -> np.ndarray:
     """Per-problem savings 1 - (tau+1)/T aggregated per threshold (mean).
@@ -87,7 +101,7 @@ def savings(tau: np.ndarray, mask: Optional[np.ndarray] = None,
         assert mask is not None
         lengths = trajectory_lengths(mask)
     steps_used = np.minimum(tau + 1, lengths[:, None])
-    per_problem = 1.0 - steps_used / lengths[:, None]
+    per_problem = step_savings(steps_used, lengths[:, None])
     return per_problem.mean(axis=0)
 
 

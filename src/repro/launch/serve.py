@@ -1,12 +1,15 @@
-"""Serving driver: batched requests through the ORCA-calibrated engine.
+"""Serving driver: a request queue through the continuous-batching ORCA
+scheduler, with the static-batch engine as the side-by-side baseline.
 
 CPU demo (reduced config, synthetic prompts, freshly meta-trained probe):
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \
-        --requests 4 --max-new-tokens 96
+        --requests 8 --slots 2 --max-new-tokens 96
 
 The probe is meta-trained on trajectories extracted from THIS model
-(repro.serving.extract_trajectories), LTT-calibrated at --delta, then the
-engine serves with the calibrated threshold — the full Algorithm 2 loop.
+(repro.serving.extract_trajectories), LTT-calibrated at --delta through the
+unified ``Calibrator`` protocol, then ``repro.api.engine`` serves the queue:
+every ORCA stop evicts its slot, which is refilled from the queue on the
+next step — the calibrated savings turn into requests/s.
 """
 from __future__ import annotations
 
@@ -17,22 +20,16 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import api as orca
 from repro.configs import get_config
-from repro.core import stopping as S
 from repro.core.labels import consistent_labels
-from repro.core.pipeline import train_ttt_probe
-from repro.core.probe import ProbeConfig
 from repro.models import build
-from repro.serving import ServeConfig, ServingEngine, extract_trajectories
+from repro.serving import (ServeConfig, ServingEngine, extract_trajectories,
+                           make_request, serve_queue_static)
 from repro.trajectories.synthetic import TrajectorySet, TrajectoryDistribution
 
 
-def trajectories_from_model(model, params, n: int, prompt_len: int,
-                            max_new: int, tokens_per_step: int, seed: int
-                            ) -> TrajectorySet:
-    """Harvest step embeddings + self-consistency answers from the model."""
-    cfg = model.cfg
-    rng = jax.random.PRNGKey(seed)
+def model_inputs(cfg, rng, n: int, prompt_len: int):
     batch = {"tokens": jax.random.randint(rng, (n, prompt_len), 0,
                                           cfg.vocab_size)}
     if cfg.arch_type == "vlm":
@@ -41,6 +38,15 @@ def trajectories_from_model(model, params, n: int, prompt_len: int,
     if cfg.arch_type == "audio":
         batch["frames"] = jax.random.normal(
             rng, (n, cfg.frontend.n_tokens, cfg.d_model)) * 0.02
+    return batch
+
+
+def trajectories_from_model(model, params, n: int, prompt_len: int,
+                            max_new: int, tokens_per_step: int, seed: int
+                            ) -> TrajectorySet:
+    """Harvest step embeddings + self-consistency answers from the model."""
+    cfg = model.cfg
+    batch = model_inputs(cfg, jax.random.PRNGKey(seed), n, prompt_len)
     phis, toks = extract_trajectories(model, params, batch, prompt_len,
                                       max_new, tokens_per_step)
     n_steps = phis.shape[1]
@@ -60,14 +66,19 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new-tokens", type=int, default=96)
     ap.add_argument("--tokens-per-step", type=int, default=8)
     ap.add_argument("--train-trajectories", type=int, default=24)
     ap.add_argument("--delta", type=float, default=0.2)
     ap.add_argument("--epochs", type=int, default=10)
+    ap.add_argument("--burn-in", type=int, default=2)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--static-baseline", action="store_true",
+                    help="also serve the same queue through the static-batch "
+                         "engine and print the comparison")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -82,33 +93,47 @@ def main(argv=None) -> int:
                                  args.tokens_per_step, args.seed)
     half = len(ts) // 2
     train, cal = ts.subset(np.arange(half)), ts.subset(np.arange(half, len(ts)))
-    pc = ProbeConfig(d_phi=cfg.d_model, smooth_window=4)
-    probe = train_ttt_probe(train, "consistent", pc, epochs=args.epochs,
-                            epoch_select=False, seed=args.seed)
-    s_cal = probe.scores(cal)
-    lab = consistent_labels(cal.answers, cal.mask)
-    res = S.calibrate_and_evaluate(s_cal, lab, cal.mask, s_cal, lab, cal.mask,
-                                   delta=args.delta)
-    lam = res.lam if np.isfinite(res.lam) else 0.99
-    print(f"[serve] LTT-calibrated lambda* = {lam:.3f} "
-          f"(cal savings {res.savings:.3f}, error {res.error:.3f})")
 
-    scfg = ServeConfig(tokens_per_step=args.tokens_per_step,
-                       max_new_tokens=args.max_new_tokens, lam=float(lam),
-                       burn_in=2)
-    eng = ServingEngine(model, params, pc, probe.theta, scfg)
-    rng = jax.random.PRNGKey(args.seed + 1)
-    batch = {"tokens": jax.random.randint(rng, (args.requests, args.prompt_len),
-                                          0, cfg.vocab_size)}
-    if cfg.arch_type == "vlm":
-        batch["patch_embeds"] = jnp.zeros(
-            (args.requests, cfg.frontend.n_tokens, cfg.frontend.embed_dim))
-    if cfg.arch_type == "audio":
-        batch["frames"] = jax.random.normal(
-            rng, (args.requests, cfg.frontend.n_tokens, cfg.d_model)) * 0.02
-    out = eng.serve(batch, prompt_len=args.prompt_len)
-    print(f"[serve] {args.requests} requests: stop steps {out.stop_step.tolist()} "
-          f"(-1 = budget), step savings {out.savings:.3f}")
+    from repro.core.probe import ProbeConfig
+    calib = orca.fit(train, mode="consistent", method="ttt",
+                     pc=ProbeConfig(d_phi=cfg.d_model, smooth_window=4),
+                     epochs=args.epochs, epoch_select=False, seed=args.seed)
+    # demo fallback keeps eviction observable on tiny random-weight models
+    lam = orca.calibrated_lambda(calib, cal, args.delta, fallback=0.99)
+    print(f"[serve] LTT-calibrated lambda* = {lam:.3f}")
+
+    sched = orca.engine(model, params, calib, n_slots=args.slots, lam=lam,
+                        tokens_per_step=args.tokens_per_step,
+                        max_new_tokens=args.max_new_tokens,
+                        burn_in=args.burn_in)
+    batch = model_inputs(cfg, jax.random.PRNGKey(args.seed + 1),
+                         args.requests, args.prompt_len)
+    extra_keys = [k for k in batch if k != "tokens"]
+    reqs = [make_request(batch["tokens"][i],
+                         extra={k: batch[k][i:i + 1] for k in extra_keys})
+            for i in range(args.requests)]
+    done, fleet = sched.run(reqs)
+    for r in done:
+        print(f"[serve]   req {r.req_id}: {r.state.value:8s} "
+              f"admitted@{r.admitted_step:3d} done@{r.completed_step:3d} "
+              f"stop_step={r.stop_step:3d} tokens={len(r.tokens)}")
+    print(f"[serve] fleet: {fleet.n_requests} requests / {fleet.n_slots} "
+          f"slots in {fleet.engine_steps} engine steps "
+          f"({fleet.wall_time_s:.2f}s) — {fleet.requests_per_s:.2f} req/s, "
+          f"{fleet.tokens_per_s:.1f} tok/s, slot utilization "
+          f"{fleet.slot_utilization:.2f}, mean step savings "
+          f"{fleet.mean_step_savings:.3f}")
+
+    if args.static_baseline:
+        pc, theta = calib.serving_params()
+        scfg = ServeConfig(tokens_per_step=args.tokens_per_step,
+                           max_new_tokens=args.max_new_tokens,
+                           lam=float(lam), burn_in=args.burn_in)
+        eng = ServingEngine(model, params, pc, theta, scfg)
+        base = serve_queue_static(eng, batch, args.prompt_len, args.slots)
+        print(f"[serve] static-batch baseline: {base.engine_steps} engine "
+              f"steps ({base.wall_time_s:.2f}s) — "
+              f"{args.requests / base.wall_time_s:.2f} req/s")
     return 0
 
 

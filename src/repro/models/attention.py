@@ -77,10 +77,25 @@ def cache_write_stacked(cache: Dict[str, jnp.ndarray], ks: jnp.ndarray,
                         ) -> Dict[str, jnp.ndarray]:
     """Write one token for ALL layers at once: cache (L,B,KV,S,dh),
     ks/vs (L,B,KV,dh).  One in-place (donated) update outside the layer scan
-    instead of copying the cache through scan outputs (§Perf C2)."""
-    def upd(buf, val):
-        return jax.lax.dynamic_update_slice_in_dim(
-            buf, val[:, :, :, None, :], slot, axis=3)
+    instead of copying the cache through scan outputs (§Perf C2).
+
+    ``slot`` is a scalar (the whole batch writes the same position — classic
+    static batching) or a (B,) vector (continuous batching: each batch row
+    sits at its own sequence position and writes its own slot)."""
+    slot = jnp.asarray(slot)
+    if slot.ndim == 1:
+        iB = jnp.arange(slot.shape[0])
+
+        def upd(buf, val):
+            # advanced indices (batch row, per-row slot) sit at axes 1 and 3;
+            # jax moves them to the front, so the scattered value is
+            # (B, L, KV, dh) — a per-row scatter, not a full-buffer rewrite
+            return buf.at[:, iB, :, slot, :].set(
+                val.transpose(1, 0, 2, 3).astype(buf.dtype))
+    else:
+        def upd(buf, val):
+            return jax.lax.dynamic_update_slice_in_dim(
+                buf, val[:, :, :, None, :], slot, axis=3)
     out = dict(cache)
     if "k_scale" in cache:
         kq, ksc = quantize_kv(ks)
@@ -93,6 +108,34 @@ def cache_write_stacked(cache: Dict[str, jnp.ndarray], ks: jnp.ndarray,
         out["k"] = upd(cache["k"], ks.astype(cache["k"].dtype))
         out["v"] = upd(cache["v"], vs.astype(cache["v"].dtype))
     return out
+
+
+def decode_valid_mask(pos: jnp.ndarray, batch: int, s_cache: int,
+                      window: Optional[int] = None
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Cache write slot + readable-entry mask for one decode step.
+
+    ``pos`` is a scalar (every batch row at the same length — static
+    batching) or a (B,) vector (continuous batching: per-row absolute
+    positions).  Returns (slot, valid) with slot scalar or (B,) matching
+    ``pos`` and valid (B, s_cache).
+
+    Without a window: slot = pos, valid = [0, pos).  With a window the cache
+    is a ring buffer: index i holds the most recent position p <= pos with
+    p % window == i, readable iff that position exists AND is < pos (the pos
+    entry is stale until the post-scan write).
+    """
+    pos = jnp.asarray(pos, jnp.int32)
+    idxs = jnp.arange(s_cache)
+    pos_col = pos[:, None] if pos.ndim == 1 else pos[None, None]
+    if window is not None:
+        slot = jnp.mod(pos, window)
+        stored = pos_col - jnp.mod(pos_col - idxs[None, :], window)
+        valid = (stored >= 0) & (stored < pos_col)
+    else:
+        slot = pos
+        valid = idxs[None, :] < pos_col
+    return slot, jnp.broadcast_to(valid, (batch, s_cache))
 
 
 def cache_kv(cache_l: Dict[str, jnp.ndarray], dtype) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -306,7 +349,7 @@ def _flash_decode_sharded(ctx, qg, k, v, valid):
         return o_glb, l_glb, m_glb
 
     from jax.sharding import PartitionSpec as P
-    return jax.shard_map(
+    return parallel.shard_map(
         shard_fn, mesh=mesh,
         in_specs=(P(dspec), P(dspec, None, ax), P(dspec, None, ax), P(dspec, ax)),
         out_specs=(P(dspec), P(dspec), P(dspec)),

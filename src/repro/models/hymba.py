@@ -220,15 +220,14 @@ def prefill(cfg, params, batch, cache_len: int):
 
 
 def decode_step(cfg, params, token, state, pos):
-    """One-token decode; pos counts from end of prompt (absolute, incl meta)."""
+    """One-token decode; pos counts from end of prompt (absolute, incl meta).
+    ``pos`` is scalar or (B,) — per-row positions for continuous batching."""
     b = token.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
     x = embed_tokens(cfg, params, token)
     win = state["kv"]["k"].shape[3]
-    slot = jnp.mod(pos, win)
-    idxs = jnp.arange(win)
-    stored = pos - jnp.mod(pos - idxs, win)
-    valid = jnp.broadcast_to(((stored >= 0) & (stored < pos))[None], (b, win))
-    positions = jnp.full((b,), pos, jnp.int32)
+    slot, valid = attn.decode_valid_mask(pos, b, win, win)
+    positions = pos if pos.ndim == 1 else jnp.full((b,), pos, jnp.int32)
 
     def body(x, xs):
         p_l, kv_l, m_l = xs

@@ -253,28 +253,20 @@ def prefill(cfg, params, batch, cache_len: int):
 
 
 def decode_step(cfg, params, token, cache, pos, *, window: Optional[int] = None):
-    """One-token decode. token (B,), pos scalar int32 (current length).
+    """One-token decode. token (B,); pos int32 — scalar (whole batch at one
+    shared length: static batching) or (B,) vector (continuous batching:
+    every batch row sits at its own absolute position).
 
     With ``window`` set, the cache is a ring buffer of size window and
     ``slot = pos % window``; otherwise slot = pos.  Returns (logits, hidden,
     cache).
     """
     b = token.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
     x = embed_tokens(cfg, params, token)
     s_cache = cache["k"].shape[3]
-    if window is not None:
-        # ring buffer: index i holds the most recent position p <= pos with
-        # p % window == i; readable iff that position exists AND is < pos
-        # (the pos entry is stale until the post-scan write).
-        slot = jnp.mod(pos, window)
-        idxs = jnp.arange(s_cache)
-        stored = pos - jnp.mod(pos - idxs, window)
-        valid = jnp.broadcast_to(((stored >= 0) & (stored < pos))[None],
-                                 (b, s_cache))
-    else:
-        slot = pos
-        valid = jnp.broadcast_to((jnp.arange(s_cache) < pos)[None], (b, s_cache))
-    positions = jnp.full((b,), pos, jnp.int32)
+    slot, valid = attn.decode_valid_mask(pos, b, s_cache, window)
+    positions = pos if pos.ndim == 1 else jnp.full((b,), pos, jnp.int32)
 
     def body(x, xs):
         p_l, cache_l = xs

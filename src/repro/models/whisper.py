@@ -155,12 +155,15 @@ def prefill(cfg, params, batch, cache_len: int):
 
 
 def decode_step(cfg, params, token, state, pos):
+    """``pos`` is scalar or (B,) — per-row positions for continuous batching."""
     b = token.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
     dt = jnp.dtype(cfg.dtype)
+    positions = pos if pos.ndim == 1 else jnp.full((b,), pos, jnp.int32)
     x = jnp.take(params["embed"].astype(dt), token, axis=0)
-    x = x + jnp.take(params["pos_embed"].astype(dt), jnp.full((b,), pos), axis=0)
+    x = x + jnp.take(params["pos_embed"].astype(dt), positions, axis=0)
     s_cache = state["self"]["k"].shape[3]
-    valid = jnp.broadcast_to((jnp.arange(s_cache) < pos)[None], (b, s_cache))
+    slot, valid = attn.decode_valid_mask(pos, b, s_cache)
 
     def body(x, xs):
         p_l, cache_l, ck_l, cv_l = xs
@@ -185,7 +188,7 @@ def decode_step(cfg, params, token, state, pos):
 
     x, (ks, vs) = jax.lax.scan(
         body, x, (params["dec_layers"], state["self"], state["cross_k"], state["cross_v"]))
-    self_cache = attn.cache_write_stacked(state["self"], ks, vs, pos)
+    self_cache = attn.cache_write_stacked(state["self"], ks, vs, slot)
     h = apply_norm(cfg, params["final_norm"], x[:, None, :])[:, 0]
     logits = h @ params["embed"].astype(h.dtype).T
     state = {"self": self_cache, "cross_k": state["cross_k"], "cross_v": state["cross_v"]}

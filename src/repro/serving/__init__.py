@@ -1,8 +1,17 @@
-from repro.serving.engine import (ProbeState, ServeConfig, ServeResult,
-                                  ServingEngine, extract_trajectories,
-                                  init_probe_state, make_serve_step,
-                                  probe_update)
+from repro.serving.engine import (ContinuousServingEngine, ProbeState,
+                                  ServeConfig, ServeResult, ServingEngine,
+                                  SlotStepView, StaticQueueResult,
+                                  extract_trajectories, init_probe_state,
+                                  inject_prefill, make_serve_step,
+                                  probe_update, reset_probe_slot,
+                                  serve_queue_static)
+from repro.serving.request import (FleetMetrics, Request, RequestState,
+                                   make_request)
+from repro.serving.scheduler import OrcaScheduler
 
-__all__ = ["ProbeState", "ServeConfig", "ServeResult", "ServingEngine",
-           "extract_trajectories", "init_probe_state", "make_serve_step",
-           "probe_update"]
+__all__ = ["ContinuousServingEngine", "FleetMetrics", "OrcaScheduler",
+           "ProbeState", "Request", "RequestState", "ServeConfig",
+           "ServeResult", "ServingEngine", "SlotStepView",
+           "StaticQueueResult", "extract_trajectories", "init_probe_state",
+           "inject_prefill", "make_request", "make_serve_step",
+           "probe_update", "reset_probe_slot", "serve_queue_static"]

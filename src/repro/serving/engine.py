@@ -4,9 +4,20 @@ The paper's technique is a first-class serving feature here: ``serve_step``
 fuses one decode step of the base model with the ORCA probe — step-embedding
 accumulation (mean-pooled hidden states over ``tokens_per_step`` tokens),
 score-then-update fast-weight dynamics (Algorithm 2 lines 8-16), rolling
-smoothing and the calibrated threshold test.  Sequences freeze once stopped
-(their compute is saved; in a production continuous-batching server they
-would be evicted and replaced — here the batch simply runs until all stop).
+smoothing and the calibrated threshold test.
+
+Two execution modes share the fused step:
+
+* ``ServingEngine.serve`` — the legacy static batch: prefill once, run until
+  every sequence stops.  Stopped sequences freeze in place and burn their
+  slot as no-op compute.  Kept as the baseline (and a deprecation shim) for
+  ``repro.serving.scheduler.OrcaScheduler``.
+* ``ContinuousServingEngine`` — slot-level admit / release / step: each batch
+  row ("slot") carries its own request at its own sequence position (vector
+  ``pos``), its own per-slot prefill-injected KV cache and its own freshly
+  reset probe fast-weight state.  The moment ORCA stops a sequence its slot
+  is evicted and refilled from the waiting queue — calibrated early stopping
+  becomes the capacity mechanism, not just shorter trajectories.
 
 This same ``serve_step`` is what the decode-shape dry-runs lower to the
 production mesh: the deployed procedure (model + adaptation + stopping) is
@@ -23,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import probe as P
+from repro.core import stopping as S
 from repro.core.probe import ProbeConfig
 from repro.models.registry import Model
 
@@ -54,6 +66,47 @@ def init_probe_state(pc: ProbeConfig, theta, batch: int,
         stopped=jnp.zeros((batch,), bool),
         stop_step=jnp.full((batch,), -1, jnp.int32),
     )
+
+
+def reset_probe_slot(pc: ProbeConfig, theta, st: ProbeState, slot,
+                     active: bool = True) -> ProbeState:
+    """Reset ONE row of a batched ProbeState.
+
+    ``active=True`` (admission): the slot gets a fresh single-request state —
+    fast weights back to (W0, b0), empty smoothing ring, zero counters — so
+    its score trajectory is identical to a fresh single-request run.
+    ``active=False`` (eviction / empty slot): same reset but parked with
+    ``stopped=True``, which makes the fused step treat the row as no-op
+    compute (no fast-weight updates, token held constant).
+    """
+    one = init_probe_state(pc, theta, 1, st.hid_sum.shape[-1])
+    if not active:
+        one = one._replace(stopped=jnp.ones((1,), bool))
+    slot = jnp.asarray(slot, jnp.int32)
+    return ProbeState(*[
+        jax.lax.dynamic_update_slice_in_dim(full, part.astype(full.dtype),
+                                            slot, axis=0)
+        for full, part in zip(st, one)])
+
+
+def inject_prefill(model: Model, params, state, batch_one: Dict[str, jnp.ndarray],
+                   slot, cache_len: int):
+    """Prefill ONE request (batch 1) and write its decode state into batch
+    row ``slot`` of a running engine state.
+
+    Every decode-state leaf across the model zoo is (L, B, ...) — stacked
+    layers first, batch second — so the injection is a uniform
+    dynamic-update-slice on axis 1.  Stale KV from the slot's previous
+    occupant beyond the new prompt is never readable: the per-slot ``valid``
+    mask only exposes [0, pos) and each position is overwritten before pos
+    reaches it.
+    """
+    sub, _, _ = model.prefill(model.cfg, params, batch_one, cache_len)
+    slot = jnp.asarray(slot, jnp.int32)
+    return jax.tree.map(
+        lambda full, one: jax.lax.dynamic_update_slice_in_dim(
+            full, one.astype(full.dtype), slot, axis=1),
+        state, sub)
 
 
 def probe_update(pc: ProbeConfig, theta, st: ProbeState, hidden: jnp.ndarray,
@@ -115,11 +168,13 @@ def make_serve_step(model: Model, pc: ProbeConfig, cfg: ServeConfig,
     def serve_step(params, theta, token, cache, pos, st: ProbeState):
         logits, hidden, cache = model.decode_step(mcfg, params, token, cache,
                                                   pos, window=window)
+        prev_stopped = st.stopped
         st = probe_update(pc, theta, st, hidden, cfg.lam,
                           cfg.tokens_per_step, cfg.burn_in)
         nxt = jnp.argmax(logits[:, :mcfg.vocab_size], axis=-1).astype(jnp.int32)
-        # frozen sequences keep emitting their last token (no-op compute slot)
-        nxt = jnp.where(st.stopped, token, nxt)
+        # the step on which the stop FIRES still emits its genuinely decoded
+        # token; only already-frozen sequences repeat (no-op compute slot)
+        nxt = jnp.where(prev_stopped, token, nxt)
         return nxt, cache, st
 
     return serve_step
@@ -127,21 +182,30 @@ def make_serve_step(model: Model, pc: ProbeConfig, cfg: ServeConfig,
 
 @dataclasses.dataclass
 class ServeResult:
-    tokens: np.ndarray        # (B, max_new_tokens)
+    tokens: np.ndarray        # (B, n_decode_iters) tokens actually decoded
     stop_step: np.ndarray     # (B,) reasoning step at stop (-1 = budget)
     steps_run: np.ndarray     # (B,) reasoning steps actually executed
     savings: float
     scores: np.ndarray        # (B, n_steps) smoothed score at each step
-    phis: np.ndarray          # (B, n_steps, d_phi) step embeddings
 
 
 class ServingEngine:
-    """Minimal batched server: prefill once, loop the fused serve_step."""
+    """Minimal batched server: prefill once, loop the fused serve_step.
+
+    DEPRECATED as a serving path: stopped sequences keep occupying their
+    batch slot as no-op compute until the slowest sequence finishes.  Use
+    ``repro.serving.OrcaScheduler`` (continuous batching with ORCA-stop
+    eviction) for throughput; this class remains as the static-batch
+    baseline it is benchmarked against (``benchmarks/serving_throughput``)
+    and for callers that bring a pre-built batch."""
 
     def __init__(self, model: Model, params, pc: ProbeConfig, theta,
                  cfg: ServeConfig):
         self.model, self.params, self.pc, self.theta, self.cfg = \
             model, params, pc, theta, cfg
+        # one jitted step for the engine's lifetime: repeated serve() calls
+        # (e.g. group loops in the throughput benchmark) must not recompile
+        self._step_fn = jax.jit(make_serve_step(model, pc, cfg))
 
     def serve(self, batch: Dict[str, jnp.ndarray], prompt_len: int,
               cache_len: Optional[int] = None) -> ServeResult:
@@ -151,7 +215,7 @@ class ServingEngine:
         n_total = prompt_len + cfg.max_new_tokens
         cache_len = cache_len or n_total
         state, last_h, _ = model.prefill(mcfg, self.params, batch, cache_len)
-        step_fn = jax.jit(make_serve_step(model, self.pc, cfg))
+        step_fn = self._step_fn
         st = init_probe_state(self.pc, self.theta, B, mcfg.d_model)
         token = jnp.zeros((B,), jnp.int32)
         toks, scores, phis = [], [], []
@@ -167,16 +231,57 @@ class ServingEngine:
             if bool(np.asarray(jnp.all(st.stopped))):
                 break
         stop_step = np.asarray(st.stop_step)
-        n_steps = int(np.asarray(jnp.max(st.n_scores)))
         steps_run = np.where(stop_step >= 0, stop_step,
                              np.asarray(st.n_scores))
         total = max(cfg.max_new_tokens // cfg.tokens_per_step, 1)
-        savings = float(np.mean(1.0 - steps_run / total))
+        savings = float(np.mean(S.step_savings(steps_run, total)))
         return ServeResult(
             tokens=np.stack(toks, axis=1) if toks else np.zeros((B, 0), np.int32),
             stop_step=stop_step, steps_run=steps_run, savings=savings,
-            scores=np.stack(scores, axis=1) if scores else np.zeros((B, 0)),
-            phis=np.zeros((B, 0, mcfg.d_model)))
+            scores=np.stack(scores, axis=1) if scores else np.zeros((B, 0)))
+
+
+@dataclasses.dataclass
+class StaticQueueResult:
+    """Aggregate of serving a request queue in fixed static-batch groups."""
+    stop_step: np.ndarray        # (N,) per request
+    steps_run: np.ndarray        # (N,)
+    scores: List[np.ndarray]     # per request, (n_steps,)
+    engine_steps: int            # total fused decode steps across groups
+    active_slot_steps: int       # slot-steps before each sequence stopped
+    total_slot_steps: int        # engine_steps x group width
+    wall_time_s: float
+
+
+def serve_queue_static(engine: ServingEngine, batch: Dict[str, jnp.ndarray],
+                       prompt_len: int, n_slots: int) -> StaticQueueResult:
+    """Serve a queue in fixed groups of ``n_slots`` through the deprecated
+    static-batch path (no eviction: each group runs until its slowest
+    member finishes).  The baseline both ``launch/serve.py`` and
+    ``benchmarks/serving_throughput.py`` compare the scheduler against."""
+    import time
+    n = next(iter(batch.values())).shape[0]
+    stop_steps, steps_run, scores = [], [], []
+    engine_steps = active = total = 0
+    t0 = time.perf_counter()
+    for lo in range(0, n, n_slots):
+        group = {k: v[lo:lo + n_slots] for k, v in batch.items()}
+        res = engine.serve(group, prompt_len=prompt_len)
+        iters = res.tokens.shape[1]
+        b = group["tokens"].shape[0] if "tokens" in group else \
+            next(iter(group.values())).shape[0]
+        engine_steps += iters
+        total += iters * b
+        # a slot is useful until its sequence stops; frozen after
+        active += int(np.minimum(
+            res.steps_run * engine.cfg.tokens_per_step, iters).sum())
+        stop_steps.extend(res.stop_step.tolist())
+        steps_run.extend(res.steps_run.tolist())
+        scores.extend(res.scores[i] for i in range(res.scores.shape[0]))
+    return StaticQueueResult(
+        stop_step=np.array(stop_steps), steps_run=np.array(steps_run),
+        scores=scores, engine_steps=engine_steps, active_slot_steps=active,
+        total_slot_steps=total, wall_time_s=time.perf_counter() - t0)
 
 
 def extract_trajectories(model: Model, params, batch, prompt_len: int,
@@ -205,3 +310,81 @@ def extract_trajectories(model: Model, params, batch, prompt_len: int,
             acc, cnt = jnp.zeros_like(acc), 0
     return (np.stack(phis, axis=1) if phis else np.zeros((B, 0, mcfg.d_model)),
             np.stack(tokens, axis=1))
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching: slot-level engine
+
+
+class SlotStepView(NamedTuple):
+    """Host-visible per-slot observation after one fused engine step."""
+    tokens: np.ndarray      # (n_slots,) token decoded this step
+    stopped: np.ndarray     # (n_slots,) bool — ORCA threshold crossed
+    stop_step: np.ndarray   # (n_slots,) reasoning step at stop (-1 active)
+    n_scores: np.ndarray    # (n_slots,) scores emitted since admission
+    smoothed: np.ndarray    # (n_slots,) current smoothed score
+
+
+class ContinuousServingEngine:
+    """Fixed-shape batch of ``n_slots`` whose rows live independent lives.
+
+    The jax surgery behind continuous batching, kept deliberately small:
+
+    * ``pos`` is a per-slot vector — every model family's ``decode_step``
+      accepts (B,) positions (per-row valid masks + per-row cache scatter).
+    * ``admit`` prefills ONE request (batch 1) and dynamic-update-slices its
+      decode state into the slot (batch axis 1 in every leaf), then resets
+      that slot's probe fast weights to (W0, b0) — the slot's score
+      trajectory is exactly a fresh single-request run.
+    * ``release`` parks the slot (probe ``stopped=True``): the fused step
+      treats it as no-op until the scheduler refills it.
+
+    The scheduler (``repro.serving.scheduler.OrcaScheduler``) owns queues,
+    request lifecycles and metrics; this class owns device state only.
+    """
+
+    def __init__(self, model: Model, params, pc: ProbeConfig, theta,
+                 cfg: ServeConfig, n_slots: int, cache_len: int,
+                 window: Optional[int] = None):
+        self.model, self.params, self.pc, self.theta, self.cfg = \
+            model, params, pc, theta, cfg
+        self.n_slots, self.cache_len = n_slots, cache_len
+        mcfg = model.cfg
+        self.state = model.init_decode_state(n_slots, cache_len)
+        st = init_probe_state(pc, theta, n_slots, mcfg.d_model)
+        self.st = st._replace(stopped=jnp.ones((n_slots,), bool))
+        self.token = jnp.zeros((n_slots,), jnp.int32)
+        self.pos = np.zeros((n_slots,), np.int32)
+        self._step_fn = jax.jit(make_serve_step(model, pc, cfg, window=window))
+        self._inject = jax.jit(functools.partial(
+            inject_prefill, model, cache_len=cache_len))
+        self._reset = jax.jit(functools.partial(reset_probe_slot, pc),
+                              static_argnames=("active",))
+
+    def admit(self, slot: int, batch_one: Dict[str, jnp.ndarray],
+              prompt_len: int) -> None:
+        """Prefill + inject one request into ``slot`` and arm its probe."""
+        self.state = self._inject(self.params, self.state, batch_one,
+                                  jnp.asarray(slot, jnp.int32))
+        self.st = self._reset(self.theta, self.st,
+                              jnp.asarray(slot, jnp.int32), active=True)
+        self.token = self.token.at[slot].set(0)
+        self.pos[slot] = 0 if self.model.cfg.arch_type == "audio" else prompt_len
+
+    def release(self, slot: int) -> None:
+        """Evict the slot's request: park the probe row as no-op compute."""
+        self.st = self._reset(self.theta, self.st,
+                              jnp.asarray(slot, jnp.int32), active=False)
+        self.pos[slot] = 0
+
+    def step(self) -> SlotStepView:
+        """One fused decode+probe step for every slot (vector pos)."""
+        pos = jnp.asarray(self.pos, jnp.int32)
+        self.token, self.state, self.st = self._step_fn(
+            self.params, self.theta, self.token, self.state, pos, self.st)
+        self.pos = self.pos + 1
+        return SlotStepView(tokens=np.asarray(self.token),
+                            stopped=np.asarray(self.st.stopped),
+                            stop_step=np.asarray(self.st.stop_step),
+                            n_scores=np.asarray(self.st.n_scores),
+                            smoothed=np.asarray(self.st.smoothed))

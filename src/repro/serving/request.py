@@ -1,0 +1,112 @@
+"""Request-centric serving: lifecycle + per-request / fleet metrics.
+
+A ``Request`` is one user sequence moving through the ORCA server:
+
+    WAITING -> PREFILL -> RUNNING -> STOPPED | FINISHED
+
+``STOPPED`` means the calibrated ORCA threshold test fired (the paper's
+early stop — the request's remaining step budget is *returned to the
+fleet* by evicting its slot); ``FINISHED`` means the token budget ran out
+without a stop.  Metrics use the shared savings helper
+(``repro.core.stopping.step_savings``) so served savings are directly
+comparable with offline-evaluated savings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import stopping as S
+
+
+class RequestState(enum.Enum):
+    WAITING = "waiting"
+    PREFILL = "prefill"
+    RUNNING = "running"
+    STOPPED = "stopped"      # ORCA threshold fired -> slot evicted
+    FINISHED = "finished"    # token budget exhausted without a stop
+
+
+_req_counter = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    """One sequence request plus everything observed while serving it."""
+    inputs: Dict[str, jnp.ndarray]        # batch-1 model inputs (prompt)
+    prompt_len: int
+    max_new_tokens: Optional[int] = None  # None -> engine default
+    req_id: int = dataclasses.field(default_factory=lambda: next(_req_counter))
+
+    # lifecycle (owned by the scheduler)
+    state: RequestState = RequestState.WAITING
+    slot: int = -1
+    submitted_step: int = 0               # engine step at enqueue
+    admitted_step: int = -1               # engine step at slot admission
+    completed_step: int = -1              # engine step at stop/finish
+
+    # observations
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    scores: List[float] = dataclasses.field(default_factory=list)
+    stop_step: int = -1                   # reasoning step at ORCA stop (-1 budget)
+    steps_run: int = 0                    # reasoning steps actually executed
+
+    @property
+    def done(self) -> bool:
+        return self.state in (RequestState.STOPPED, RequestState.FINISHED)
+
+    @property
+    def queue_steps(self) -> int:
+        """Engine steps spent waiting for a slot."""
+        return max(self.admitted_step - self.submitted_step, 0)
+
+    def savings(self, tokens_per_step: int, default_max_new: int) -> float:
+        """Fraction of the reasoning-step budget returned to the fleet."""
+        budget = max((self.max_new_tokens or default_max_new)
+                     // tokens_per_step, 1)
+        return float(S.step_savings(self.steps_run, budget))
+
+
+def make_request(tokens: np.ndarray, *, extra: Optional[Dict] = None,
+                 max_new_tokens: Optional[int] = None) -> Request:
+    """Build a Request from a 1-D prompt token array (+ optional extra
+    modalities, e.g. ``patch_embeds`` / ``frames`` with a leading batch-1
+    axis)."""
+    tokens = jnp.asarray(tokens, jnp.int32)
+    assert tokens.ndim == 1, "one request = one unbatched prompt"
+    inputs: Dict[str, jnp.ndarray] = {"tokens": tokens[None]}
+    if extra:
+        inputs.update({k: jnp.asarray(v) for k, v in extra.items()})
+    return Request(inputs=inputs, prompt_len=int(tokens.shape[0]),
+                   max_new_tokens=max_new_tokens)
+
+
+@dataclasses.dataclass
+class FleetMetrics:
+    """Aggregate serving metrics over one scheduler run."""
+    n_requests: int
+    n_slots: int
+    engine_steps: int            # fused decode steps executed
+    active_slot_steps: int       # slot-steps spent on live requests
+    wall_time_s: float
+    requests_per_s: float
+    tokens_per_s: float
+    slot_utilization: float      # active_slot_steps / (engine_steps * n_slots)
+    mean_step_savings: float     # mean over requests (shared metric)
+    mean_queue_steps: float
+
+    def row(self) -> Dict[str, float]:
+        return {
+            "requests": self.n_requests, "slots": self.n_slots,
+            "engine_steps": self.engine_steps,
+            "requests_per_s": self.requests_per_s,
+            "tokens_per_s": self.tokens_per_s,
+            "slot_utilization": self.slot_utilization,
+            "mean_step_savings": self.mean_step_savings,
+            "mean_queue_steps": self.mean_queue_steps,
+        }

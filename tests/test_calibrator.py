@@ -1,0 +1,104 @@
+"""Calibrator protocol conformance (TTT + static) and facade/shim regression."""
+import math
+
+import numpy as np
+import pytest
+
+from repro import api as orca
+from repro.core import stopping as S
+from repro.core.calibrator import (Calibrator, StaticCalibrator,
+                                   TTTCalibrator, make_calibrator)
+from repro.core.pipeline import make_labels, run_orca
+from repro.core.probe import ProbeConfig
+from repro.trajectories import corpus_splits
+
+
+@pytest.fixture(scope="module")
+def splits():
+    return corpus_splits(60, 24, 24, d_phi=16, seed=3)
+
+
+@pytest.fixture(scope="module")
+def fitted(splits):
+    train, _, _ = splits
+    return {
+        "ttt": orca.fit(train, mode="supervised", method="ttt",
+                        pc=ProbeConfig(d_phi=16), epochs=4,
+                        epoch_select=False, seed=3),
+        "static": orca.fit(train, mode="supervised", method="static"),
+    }
+
+
+@pytest.mark.parametrize("method", ["ttt", "static"])
+def test_protocol_conformance(fitted, splits, method):
+    _, cal, test = splits
+    c = fitted[method]
+    assert isinstance(c, Calibrator)
+    assert c.method == method and c.mode == "supervised"
+    s = c.scores(test)
+    assert s.shape == test.phis.shape[:2]
+    assert (s[~test.mask] == 0).all()          # masked steps score 0
+    assert ((s >= 0) & (s <= 1)).all()
+    lam = c.calibrate(cal, delta=0.2)
+    assert lam == c.threshold()
+    assert math.isinf(lam) or 0.0 < lam <= 1.0
+
+
+@pytest.mark.parametrize("method", ["ttt", "static"])
+def test_calibrate_matches_stopping_pipeline(fitted, splits, method):
+    """The protocol's calibrate() must equal the offline LTT path."""
+    _, cal, _ = splits
+    c = fitted[method]
+    lam = c.calibrate(cal, delta=0.2)
+    ref = S.calibrate_and_evaluate(
+        c.scores(cal), make_labels(cal, c.mode), cal.mask,
+        c.scores(cal), make_labels(cal, c.mode), cal.mask, delta=0.2)
+    assert lam == ref.lam
+
+
+def test_unfitted_and_uncalibrated_raise(splits):
+    _, cal, _ = splits
+    c = TTTCalibrator(epochs=1)
+    with pytest.raises(RuntimeError):
+        c.scores(cal)
+    with pytest.raises(RuntimeError):
+        c.calibrate(cal, delta=0.1)
+    with pytest.raises(RuntimeError):
+        c.threshold()
+
+
+def test_static_has_no_serving_params(fitted):
+    with pytest.raises(NotImplementedError):
+        fitted["static"].serving_params()
+
+
+def test_ttt_serving_params_roundtrip(fitted):
+    pc, theta = fitted["ttt"].serving_params()
+    assert pc.d_phi == 16 and "W0" in theta
+
+
+def test_make_calibrator_registry():
+    assert isinstance(make_calibrator("ttt", epochs=1), TTTCalibrator)
+    assert isinstance(make_calibrator("static"), StaticCalibrator)
+    with pytest.raises(ValueError):
+        make_calibrator("nope")
+
+
+def test_run_orca_shim_matches_facade(splits):
+    """The deprecation shim must produce the facade's numbers exactly."""
+    train, cal, test = splits
+    out = run_orca(train, cal, test, mode="supervised",
+                   pc=ProbeConfig(d_phi=16), deltas=(0.1, 0.2), epochs=4,
+                   seed=3)
+    ttt = orca.fit(train, mode="supervised", method="ttt",
+                   pc=ProbeConfig(d_phi=16), epochs=4, seed=3)
+    ev = orca.evaluate(ttt, cal, test, deltas=(0.1, 0.2))
+    for a, b in zip(out["ttt"].results, ev.results):
+        assert a.lam == b.lam
+        assert a.savings == pytest.approx(b.savings, abs=1e-12)
+        assert a.error == pytest.approx(b.error, abs=1e-12)
+    static = orca.fit(train, mode="supervised", method="static")
+    ev_s = orca.evaluate(static, cal, test, deltas=(0.1, 0.2))
+    for a, b in zip(out["static"].results, ev_s.results):
+        assert a.lam == b.lam
+        assert a.savings == pytest.approx(b.savings, abs=1e-12)

@@ -1,0 +1,150 @@
+"""Scheduler admission/eviction invariants + eviction score-invariance +
+static-batch shim regression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.probe import ProbeConfig, init_outer
+from repro.models import build
+from repro.serving import (ContinuousServingEngine, OrcaScheduler,
+                           RequestState, ServeConfig, ServingEngine,
+                           init_probe_state, make_request, reset_probe_slot)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("smollm_360m").reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _probe(mcfg, bias, smooth_window=2):
+    pc = ProbeConfig(d_phi=mcfg.d_model, smooth_window=smooth_window)
+    theta = init_outer(pc, jax.random.PRNGKey(1))
+    theta["b0"] = jnp.asarray(float(bias))
+    return pc, theta
+
+
+def _prompts(mcfg, n, prompt_len=8, seed=2):
+    return jax.random.randint(jax.random.PRNGKey(seed), (n, prompt_len), 0,
+                              mcfg.vocab_size)
+
+
+# ---------------------------------------------------------------------------
+# probe-state slot ops
+
+def test_reset_probe_slot_admit_and_park():
+    pc = ProbeConfig(d_phi=4, smooth_window=3)
+    theta = init_outer(pc, jax.random.PRNGKey(0))
+    st = init_probe_state(pc, theta, 3, 4)
+    dirty = st._replace(W=st.W + 7.0, n_scores=st.n_scores + 5,
+                        stopped=jnp.ones((3,), bool))
+    fresh = reset_probe_slot(pc, theta, dirty, 1, active=True)
+    np.testing.assert_allclose(np.asarray(fresh.W[1]),
+                               np.asarray(theta["W0"]))
+    assert int(fresh.n_scores[1]) == 0 and not bool(fresh.stopped[1])
+    # other slots untouched
+    np.testing.assert_allclose(np.asarray(fresh.W[0]), np.asarray(dirty.W[0]))
+    assert bool(fresh.stopped[0])
+    parked = reset_probe_slot(pc, theta, fresh, 1, active=False)
+    assert bool(parked.stopped[1])
+
+
+# ---------------------------------------------------------------------------
+# scheduler invariants
+
+def test_freed_slot_refilled_on_next_step(small_model):
+    model, params = small_model
+    pc, theta = _probe(model.cfg, 3.0)       # high scores -> early stops
+    cfg = ServeConfig(tokens_per_step=2, max_new_tokens=24, lam=0.5, burn_in=1)
+    sched = OrcaScheduler(model, params, pc, theta, cfg, n_slots=2)
+    reqs = [make_request(p) for p in _prompts(model.cfg, 6)]
+    done, fleet = sched.run(reqs)
+    assert all(r.done for r in done)
+    evictions = sorted(r.completed_step for r in done)
+    late_admissions = sorted(r.admitted_step for r in done
+                             if r.admitted_step > 0)
+    # every eviction immediately hands its slot to the next waiting request
+    assert late_admissions == evictions[:len(late_admissions)]
+    assert len(late_admissions) == 4         # 6 requests, 2 initial slots
+    assert fleet.engine_steps < 6 * 24       # far better than sequential
+    assert 0.0 < fleet.slot_utilization <= 1.0
+    assert fleet.n_requests == 6
+
+
+def test_all_requests_reach_terminal_state(small_model):
+    model, params = small_model
+    pc, theta = _probe(model.cfg, -50.0)     # never stops -> budget path
+    cfg = ServeConfig(tokens_per_step=4, max_new_tokens=8, lam=0.99, burn_in=0)
+    sched = OrcaScheduler(model, params, pc, theta, cfg, n_slots=2)
+    reqs = [make_request(p) for p in _prompts(model.cfg, 3)]
+    done, fleet = sched.run(reqs)
+    assert [r.state for r in done] == [RequestState.FINISHED] * 3
+    assert all(r.stop_step == -1 and len(r.tokens) == 8 for r in done)
+    # 3 requests x 8 tokens over 2 slots: one refill round
+    assert fleet.engine_steps == 16
+
+
+def test_eviction_is_score_invariant(small_model):
+    """A request served under continuous batching (staggered admission,
+    neighbors coming and going) must produce the same scores and stop step
+    as a fresh single-request run."""
+    model, params = small_model
+    pc, theta = _probe(model.cfg, 3.0)
+    cfg = ServeConfig(tokens_per_step=2, max_new_tokens=16, lam=0.6, burn_in=1)
+    prompts = _prompts(model.cfg, 5)
+    sched = OrcaScheduler(model, params, pc, theta, cfg, n_slots=2)
+    done, _ = sched.run([make_request(p) for p in prompts])
+    for i, r in enumerate(done):
+        solo_sched = OrcaScheduler(model, params, pc, theta, cfg, n_slots=1)
+        solo, _ = solo_sched.run([make_request(prompts[i])])
+        assert solo[0].stop_step == r.stop_step
+        np.testing.assert_allclose(np.array(r.scores),
+                                   np.array(solo[0].scores), atol=1e-4)
+
+
+def test_scheduler_matches_static_batch_engine(small_model):
+    """Shim regression: the deprecated static-batch ServingEngine and the
+    continuous scheduler agree on every stop decision, score and the shared
+    savings metric when given the same queue."""
+    model, params = small_model
+    pc, theta = _probe(model.cfg, 3.0)
+    cfg = ServeConfig(tokens_per_step=2, max_new_tokens=16, lam=0.6, burn_in=1)
+    prompts = _prompts(model.cfg, 4)
+    res = ServingEngine(model, params, pc, theta, cfg).serve(
+        {"tokens": prompts}, prompt_len=8)
+    sched = OrcaScheduler(model, params, pc, theta, cfg, n_slots=2)
+    done, fleet = sched.run([make_request(p) for p in prompts])
+    assert res.stop_step.tolist() == [r.stop_step for r in done]
+    assert res.steps_run.tolist() == [r.steps_run for r in done]
+    for i, r in enumerate(done):
+        n = len(r.scores)
+        np.testing.assert_allclose(np.array(r.scores), res.scores[i, :n],
+                                   atol=1e-4)
+    # both paths report the SAME unified savings metric
+    assert fleet.mean_step_savings == pytest.approx(res.savings, abs=1e-9)
+
+
+def test_continuous_engine_admit_release_cycle(small_model):
+    """Slot-level engine API: admit -> step -> release -> re-admit reuses the
+    slot with a clean probe state."""
+    model, params = small_model
+    mcfg = model.cfg
+    pc, theta = _probe(mcfg, 3.0, smooth_window=1)
+    cfg = ServeConfig(tokens_per_step=1, max_new_tokens=8, lam=0.5, burn_in=0)
+    eng = ContinuousServingEngine(model, params, pc, theta, cfg,
+                                  n_slots=2, cache_len=24)
+    prompts = _prompts(mcfg, 2, prompt_len=6)
+    eng.admit(0, {"tokens": prompts[0:1]}, 6)
+    view = eng.step()
+    assert bool(view.stopped[1])      # empty slot stays parked (no-op row)
+    first_run = [float(eng.step().smoothed[0]) for _ in range(2)]
+    eng.release(0)
+    assert bool(eng.step().stopped[0])
+    eng.admit(0, {"tokens": prompts[0:1]}, 6)
+    eng.step()
+    second_run = [float(eng.step().smoothed[0]) for _ in range(2)]
+    np.testing.assert_allclose(first_run, second_run, atol=1e-4)
