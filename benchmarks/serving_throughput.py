@@ -15,6 +15,10 @@ lambda*, same burn-in), so per-request stop decisions must be IDENTICAL —
 the benchmark asserts stop steps match exactly and score trajectories agree
 to tolerance, then reports requests/s, engine steps and slot utilization.
 Eviction is where the paper's calibrated savings become throughput.
+
+A third row replays the continuous queue with the PR-1 jnp probe
+(``probe_impl="ref"``) for a before/after of the fused Pallas serving step:
+same stop decisions (asserted), steps/s compared.
 """
 from __future__ import annotations
 
@@ -29,8 +33,8 @@ from repro.configs import get_config
 from repro.core.probe import ProbeConfig
 from repro.launch.serve import model_inputs, trajectories_from_model
 from repro.models import build
-from repro.serving import (ServeConfig, ServingEngine, make_request,
-                           serve_queue_static)
+from repro.serving import (OrcaScheduler, ServeConfig, ServingEngine,
+                           make_request, serve_queue_static)
 
 from benchmarks.common import print_table, save_rows
 
@@ -47,6 +51,8 @@ def main(argv=None) -> int:
     ap.add_argument("--train-trajectories", type=int, default=24)
     ap.add_argument("--delta", type=float, default=0.25)
     ap.add_argument("--epochs", type=int, default=8)
+    ap.add_argument("--reps", type=int, default=3,
+                    help="timed repetitions per path (best kept)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     n_requests = args.requests or 4 * args.slots
@@ -76,24 +82,47 @@ def main(argv=None) -> int:
                        max_new_tokens=args.max_new_tokens, lam=float(lam),
                        burn_in=2)
 
+    extra_keys = [k for k in batch if k != "tokens"]
+
+    def queue_requests():
+        return [make_request(batch["tokens"][i],
+                             extra={k: batch[k][i:i + 1] for k in extra_keys})
+                for i in range(n_requests)]
+
+    # each path gets one untimed warm-up pass (jit + Pallas tracing), then
+    # best-of-N timed passes — steady-state throughput is what serving
+    # cares about, and best-of-N tames shared-machine timing noise
+    def best_of(run, n=args.reps):
+        results = [run() for _ in range(n)]
+        return min(results, key=lambda r: r[-1].wall_time_s
+                   if isinstance(r, tuple) else r.wall_time_s)
+
     # --- static-batch baseline -------------------------------------------
     eng = ServingEngine(model, params, pc, theta, scfg)
-    base = serve_queue_static(eng, batch, args.prompt_len, args.slots)
+    serve_queue_static(eng, batch, args.prompt_len, args.slots)
+    base = best_of(lambda: serve_queue_static(eng, batch, args.prompt_len,
+                                              args.slots))
 
     # --- continuous batching ---------------------------------------------
     sched = orca.engine(model, params, calib, n_slots=args.slots, lam=lam,
                         tokens_per_step=args.tokens_per_step,
                         max_new_tokens=args.max_new_tokens, burn_in=2)
-    extra_keys = [k for k in batch if k != "tokens"]
-    reqs = [make_request(batch["tokens"][i],
-                         extra={k: batch[k][i:i + 1] for k in extra_keys})
-            for i in range(n_requests)]
-    done, fleet = sched.run(reqs)
+    sched.run(queue_requests())
+    done, fleet = best_of(lambda: sched.run(queue_requests()))
 
-    # --- eviction must not change ANY stop decision ----------------------
+    # --- before/after: PR-1 jnp probe vs the fused Pallas serving step ---
+    sched_ref = OrcaScheduler(model, params, pc, theta, scfg,
+                              n_slots=args.slots, probe_impl="ref")
+    sched_ref.run(queue_requests())
+    done_ref, fleet_ref = best_of(lambda: sched_ref.run(queue_requests()))
+
+    # --- eviction/probe-impl must not change ANY stop decision -----------
     stop_c = np.array([r.stop_step for r in done])
+    stop_r = np.array([r.stop_step for r in done_ref])
     assert (base.stop_step == stop_c).all(), \
         f"stop decisions diverged: static {base.stop_step} vs {stop_c}"
+    assert (stop_c == stop_r).all(), \
+        f"probe impls diverged: kernel {stop_c} vs pr1-jnp {stop_r}"
     for i, r in enumerate(done):
         n = min(len(r.scores), base.scores[i].shape[0])
         np.testing.assert_allclose(np.array(r.scores)[:n],
@@ -102,11 +131,16 @@ def main(argv=None) -> int:
           f"(stop steps {stop_c.tolist()})")
 
     util_b = base.active_slot_steps / max(base.total_slot_steps, 1)
+    steps_s = fleet.engine_steps / max(fleet.wall_time_s, 1e-9)
+    steps_s_ref = fleet_ref.engine_steps / max(fleet_ref.wall_time_s, 1e-9)
     rows = [
         {"mode": "static-batch", "engine_steps": base.engine_steps,
          "requests_per_s": n_requests / base.wall_time_s,
          "slot_utilization": util_b, "wall_s": base.wall_time_s},
-        {"mode": "continuous", **fleet.row(), "wall_s": fleet.wall_time_s},
+        {"mode": "continuous", **fleet.row(), "steps_per_s": steps_s,
+         "wall_s": fleet.wall_time_s},
+        {"mode": "continuous[pr1-jnp-probe]", **fleet_ref.row(),
+         "steps_per_s": steps_s_ref, "wall_s": fleet_ref.wall_time_s},
     ]
     print_table("serving throughput (same lambda*, same stop decisions)",
                 rows, ("mode", "engine_steps", "requests_per_s",
@@ -116,6 +150,9 @@ def main(argv=None) -> int:
     speedup = rows[1]["requests_per_s"] / max(rows[0]["requests_per_s"], 1e-9)
     print(f"\ncontinuous batching: {speedup:.2f}x requests/s, slot "
           f"utilization {util_b:.2f} -> {fleet.slot_utilization:.2f}")
+    print(f"fused probe step: {steps_s:.1f} steps/s (kernel) vs "
+          f"{steps_s_ref:.1f} steps/s (pr1-jnp) -> "
+          f"{steps_s / max(steps_s_ref, 1e-9):.2f}x at identical stops")
     if fleet.engine_steps > base.engine_steps:
         print("note: queue shorter than needed to amortize? continuous ran "
               "more fused steps than the static baseline")

@@ -18,6 +18,7 @@ import dataclasses
 import math
 from typing import Dict, Optional, Protocol, runtime_checkable
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import calibration as C
@@ -117,10 +118,24 @@ class TTTCalibrator(_LTTMixin):
         return self.probe.scores(ts)
 
     def serving_params(self):
-        """(ProbeConfig, theta) for the fused serve step / scheduler."""
+        """(ProbeConfig, theta) for the fused serve step / scheduler.
+
+        Validated round-trip into the kernel state: the serving engine
+        initializes each slot's fast weights from ``theta["W0"]/["b0"]``
+        (``serving.engine.init_probe_state``) and the Pallas
+        ``serving_probe_step`` consumes exactly (W (B, feat_dim), b (B,)),
+        so a shape mismatch here would only surface as a cryptic kernel
+        error mid-serve — check it at the seam instead.
+        """
         if self.probe is None:
             raise RuntimeError("fit() must run before serving_params()")
-        return self.probe.pc, self.probe.theta
+        pc, theta = self.probe.pc, self.probe.theta
+        w0 = np.asarray(theta["W0"])
+        if w0.shape != (pc.feat_dim,):
+            raise ValueError(
+                f"theta['W0'] {w0.shape} does not round-trip into the "
+                f"kernel's per-slot state (expected ({pc.feat_dim},))")
+        return pc, theta
 
 
 @dataclasses.dataclass
@@ -128,8 +143,11 @@ class StaticCalibrator(_LTTMixin):
     """The static baseline: PCA + logistic regression, no online adaptation.
 
     Protocol-shaped wrapper over ``fit_static_probe`` (Wu et al., 2025 —
-    the paper's "Static Probe" row).  It cannot run in the fused TTT serving
-    engine (no fast weights), so ``serving_params`` raises.
+    the paper's "Static Probe" row).  ``serving_params`` flattens
+    PCA+logreg into an equivalent frozen linear probe (eta = 0, so the
+    kernel's score-then-update never moves the weights), which lets the
+    SAME fused serving engine deploy the static baseline — the validity
+    regression suite runs both probes through one hot path.
     """
     n_components: int = 64
     epochs: int = 200
@@ -156,9 +174,23 @@ class StaticCalibrator(_LTTMixin):
         return self.probe.scores(ts.phis, ts.mask)
 
     def serving_params(self):
-        raise NotImplementedError(
-            "the static probe has no fast-weight state to serve; use a "
-            "TTTCalibrator for the fused engine")
+        """Flatten PCA + logreg into kernel state for the fused engine.
+
+        s = sigma(w . P^T (phi - mu) + b) == sigma(W_eff . phi + b_eff)
+        with W_eff = P w and b_eff = b - mu . P w; eta = 0 freezes the
+        kernel's inner update, so the served scores equal the offline
+        ``scores()`` path (round-trip asserted by the validity suite).
+        """
+        if self.probe is None:
+            raise RuntimeError("fit() must run before serving_params()")
+        p = self.probe
+        w_eff = p.components @ p.w                     # (d,)
+        b_eff = float(p.b - p.mean @ w_eff)
+        pc = ProbeConfig(d_phi=int(p.mean.shape[0]), variant="noqk",
+                         eta=0.0, smooth_window=p.smooth_window)
+        theta = {"W0": jnp.asarray(w_eff, jnp.float32),
+                 "b0": jnp.asarray(b_eff, jnp.float32)}
+        return pc, theta
 
 
 _REGISTRY = {"ttt": TTTCalibrator, "static": StaticCalibrator}

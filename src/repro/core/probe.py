@@ -120,6 +120,39 @@ def brier_grad(fast, z, c) -> Tuple[jnp.ndarray, jnp.ndarray]:
     return coeff * z, coeff
 
 
+def score_rows(W, b, z) -> jnp.ndarray:
+    """Row-wise fast weights: sigma(sum(z * W, -1) + b).
+
+    W/z (..., f) with matching leading axes, b (...,) — each row scored by
+    its OWN (W_i, b_i), the layout of the serving engine's vector per-slot
+    state and of the Pallas kernels' VMEM-resident state."""
+    return jax.nn.sigmoid(jnp.sum(z * W, axis=-1) + b)
+
+
+def score_then_update(W, b, zq, zk, c, m, eta
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """THE inner-loop step (Algorithm 2 lines 8-16), row-wise state.
+
+    Score the Q view with the current fast weights, then apply one masked
+    Brier-gradient update on the K view.  This single definition is what the
+    Pallas kernels (``repro.kernels.ttt_probe``), their jnp oracles
+    (``repro.kernels.ref``) and the serving engine all execute — the paper's
+    validity argument needs the calibrated path and the served path to be the
+    same procedure, so the formula lives in exactly one place.
+
+    W (..., f), b/c/m (...,); zq/zk (..., f); eta scalar.  ``m`` freezes the
+    update (padding, non-boundary tokens, stopped slots); the score is still
+    emitted.  Returns (s_q, W', b').
+    """
+    s_q = score_rows(W, b, zq)
+    s_k = score_rows(W, b, zk)
+    coeff = 2.0 * (s_k - c) * s_k * (1.0 - s_k)
+    upd = eta * m
+    W_new = W - jnp.asarray(upd)[..., None] * (jnp.asarray(coeff)[..., None] * zk)
+    b_new = b - upd * coeff
+    return s_q, W_new, b_new
+
+
 def fast_init(pc: ProbeConfig, theta) -> Tuple[jnp.ndarray, jnp.ndarray]:
     return theta["W0"], theta["b0"]
 

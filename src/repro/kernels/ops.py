@@ -3,13 +3,19 @@
 ``interpret`` defaults to True off-TPU (this container is CPU-only; the
 kernel bodies execute in interpret mode, which is how correctness is
 validated here) and to False on TPU, where the Mosaic-compiled kernels are
-the production hot path.
+the production hot path.  ``REPRO_PALLAS_INTERPRET=1|0`` overrides the
+autodetection — CI's kernel-parity job forces ``1`` so the fused serving
+step is exercised through the Pallas machinery on every PR.
 """
 from __future__ import annotations
 
+import os
+
 import jax
 
-from repro.kernels.ttt_probe import make_unroll_kernel, ttt_probe_scan
+from repro.kernels.ttt_probe import (ProbeStepOut, make_unroll_kernel,
+                                     serving_probe_step, ttt_probe_batched,
+                                     ttt_probe_scan)
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.decode_attention import flash_decode
 from repro.kernels.rwkv6_scan import wkv_scan
@@ -20,8 +26,12 @@ def on_tpu() -> bool:
 
 
 def default_interpret() -> bool:
+    forced = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if forced is not None and forced != "":
+        return forced not in ("0", "false", "False")
     return not on_tpu()
 
 
-__all__ = ["ttt_probe_scan", "make_unroll_kernel", "flash_attention",
+__all__ = ["ProbeStepOut", "ttt_probe_scan", "ttt_probe_batched",
+           "make_unroll_kernel", "serving_probe_step", "flash_attention",
            "flash_decode", "wkv_scan", "on_tpu", "default_interpret"]

@@ -5,6 +5,8 @@ zoo and ORCA core are *defined* by these semantics; the kernels must match.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -14,19 +16,66 @@ from repro.models.attention import attn_prefill_einsum, _decode_core
 from repro.models import rwkv6 as _rwkv6
 
 
+def _ttt_unroll_one(zq1, zk1, c1, m1, w1, b1, eta):
+    """Inner-loop unroll for ONE trajectory from state (w1, b1)."""
+    def step(fast, xs):
+        zq_t, zk_t, c_t, m_t = xs
+        w, b = fast
+        s_q = jax.nn.sigmoid(jnp.dot(zq_t, w) + b)
+        s_k = jax.nn.sigmoid(jnp.dot(zk_t, w) + b)
+        coeff = 2.0 * (s_k - c_t) * s_k * (1 - s_k) * m_t * eta
+        return (w - coeff * zk_t, b - coeff), s_q
+    (wf, bf), scores = jax.lax.scan(step, (w1, b1), (zq1, zk1, c1, m1))
+    return scores, wf, bf
+
+
 def ttt_probe_ref(zq, zk, c, m, w0, b0, eta):
     """Batched inner-loop unroll. zq/zk (N,T,f) -> scores (N,T), wf, bf."""
-    def one(zq1, zk1, c1, m1):
-        def step(fast, xs):
-            zq_t, zk_t, c_t, m_t = xs
-            w, b = fast
-            s_q = jax.nn.sigmoid(jnp.dot(zq_t, w) + b)
-            s_k = jax.nn.sigmoid(jnp.dot(zk_t, w) + b)
-            coeff = 2.0 * (s_k - c_t) * s_k * (1 - s_k) * m_t * eta
-            return (w - coeff * zk_t, b - coeff), s_q
-        (wf, bf), scores = jax.lax.scan(step, (w0, b0), (zq1, zk1, c1, m1))
-        return scores, wf, bf
-    return jax.vmap(one)(zq, zk, c, m)
+    return jax.vmap(lambda a, b_, c_, d: _ttt_unroll_one(a, b_, c_, d, w0, b0,
+                                                         eta))(zq, zk, c, m)
+
+
+def ttt_probe_batched_ref(zq, zk, c, m, w0, b0, eta):
+    """Vector-state unroll: each trajectory starts from its OWN (w0_i, b0_i).
+    zq/zk (N,T,f), w0 (N,f), b0 (N,) -> scores (N,T), wf (N,f), bf (N,)."""
+    return jax.vmap(functools.partial(_ttt_unroll_one, eta=eta))(
+        zq, zk, c, m, w0, b0)
+
+
+def serving_probe_step_ref(zq, zk, boundary, W, b, ring, n_scores,
+                           stopped, stop_step, eta, lam, *, burn_in: int):
+    """The PR-1 serving probe step, verbatim (``engine.probe_update``'s
+    score/smooth/threshold/update math before the kernel unification) — the
+    oracle the fused ``serving_probe_step`` kernel is held to.  Same
+    signature/return as the kernel (``ttt_probe.ProbeStepOut``)."""
+    from repro.core import probe as P
+    from repro.kernels.ttt_probe import ProbeStepOut
+    boundary = jnp.asarray(boundary, bool) & ~stopped
+    # per-sequence fast weights: s_t = sigma(W_i . z_i + b_i), uses W_{t-1}
+    s = jax.nn.sigmoid(jnp.sum(zq * W, axis=-1) + b)            # (B,)
+    # rolling smoothing
+    ring = jnp.where(boundary[:, None],
+                     jnp.concatenate([ring[:, 1:], s[:, None]], axis=1),
+                     ring)
+    n_scores = n_scores + boundary.astype(jnp.int32)
+    w = ring.shape[1]
+    denom = jnp.minimum(n_scores, w).astype(jnp.float32)
+    smoothed = jnp.where(n_scores > 0,
+                         jnp.sum(ring, axis=1) / jnp.maximum(denom, 1.0),
+                         0.0)
+    # stopping decision (Algorithm 2 line 11), after the burn-in
+    stop_now = boundary & (smoothed >= lam) & (n_scores > burn_in)
+    stopped_new = stopped | stop_now
+    stop_step = jnp.where(stop_now & (stop_step < 0), n_scores, stop_step)
+    # inner-loop update with pseudo-target C_t = 0 (only while not stopped)
+    gW, gb = jax.vmap(lambda fast, z: P.brier_grad(fast, z, 0.0),
+                      in_axes=((0, 0), 0))((W, b), zk)
+    upd = (boundary & ~stopped_new).astype(jnp.float32)
+    W = W - eta * upd[:, None] * gW
+    b = b - eta * upd * gb
+    return ProbeStepOut(s=s, W=W, b=b, ring=ring, n_scores=n_scores,
+                        smoothed=smoothed, stopped=stopped_new,
+                        stop_step=stop_step)
 
 
 def flash_attention_ref(q, k, v, *, causal=True, window=None):

@@ -5,6 +5,8 @@ from repro.serving.engine import (ContinuousServingEngine, ProbeState,
                                   inject_prefill, make_serve_step,
                                   probe_update, reset_probe_slot,
                                   serve_queue_static)
+from repro.serving.replay import (replay_model, replay_params,
+                                  replay_requests, served_stop_times)
 from repro.serving.request import (FleetMetrics, Request, RequestState,
                                    make_request)
 from repro.serving.scheduler import OrcaScheduler
@@ -14,4 +16,6 @@ __all__ = ["ContinuousServingEngine", "FleetMetrics", "OrcaScheduler",
            "ServeResult", "ServingEngine", "SlotStepView",
            "StaticQueueResult", "extract_trajectories", "init_probe_state",
            "inject_prefill", "make_request", "make_serve_step",
-           "probe_update", "reset_probe_slot", "serve_queue_static"]
+           "probe_update", "replay_model", "replay_params",
+           "replay_requests", "reset_probe_slot", "serve_queue_static",
+           "served_stop_times"]

@@ -36,6 +36,10 @@ import numpy as np
 from repro.core import probe as P
 from repro.core import stopping as S
 from repro.core.probe import ProbeConfig
+from repro.kernels import ops as K
+from repro.kernels import ref as KR
+from repro.kernels.ttt_probe import ProbeStepOut as KernelOut
+from repro.kernels.ttt_probe import serving_probe_step
 from repro.models.registry import Model
 
 
@@ -110,43 +114,63 @@ def inject_prefill(model: Model, params, state, batch_one: Dict[str, jnp.ndarray
 
 
 def probe_update(pc: ProbeConfig, theta, st: ProbeState, hidden: jnp.ndarray,
-                 lam: float, tokens_per_step: int, burn_in: int) -> ProbeState:
-    """Accumulate one token's hidden state; at step boundaries run the
-    score-then-update protocol and the threshold stopping test."""
+                 lam: float, tokens_per_step: int, burn_in: int, *,
+                 probe_impl: str = "kernel",
+                 interpret: Optional[bool] = None) -> ProbeState:
+    """Accumulate one token's hidden state; at step boundaries run the fused
+    score-then-update + smoothing + threshold step.
+
+    The probe math itself lives in ONE place — the Pallas kernel module
+    (``repro.kernels.ttt_probe.serving_probe_step``) — so the served
+    procedure is the same code the calibration path exercises.
+    ``probe_impl="ref"`` swaps in the pre-refactor jnp oracle
+    (``repro.kernels.ref.serving_probe_step_ref``) for parity tests and the
+    before/after throughput benchmark.
+    """
     hid_sum = st.hid_sum + hidden.astype(jnp.float32)
     tok_count = st.tok_count + 1
     boundary = (tok_count >= tokens_per_step) & ~st.stopped
-
-    phi = hid_sum / jnp.maximum(tok_count, 1)[:, None]
-    zq, zk = P.features(pc, theta, phi)
-    # per-sequence fast weights: s_t = sigma(W_i . z_i + b_i), uses W_{t-1}
-    s = jax.nn.sigmoid(jnp.sum(zq * st.W, axis=-1) + st.b)      # (B,)
-    # rolling smoothing
-    ring = jnp.where(boundary[:, None],
-                     jnp.concatenate([st.ring[:, 1:], s[:, None]], axis=1),
-                     st.ring)
-    n_scores = st.n_scores + boundary.astype(jnp.int32)
-    w = pc.smooth_window
-    denom = jnp.minimum(n_scores, w).astype(jnp.float32)
-    smoothed = jnp.where(n_scores > 0,
-                         jnp.sum(ring, axis=1) / jnp.maximum(denom, 1.0),
-                         0.0)
-    # stopping decision (Algorithm 2 line 11), after the burn-in
-    stop_now = boundary & (smoothed >= lam) & (n_scores > burn_in)
-    stopped = st.stopped | stop_now
-    stop_step = jnp.where(stop_now & (st.stop_step < 0), n_scores, st.stop_step)
-    # inner-loop update with pseudo-target C_t = 0 (only while not stopped)
-    gW, gb = jax.vmap(lambda fast, z: P.brier_grad(fast, z, 0.0),
-                      in_axes=((0, 0), 0))((st.W, st.b), zk)
     eta = P.inner_lr(pc, theta)
-    upd = (boundary & ~stopped).astype(jnp.float32)
-    W = st.W - eta * upd[:, None] * gW
-    b = st.b - eta * upd * gb
+    lam = jnp.asarray(lam, jnp.float32)
+
+    def _features():
+        # step-embedding pooling: running mean of the step's hidden states
+        phi = hid_sum / jnp.maximum(tok_count, 1)[:, None]
+        return P.features(pc, theta, phi)
+
+    if probe_impl == "kernel":
+        interp = K.default_interpret() if interpret is None else interpret
+
+        def _probe(_):
+            zq, zk = _features()
+            return serving_probe_step(zq, zk, boundary, st.W, st.b, st.ring,
+                                      st.n_scores, st.stopped,
+                                      st.stop_step, eta, lam,
+                                      burn_in=int(burn_in), interpret=interp)
+
+        def _skip(_):
+            return KernelOut(jnp.zeros_like(st.b), st.W, st.b, st.ring,
+                             st.n_scores, st.smoothed, st.stopped,
+                             st.stop_step)
+
+        # mid-step tokens (and fully-frozen batches) provably don't change
+        # probe state — only pooling runs, the kernel dispatch is skipped
+        out = jax.lax.cond(jnp.any(boundary), _probe, _skip, None)
+    elif probe_impl == "ref":
+        # the PR-1 path, faithfully: full probe math on every token
+        zq, zk = _features()
+        out = KR.serving_probe_step_ref(zq, zk, boundary, st.W, st.b, st.ring,
+                                        st.n_scores, st.stopped,
+                                        st.stop_step, eta, lam,
+                                        burn_in=int(burn_in))
+    else:
+        raise ValueError(f"unknown probe_impl {probe_impl!r} "
+                         "(expected 'kernel' or 'ref')")
     # reset accumulators at boundaries
     hid_sum = jnp.where(boundary[:, None], 0.0, hid_sum)
     tok_count = jnp.where(boundary, 0, tok_count)
-    return ProbeState(W, b, hid_sum, tok_count, ring, n_scores, smoothed,
-                      stopped, stop_step)
+    return ProbeState(out.W, out.b, hid_sum, tok_count, out.ring,
+                      out.n_scores, out.smoothed, out.stopped, out.stop_step)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -159,10 +183,17 @@ class ServeConfig:
 
 
 def make_serve_step(model: Model, pc: ProbeConfig, cfg: ServeConfig,
-                    window: Optional[int] = None):
+                    window: Optional[int] = None, *,
+                    probe_impl: str = "kernel",
+                    interpret: Optional[bool] = None):
     """Build the fused decode+ORCA step:
     (params, theta, token, cache, pos, probe_state) ->
-    (next_token, cache, probe_state)."""
+    (next_token, cache, probe_state).
+
+    One jitted step fuses decode attention, step-embedding pooling, the
+    Pallas probe score-then-update, smoothing and the threshold test for all
+    slots; engines jit it with the KV cache and probe state donated so XLA
+    updates them in place."""
     mcfg = model.cfg
 
     def serve_step(params, theta, token, cache, pos, st: ProbeState):
@@ -170,7 +201,8 @@ def make_serve_step(model: Model, pc: ProbeConfig, cfg: ServeConfig,
                                                   pos, window=window)
         prev_stopped = st.stopped
         st = probe_update(pc, theta, st, hidden, cfg.lam,
-                          cfg.tokens_per_step, cfg.burn_in)
+                          cfg.tokens_per_step, cfg.burn_in,
+                          probe_impl=probe_impl, interpret=interpret)
         nxt = jnp.argmax(logits[:, :mcfg.vocab_size], axis=-1).astype(jnp.int32)
         # the step on which the stop FIRES still emits its genuinely decoded
         # token; only already-frozen sequences repeat (no-op compute slot)
@@ -178,6 +210,11 @@ def make_serve_step(model: Model, pc: ProbeConfig, cfg: ServeConfig,
         return nxt, cache, st
 
     return serve_step
+
+
+# serve_step arg indices donated by the engines' jitted hot loop: the KV
+# cache (3) and the probe state (5) are consumed and re-emitted every step
+_SERVE_STEP_DONATE = (3, 5)
 
 
 @dataclasses.dataclass
@@ -200,12 +237,16 @@ class ServingEngine:
     and for callers that bring a pre-built batch."""
 
     def __init__(self, model: Model, params, pc: ProbeConfig, theta,
-                 cfg: ServeConfig):
+                 cfg: ServeConfig, *, probe_impl: str = "kernel",
+                 interpret: Optional[bool] = None):
         self.model, self.params, self.pc, self.theta, self.cfg = \
             model, params, pc, theta, cfg
         # one jitted step for the engine's lifetime: repeated serve() calls
         # (e.g. group loops in the throughput benchmark) must not recompile
-        self._step_fn = jax.jit(make_serve_step(model, pc, cfg))
+        self._step_fn = jax.jit(
+            make_serve_step(model, pc, cfg, probe_impl=probe_impl,
+                            interpret=interpret),
+            donate_argnums=_SERVE_STEP_DONATE)
 
     def serve(self, batch: Dict[str, jnp.ndarray], prompt_len: int,
               cache_len: Optional[int] = None) -> ServeResult:
@@ -220,14 +261,17 @@ class ServingEngine:
         token = jnp.zeros((B,), jnp.int32)
         toks, scores, phis = [], [], []
         pos0 = prompt_len if mcfg.arch_type != "audio" else 0
+        # host-side watermark (st's buffers are donated to the next step)
+        last_max_n = 0
         for i in range(cfg.max_new_tokens):
             pos = jnp.asarray(pos0 + i, jnp.int32)
-            prev_n = st.n_scores
             token, state, st = step_fn(self.params, self.theta, token, state,
                                        pos, st)
             toks.append(np.asarray(token))
-            if int(np.asarray(jnp.max(st.n_scores))) > int(np.asarray(jnp.max(prev_n))):
+            max_n = int(np.asarray(jnp.max(st.n_scores)))
+            if max_n > last_max_n:
                 scores.append(np.asarray(st.smoothed))
+                last_max_n = max_n
             if bool(np.asarray(jnp.all(st.stopped))):
                 break
         stop_step = np.asarray(st.stop_step)
@@ -345,7 +389,8 @@ class ContinuousServingEngine:
 
     def __init__(self, model: Model, params, pc: ProbeConfig, theta,
                  cfg: ServeConfig, n_slots: int, cache_len: int,
-                 window: Optional[int] = None):
+                 window: Optional[int] = None, *, probe_impl: str = "kernel",
+                 interpret: Optional[bool] = None):
         self.model, self.params, self.pc, self.theta, self.cfg = \
             model, params, pc, theta, cfg
         self.n_slots, self.cache_len = n_slots, cache_len
@@ -355,7 +400,10 @@ class ContinuousServingEngine:
         self.st = st._replace(stopped=jnp.ones((n_slots,), bool))
         self.token = jnp.zeros((n_slots,), jnp.int32)
         self.pos = np.zeros((n_slots,), np.int32)
-        self._step_fn = jax.jit(make_serve_step(model, pc, cfg, window=window))
+        self._step_fn = jax.jit(
+            make_serve_step(model, pc, cfg, window=window,
+                            probe_impl=probe_impl, interpret=interpret),
+            donate_argnums=_SERVE_STEP_DONATE)
         self._inject = jax.jit(functools.partial(
             inject_prefill, model, cache_len=cache_len))
         self._reset = jax.jit(functools.partial(reset_probe_slot, pc),

@@ -1,0 +1,102 @@
+"""Replay model: serve synthetic trajectories through the REAL engines.
+
+The conformal guarantee attaches to the deployed procedure — decode + probe
++ calibrated threshold — so validity has to be tested end-to-end through
+``ContinuousServingEngine``/``OrcaScheduler``, not just on offline score
+matrices.  Real rollouts are unavailable in this container, but the engines
+only consume the model through four functions (prefill / decode_step /
+init_decode_state / cfg), so a "model" that replays pre-generated step
+embeddings as its hidden states drives the entire serving stack over a
+``repro.trajectories.TrajectorySet``:
+
+* each request's prompt encodes its trajectory id (token 0);
+* ``decode_step`` looks up phi_{t} for the slot's trajectory at its decode
+  position — per-slot ``pos`` vectors index independent trajectories;
+* with ``tokens_per_step = 1`` the engine's step-embedding pooling is exact,
+  so the served score trajectory equals the offline deployed-procedure
+  scores and every stop decision can be checked bit-for-bit.
+
+Used by ``tests/test_validity_regression.py`` (risk <= delta through the
+server) and the parity suite's engine-level fixtures.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import Model
+from repro.serving.request import Request, make_request
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplayConfig:
+    name: str
+    d_model: int
+    vocab_size: int = 8
+    arch_type: str = "dense"
+    prompt_len: int = 1
+    tokens_per_step: int = 1
+
+
+def replay_model(phis: np.ndarray, *, prompt_len: int = 1,
+                 tokens_per_step: int = 1) -> Model:
+    """Model whose decode-step hidden states replay ``phis`` (N, T, d).
+
+    The decode state is {"traj": (1, B) int32} — batch axis 1 like every
+    real family, so ``inject_prefill``'s per-slot dynamic-update-slice and
+    the scheduler's slot machinery work unchanged.
+    """
+    phis = np.asarray(phis, np.float32)
+    n, t, d = phis.shape
+    cfg = ReplayConfig(name=f"replay-{n}x{t}", d_model=d,
+                       vocab_size=max(8, n), prompt_len=prompt_len,
+                       tokens_per_step=tokens_per_step)
+
+    def prefill(cfg, params, batch, cache_len):
+        tokens = batch["tokens"]
+        traj = tokens[:, 0].astype(jnp.int32)
+        state = {"traj": traj[None, :]}                   # (L=1, B)
+        hidden = jnp.zeros((tokens.shape[0], tokens.shape[1], cfg.d_model),
+                           jnp.float32)
+        return state, hidden[:, -1], hidden
+
+    def decode_step(cfg, params, token, state, pos, window=None):
+        traj = state["traj"][0]                           # (B,)
+        bank = params["phis"]                             # (N, T, d)
+        step = (jnp.asarray(pos, jnp.int32) - cfg.prompt_len) \
+            // cfg.tokens_per_step
+        idx = jnp.clip(step, 0, bank.shape[1] - 1)
+        hidden = bank[traj, idx]                          # (B, d)
+        logits = jnp.zeros((hidden.shape[0], cfg.vocab_size), jnp.float32)
+        return logits, hidden, state
+
+    def init_decode_state(batch: int, cache_len: int, abstract: bool = False):
+        return {"traj": jnp.zeros((1, batch), jnp.int32)}
+
+    return Model(cfg=cfg, decls=None, forward=None, prefill=prefill,
+                 decode_step=decode_step, init_decode_state=init_decode_state,
+                 decode_geometry=lambda shape: (shape.seq_len, None))
+
+
+def replay_params(phis: np.ndarray):
+    """The replay model's "weights": the trajectory bank itself."""
+    return {"phis": jnp.asarray(phis, jnp.float32)}
+
+
+def replay_requests(lengths: Sequence[int], *, prompt_len: int = 1,
+                    tokens_per_step: int = 1) -> List[Request]:
+    """One Request per trajectory: prompt = its id, budget = its length."""
+    return [make_request(np.full((prompt_len,), i, np.int64),
+                         max_new_tokens=int(T) * tokens_per_step)
+            for i, T in enumerate(lengths)]
+
+
+def served_stop_times(requests: Sequence[Request],
+                      lengths: Sequence[int]) -> np.ndarray:
+    """Map served outcomes onto offline ``stopping.stop_times`` semantics:
+    0-based stop index, or T_i when the budget ran out (never charged)."""
+    return np.array([r.stop_step - 1 if r.stop_step > 0 else int(T)
+                     for r, T in zip(requests, lengths)], np.int64)

@@ -37,11 +37,17 @@ class OrcaScheduler:
 
     def __init__(self, model: Model, params, pc: ProbeConfig, theta,
                  cfg: ServeConfig, *, n_slots: int = 4,
-                 cache_len: Optional[int] = None):
+                 cache_len: Optional[int] = None,
+                 probe_impl: str = "kernel",
+                 interpret: Optional[bool] = None):
         self.model, self.params, self.pc, self.theta, self.cfg = \
             model, params, pc, theta, cfg
         self.n_slots = n_slots
         self.cache_len = cache_len
+        # probe_impl/interpret route the fused step's probe math: "kernel"
+        # (the Pallas serving_probe_step) or "ref" (jnp parity oracle)
+        self.probe_impl = probe_impl
+        self.interpret = interpret
         self._engine: Optional[ContinuousServingEngine] = None
 
     # ------------------------------------------------------------------
@@ -57,7 +63,8 @@ class OrcaScheduler:
         if self._engine is None or self._engine.cache_len < cache_len:
             self._engine = ContinuousServingEngine(
                 self.model, self.params, self.pc, self.theta, self.cfg,
-                self.n_slots, cache_len)
+                self.n_slots, cache_len, probe_impl=self.probe_impl,
+                interpret=self.interpret)
         return self._engine
 
     # ------------------------------------------------------------------

@@ -67,9 +67,15 @@ def test_unfitted_and_uncalibrated_raise(splits):
         c.threshold()
 
 
-def test_static_has_no_serving_params(fitted):
-    with pytest.raises(NotImplementedError):
-        fitted["static"].serving_params()
+def test_static_serving_params_flatten_to_frozen_probe(fitted):
+    """PCA+logreg flattens into eta=0 kernel state (PR 2): the fused engine
+    can deploy the static baseline; unfitted still raises."""
+    pc, theta = fitted["static"].serving_params()
+    assert pc.eta == 0.0 and pc.variant == "noqk"
+    assert theta["W0"].shape == (pc.d_phi,)
+    from repro.core.calibrator import StaticCalibrator
+    with pytest.raises(RuntimeError):
+        StaticCalibrator().serving_params()
 
 
 def test_ttt_serving_params_roundtrip(fitted):

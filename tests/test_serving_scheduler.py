@@ -1,5 +1,7 @@
 """Scheduler admission/eviction invariants + eviction score-invariance +
-static-batch shim regression."""
+static-batch shim regression + randomized admit/finish/stop fuzzing."""
+import itertools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,7 +12,8 @@ from repro.core.probe import ProbeConfig, init_outer
 from repro.models import build
 from repro.serving import (ContinuousServingEngine, OrcaScheduler,
                            RequestState, ServeConfig, ServingEngine,
-                           init_probe_state, make_request, reset_probe_slot)
+                           init_probe_state, make_request, replay_model,
+                           replay_params, reset_probe_slot)
 
 
 @pytest.fixture(scope="module")
@@ -148,3 +151,99 @@ def test_continuous_engine_admit_release_cycle(small_model):
     eng.step()
     second_run = [float(eng.step().smoothed[0]) for _ in range(2)]
     np.testing.assert_allclose(first_run, second_run, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# randomized fuzzing: slot invariants under arbitrary admit/finish/stop mixes
+
+
+def _probe_row(st, slot):
+    return {f: np.asarray(getattr(st, f)[slot]) for f in st._fields}
+
+
+def _assert_rows_equal(row, expect, msg):
+    for f, v in expect.items():
+        np.testing.assert_array_equal(row[f], v, err_msg=f"{msg}: {f}")
+
+
+def test_engine_fuzz_admit_release_step_invariants():
+    """Random admit/release/step sequences against ContinuousServingEngine:
+    * an admitted slot's probe row equals a fresh ``init_probe_state`` row;
+    * a released slot equals the parked fresh row (stopped=True) and stays
+      frozen across subsequent steps;
+    * the vector ``pos`` advances by exactly one per step for every slot a
+      request occupies (monotonic per request)."""
+    rs = np.random.RandomState(0)
+    n_traj, t_max, d, n_slots = 16, 24, 32, 3
+    bank = rs.randn(n_traj, t_max, d).astype(np.float32) * 0.5
+    model, params = replay_model(bank), replay_params(bank)
+    pc = ProbeConfig(d_phi=d, smooth_window=3)
+    theta = init_outer(pc, jax.random.PRNGKey(1))
+    cfg = ServeConfig(tokens_per_step=1, max_new_tokens=t_max, lam=0.9,
+                      burn_in=1)
+    eng = ContinuousServingEngine(model, params, pc, theta, cfg,
+                                  n_slots=n_slots, cache_len=t_max + 2)
+    fresh = _probe_row(init_probe_state(pc, theta, 1, d), 0)
+    parked = dict(fresh, stopped=np.asarray(True))
+    occupant = {}                        # slot -> admit-time pos
+    steps_since = {}
+    for opno in range(60):
+        op = rs.choice(["admit", "release", "step"], p=[0.3, 0.15, 0.55])
+        free = [s for s in range(n_slots) if s not in occupant]
+        if op == "admit" and free:
+            slot = int(rs.choice(free))
+            traj = int(rs.randint(n_traj))
+            eng.admit(slot, {"tokens": jnp.full((1, 1), traj, jnp.int32)}, 1)
+            _assert_rows_equal(_probe_row(eng.st, slot), fresh,
+                               f"op{opno} admit slot{slot}")
+            occupant[slot], steps_since[slot] = int(eng.pos[slot]), 0
+        elif op == "release" and occupant:
+            slot = int(rs.choice(list(occupant)))
+            eng.release(slot)
+            _assert_rows_equal(_probe_row(eng.st, slot), parked,
+                               f"op{opno} release slot{slot}")
+            del occupant[slot], steps_since[slot]
+        elif op == "step":
+            before = {s: _probe_row(eng.st, s)
+                      for s in range(n_slots) if s not in occupant}
+            eng.step()
+            for slot in occupant:
+                steps_since[slot] += 1
+                # vector pos: strictly monotonic, +1 per fused step
+                assert int(eng.pos[slot]) == occupant[slot] + steps_since[slot]
+            for slot, row in before.items():
+                # empty/evicted slots are frozen no-op compute
+                keep = {f: row[f] for f in
+                        ("W", "b", "ring", "n_scores", "stopped", "stop_step")}
+                _assert_rows_equal(_probe_row(eng.st, slot), keep,
+                                   f"op{opno} parked slot{slot}")
+
+
+def test_scheduler_fuzz_no_double_occupancy(small_model):
+    """Randomized queue (mixed budgets -> interleaved ORCA stops and budget
+    finishes): any two requests overlapping in engine-step time must have
+    occupied distinct slots, every slot stays within range, and every
+    request reaches a terminal state with a consistent slot history."""
+    model, params = small_model
+    rs = np.random.RandomState(7)
+    pc, theta = _probe(model.cfg, 1.5)   # borderline scores: mixed outcomes
+    cfg = ServeConfig(tokens_per_step=2, max_new_tokens=16, lam=0.6,
+                      burn_in=1)
+    reqs = [make_request(p, max_new_tokens=int(rs.choice([6, 10, 16])))
+            for p in _prompts(model.cfg, 10, prompt_len=6, seed=8)]
+    sched = OrcaScheduler(model, params, pc, theta, cfg, n_slots=3)
+    done, fleet = sched.run(reqs)
+    assert all(r.done for r in done)
+    states = {r.state for r in done}
+    assert states <= {RequestState.STOPPED, RequestState.FINISHED}
+    for r in done:
+        assert 0 <= r.slot < 3
+        assert r.admitted_step >= 0 and r.completed_step > r.admitted_step
+    # no double-occupancy: same slot => disjoint [admitted, completed) spans
+    for a, b in itertools.combinations(done, 2):
+        if a.slot == b.slot:
+            assert (a.completed_step <= b.admitted_step
+                    or b.completed_step <= a.admitted_step), (a, b)
+    # slot-step accounting is consistent with the occupancy intervals
+    busy = sum(r.completed_step - r.admitted_step for r in done)
+    assert busy == fleet.active_slot_steps

@@ -1,0 +1,267 @@
+"""Differential parity: Pallas TTT-probe kernels vs jnp oracles vs the
+pre-refactor (PR-1) serving probe, across batch sizes, feature dims, dtypes,
+t_chunk values and mid-stream stopped slots.
+
+The serving engine deploys the kernel path; the LTT guarantee only covers
+the deployed procedure if that path is the SAME procedure the offline
+calibration scored — so stop decisions are asserted exactly (bitwise), and
+scores/weights to explicit tolerances, never eyeballed.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_stub import given, settings, st
+
+from repro.core.probe import ProbeConfig, init_outer
+from repro.kernels import ref as R
+from repro.kernels.ttt_probe import (serving_probe_step, ttt_probe_batched,
+                                     ttt_probe_scan)
+from repro.serving import (OrcaScheduler, ServeConfig, init_probe_state,
+                           probe_update, replay_model, replay_params,
+                           replay_requests)
+from repro.trajectories.synthetic import TrajectoryDistribution, generate
+
+TOL = dict(rtol=2e-4, atol=2e-5)
+
+
+def _traj_batch(seed, n, t, f, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    zq = jax.random.normal(ks[0], (n, t, f)).astype(dtype)
+    zk = jax.random.normal(ks[1], (n, t, f)).astype(dtype)
+    c = (jax.random.uniform(ks[2], (n, t)) > 0.5).astype(jnp.float32)
+    m = (jax.random.uniform(ks[3], (n, t)) > 0.2).astype(jnp.float32)
+    w0 = (jax.random.normal(ks[4], (n, f)) / np.sqrt(f)).astype(dtype)
+    b0 = jax.random.normal(ks[5], (n,)) * 0.3
+    return zq, zk, c, m, w0, b0
+
+
+# ---------------------------------------------------------------------------
+# chunked multi-step kernel (vector per-slot state)
+
+@pytest.mark.parametrize("n", [1, 3, 8])
+@pytest.mark.parametrize("f", [64, 128])
+@pytest.mark.parametrize("t_chunk", [8, 32, 128])
+def test_batched_kernel_matches_ref(n, f, t_chunk):
+    zq, zk, c, m, w0, b0 = _traj_batch(n * 1000 + f, n, 50, f)
+    eta = jnp.asarray(0.02)
+    s, wf, bf = ttt_probe_batched(zq, zk, c, m, w0, b0, eta, t_chunk=t_chunk)
+    s_r, wf_r, bf_r = R.ttt_probe_batched_ref(zq, zk, c, m, w0, b0, eta)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_r), **TOL)
+    np.testing.assert_allclose(np.asarray(wf), np.asarray(wf_r), **TOL)
+    np.testing.assert_allclose(np.asarray(bf), np.asarray(bf_r), **TOL)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_batched_kernel_state_dtypes(dtype):
+    """bf16 inputs/state are cast to an f32 compute path inside the kernel —
+    results must match the oracle fed the same rounded values exactly, and
+    the f32 run to bf16 resolution."""
+    zq, zk, c, m, w0, b0 = _traj_batch(7, 3, 24, 64, dtype=dtype)
+    eta = jnp.asarray(0.05)
+    s, wf, bf = ttt_probe_batched(zq, zk, c, m, w0, b0, eta, t_chunk=8)
+    s_r, wf_r, _ = R.ttt_probe_batched_ref(
+        zq.astype(jnp.float32), zk.astype(jnp.float32), c, m,
+        w0.astype(jnp.float32), b0, eta)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_r), **TOL)
+    np.testing.assert_allclose(np.asarray(wf), np.asarray(wf_r), **TOL)
+    if dtype == jnp.bfloat16:
+        zq32, zk32, c32, m32, w032, b032 = _traj_batch(7, 3, 24, 64)
+        s32, _, _ = ttt_probe_batched(zq32, zk32, c32, m32, w032, b032, eta,
+                                      t_chunk=8)
+        np.testing.assert_allclose(np.asarray(s), np.asarray(s32),
+                                   rtol=0.1, atol=0.05)
+
+
+def test_scan_equals_batched_broadcast():
+    """Shared-init scan == batched scan from a broadcast state (one kernel)."""
+    zq, zk, c, m, w0, b0 = _traj_batch(11, 4, 33, 128)
+    eta = jnp.asarray(0.01)
+    s_a, wf_a, bf_a = ttt_probe_scan(zq, zk, c, m, w0[0], b0[0], eta,
+                                     t_chunk=16)
+    s_b, wf_b, bf_b = ttt_probe_batched(
+        zq, zk, c, m, jnp.broadcast_to(w0[0], w0.shape),
+        jnp.broadcast_to(b0[0], b0.shape), eta, t_chunk=16)
+    np.testing.assert_array_equal(np.asarray(s_a), np.asarray(s_b))
+    np.testing.assert_array_equal(np.asarray(wf_a), np.asarray(wf_b))
+    np.testing.assert_array_equal(np.asarray(bf_a), np.asarray(bf_b))
+
+
+# ---------------------------------------------------------------------------
+# fused serving step vs the PR-1 jnp probe
+
+def _fresh_state(batch, f, window, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    W = jax.random.normal(ks[0], (batch, f)) / np.sqrt(f)
+    b = jax.random.normal(ks[1], (batch,)) * 0.2
+    return (W, b, jnp.zeros((batch, window)), jnp.zeros((batch,), jnp.int32),
+            jnp.zeros((batch,), bool), jnp.full((batch,), -1, jnp.int32))
+
+
+def _chain(step_fn, state, feats, bnds, eta, lam, burn_in):
+    outs = []
+    for z, bnd in zip(feats, bnds):
+        out = step_fn(z, z, bnd, *state, eta, lam, burn_in=burn_in)
+        state = (out.W, out.b, out.ring, out.n_scores, out.stopped,
+                 out.stop_step)
+        outs.append(out)
+    return outs
+
+
+@pytest.mark.parametrize("batch", [1, 3, 8])
+@pytest.mark.parametrize("f", [48, 64, 160])
+def test_serving_step_matches_pr1_chain(batch, f):
+    """A 20-token chain through the fused kernel and through the PR-1 jnp
+    math: stop decisions bitwise equal, numerics to tolerance."""
+    window, burn = 4, 2
+    eta, lam = jnp.asarray(0.05), jnp.asarray(0.55)
+    state = _fresh_state(batch, f, window, seed=batch + f)
+    key = jax.random.PRNGKey(batch * 7 + f)
+    feats = [jax.random.normal(jax.random.fold_in(key, i), (batch, f)) * 0.3
+             for i in range(20)]
+    bnds = [jnp.ones((batch,), bool) for _ in feats]
+    outs_k = _chain(serving_probe_step, state, feats, bnds, eta, lam, burn)
+    outs_r = _chain(R.serving_probe_step_ref, state, feats, bnds, eta, lam,
+                    burn)
+    for i, (k, r) in enumerate(zip(outs_k, outs_r)):
+        np.testing.assert_array_equal(np.asarray(k.stopped),
+                                      np.asarray(r.stopped), err_msg=f"t={i}")
+        np.testing.assert_array_equal(np.asarray(k.stop_step),
+                                      np.asarray(r.stop_step))
+        np.testing.assert_array_equal(np.asarray(k.n_scores),
+                                      np.asarray(r.n_scores))
+        np.testing.assert_allclose(np.asarray(k.s), np.asarray(r.s),
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(k.smoothed),
+                                   np.asarray(r.smoothed), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(k.W), np.asarray(r.W),
+                                   atol=1e-5)
+
+
+def test_serving_step_freezes_midstream_stopped_slots():
+    """Slots entering the step already stopped must be pure no-op compute:
+    identical state out, no ring/score/weight movement — in BOTH impls."""
+    batch, f, window = 5, 64, 3
+    eta, lam = jnp.asarray(0.1), jnp.asarray(0.4)
+    W, b, ring, n, stopped, ss = _fresh_state(batch, f, window, seed=9)
+    stopped = jnp.asarray([False, True, False, True, False])
+    ss = jnp.asarray([-1, 2, -1, 4, -1], jnp.int32)
+    n = jnp.asarray([3, 2, 3, 4, 3], jnp.int32)
+    z = jax.random.normal(jax.random.PRNGKey(1), (batch, f))
+    bnd = jnp.ones((batch,), bool)      # raw boundary: impls must mask it
+    for step_fn in (serving_probe_step, R.serving_probe_step_ref):
+        out = step_fn(z, z, bnd, W, b, ring, n, stopped, ss, eta, lam,
+                      burn_in=0)
+        frozen = np.asarray(stopped)
+        np.testing.assert_array_equal(np.asarray(out.W)[frozen],
+                                      np.asarray(W)[frozen])
+        np.testing.assert_array_equal(np.asarray(out.ring)[frozen],
+                                      np.asarray(ring)[frozen])
+        np.testing.assert_array_equal(np.asarray(out.n_scores)[frozen],
+                                      np.asarray(n)[frozen])
+        np.testing.assert_array_equal(np.asarray(out.stop_step)[frozen],
+                                      np.asarray(ss)[frozen])
+        assert np.asarray(out.stopped)[frozen].all()
+        # live slots still move
+        live = ~frozen
+        assert (np.asarray(out.n_scores)[live] == np.asarray(n)[live] + 1).all()
+
+
+def test_serving_chain_equals_chunked_scan():
+    """With stopping disabled, N single serving steps == one chunked
+    multi-step kernel call — the two variants are the same procedure."""
+    batch, f, t = 3, 64, 12
+    eta = jnp.asarray(0.03)
+    lam = jnp.asarray(2.0)                       # sigmoid <= 1: never stops
+    W, b, ring, n, stopped, ss = _fresh_state(batch, f, 4, seed=2)
+    key = jax.random.PRNGKey(5)
+    zs = jax.random.normal(key, (batch, t, f)) * 0.4
+    feats = [zs[:, i] for i in range(t)]
+    bnds = [jnp.ones((batch,), bool)] * t
+    outs = _chain(serving_probe_step, (W, b, ring, n, stopped, ss),
+                  feats, bnds, eta, lam, burn_in=0)
+    s_chain = np.stack([np.asarray(o.s) for o in outs], axis=1)
+    s_scan, wf, bf = ttt_probe_batched(zs, zs, jnp.zeros((batch, t)),
+                                       jnp.ones((batch, t)), W, b, eta,
+                                       t_chunk=4)
+    np.testing.assert_allclose(s_chain, np.asarray(s_scan), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(outs[-1].W), np.asarray(wf),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(outs[-1].b), np.asarray(bf),
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# engine-level regression fixtures: kernel path vs PR-1 path end to end
+
+def _served_fixture(probe_impl):
+    dist = TrajectoryDistribution("parity", d_phi=32, t_min=16, t_max=32)
+    ts = generate(dist, 10, seed=4)
+    pc = ProbeConfig(d_phi=32, smooth_window=4)
+    theta = init_outer(pc, jax.random.PRNGKey(0))
+    theta["b0"] = jnp.asarray(0.45)
+    cfg = ServeConfig(tokens_per_step=1, max_new_tokens=int(ts.lengths.max()),
+                      lam=0.62, burn_in=2)
+    sched = OrcaScheduler(replay_model(ts.phis), replay_params(ts.phis), pc,
+                          theta, cfg, n_slots=3, probe_impl=probe_impl)
+    done, _ = sched.run(replay_requests(ts.lengths))
+    return done
+
+
+def test_engine_stop_decisions_bit_compatible_with_pr1():
+    """The full continuous-batching engine, kernel probe vs the PR-1 jnp
+    probe: every request's stop decision identical, scores to tolerance."""
+    done_k = _served_fixture("kernel")
+    done_r = _served_fixture("ref")
+    assert [r.stop_step for r in done_k] == [r.stop_step for r in done_r]
+    assert [r.state for r in done_k] == [r.state for r in done_r]
+    for a, b in zip(done_k, done_r):
+        assert len(a.scores) == len(b.scores)
+        np.testing.assert_allclose(np.array(a.scores), np.array(b.scores),
+                                   atol=1e-5)
+
+
+def test_probe_update_rejects_unknown_impl():
+    pc = ProbeConfig(d_phi=8, smooth_window=2)
+    theta = init_outer(pc, jax.random.PRNGKey(0))
+    st = init_probe_state(pc, theta, 2, 8)
+    with pytest.raises(ValueError, match="probe_impl"):
+        probe_update(pc, theta, st, jnp.zeros((2, 8)), 0.5, 1, 0,
+                     probe_impl="nope")
+
+
+# ---------------------------------------------------------------------------
+# property-based sweep (skips cleanly when hypothesis is absent)
+
+@given(st.integers(1, 8), st.sampled_from([32, 64, 96, 128]),
+       st.integers(0, 10_000), st.floats(0.3, 0.9), st.integers(1, 6))
+@settings(max_examples=25, deadline=None)
+def test_property_serving_step_parity(batch, f, seed, lam, window):
+    """Random state + features (incl. randomly pre-stopped slots): kernel
+    and PR-1 oracle agree on decisions exactly, numerics to tolerance."""
+    rs = np.random.RandomState(seed)
+    eta = jnp.asarray(rs.uniform(0.001, 0.2))
+    lam = jnp.asarray(lam)
+    W = jnp.asarray(rs.randn(batch, f) / np.sqrt(f), jnp.float32)
+    b = jnp.asarray(rs.randn(batch) * 0.5, jnp.float32)
+    ring = jnp.asarray(rs.rand(batch, window), jnp.float32)
+    n = jnp.asarray(rs.randint(0, 9, batch), jnp.int32)
+    stopped = jnp.asarray(rs.rand(batch) < 0.3)
+    ss = jnp.where(stopped, n, -1).astype(jnp.int32)
+    z = jnp.asarray(rs.randn(batch, f), jnp.float32)
+    bnd = jnp.asarray(rs.rand(batch) < 0.8)
+    burn = int(rs.randint(0, 4))
+    out_k = serving_probe_step(z, z, bnd, W, b, ring, n, stopped, ss,
+                               eta, lam, burn_in=burn)
+    out_r = R.serving_probe_step_ref(z, z, bnd, W, b, ring, n, stopped,
+                                     ss, eta, lam, burn_in=burn)
+    np.testing.assert_array_equal(np.asarray(out_k.stopped),
+                                  np.asarray(out_r.stopped))
+    np.testing.assert_array_equal(np.asarray(out_k.stop_step),
+                                  np.asarray(out_r.stop_step))
+    np.testing.assert_array_equal(np.asarray(out_k.n_scores),
+                                  np.asarray(out_r.n_scores))
+    np.testing.assert_allclose(np.asarray(out_k.s), np.asarray(out_r.s),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out_k.W), np.asarray(out_r.W),
+                               atol=1e-5)

@@ -1,0 +1,111 @@
+"""Conformal validity regression, end-to-end THROUGH the serving engine.
+
+The LTT guarantee (P(risk <= delta) >= 1 - eps) covers the deployed
+procedure.  These tests calibrate offline, then deploy lambda* through the
+real continuous-batching stack (``OrcaScheduler`` + fused Pallas probe step)
+over a synthetic trajectory distribution with KNOWN injected label noise,
+and assert (a) the served stop decisions equal the calibrated offline
+procedure's exactly and (b) the served empirical risk respects delta (plus
+an explicit finite-sample slack) — for BOTH the TTT probe and the static
+baseline flattened into kernel state.  Seeded and deterministic.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro import api as orca
+from repro.core import stopping as S
+from repro.core.pipeline import make_labels
+from repro.core.probe import ProbeConfig
+from repro.serving import (OrcaScheduler, ServeConfig, replay_model,
+                           replay_params, replay_requests, served_stop_times)
+from repro.trajectories.synthetic import TrajectoryDistribution, generate
+
+DELTA, EPS = 0.25, 0.1
+SLACK = 0.1                 # finite-sample fluctuation of the test risk
+NOISE = 0.12                # known label-noise rate (false breakthroughs)
+D_PHI = 48
+
+
+@pytest.fixture(scope="module")
+def noisy_splits():
+    dist = TrajectoryDistribution("validity", d_phi=D_PHI, t_min=30, t_max=60)
+    full = generate(dist, 360, seed=11)
+    # known label noise: flip a fraction of solved trajectories to "never
+    # correct" — stopping on their (still-present) feature breakthrough is
+    # guaranteed to be charged as risk.  Applied iid BEFORE the split, so
+    # calibration and test remain exchangeable and LTT stays valid.
+    rs = np.random.RandomState(99)
+    flip = rs.rand(len(full)) < NOISE
+    full.correct[flip] = False
+    idx = rs.permutation(len(full))
+    return (full.subset(idx[:160]), full.subset(idx[160:260]),
+            full.subset(idx[260:]))
+
+
+def _serve(calibrator, test, lam):
+    pc, theta = calibrator.serving_params()
+    cfg = ServeConfig(tokens_per_step=1,
+                      max_new_tokens=int(test.lengths.max()),
+                      lam=float(lam), burn_in=10)
+    sched = OrcaScheduler(replay_model(test.phis), replay_params(test.phis),
+                          pc, theta, cfg, n_slots=4)
+    done, fleet = sched.run(replay_requests(test.lengths))
+    return served_stop_times(done, test.lengths), fleet
+
+
+def _assert_served_validity(calibrator, cal, test):
+    lam = calibrator.calibrate(cal, DELTA, EPS)
+    assert np.isfinite(lam), "LTT selected nothing — fixture mistuned"
+    tau_srv, fleet = _serve(calibrator, test, lam)
+    # the served procedure IS the calibrated procedure: stop-for-stop equal
+    tau_off = S.stop_times(calibrator.scores(test), [lam], test.mask)[:, 0]
+    np.testing.assert_array_equal(tau_srv, tau_off)
+    # and it respects the calibrated risk level on held-out data
+    labels = make_labels(test, calibrator.mode)
+    risk = float(S.procedure_risk(tau_srv[:, None], labels, test.mask).mean())
+    assert risk <= DELTA + SLACK, f"served risk {risk:.3f} > {DELTA}+{SLACK}"
+    # non-vacuous: the threshold actually stops sequences early
+    sav = float(S.savings(tau_srv[:, None], test.mask)[0])
+    assert sav > 0.05, f"procedure never stopped early (savings {sav:.3f})"
+    assert fleet.engine_steps > 0 and fleet.n_requests == len(test)
+    return risk, sav
+
+
+def test_ttt_calibrator_validity_through_engine(noisy_splits):
+    train, cal, test = noisy_splits
+    calib = orca.fit(train, mode="supervised", method="ttt",
+                     pc=ProbeConfig(d_phi=D_PHI, smooth_window=5),
+                     epochs=6, batch_size=32, epoch_select=False, seed=0)
+    risk, sav = _assert_served_validity(calib, cal, test)
+    # with 12% of breakthroughs poisoned the observed risk must be real
+    # (the threshold can't dodge noise it can't see) yet still controlled
+    assert risk > 0.0
+
+
+def test_static_calibrator_validity_through_engine(noisy_splits):
+    """The static baseline rides the SAME fused engine: serving_params
+    flattens PCA+logreg into frozen (eta=0) kernel state."""
+    train, cal, test = noisy_splits
+    calib = orca.fit(train, mode="supervised", method="static",
+                     n_components=16, smooth_window=5, epochs=150)
+    _assert_served_validity(calib, cal, test)
+
+
+def test_static_serving_params_round_trip(noisy_splits):
+    """Offline static scores == the frozen linear probe the engine deploys."""
+    train, _, test = noisy_splits
+    calib = orca.fit(train, mode="supervised", method="static",
+                     n_components=16, smooth_window=5, epochs=150)
+    pc, theta = calib.serving_params()
+    assert pc.eta == 0.0 and pc.variant == "noqk"
+    assert theta["W0"].shape == (D_PHI,)
+    w = np.asarray(theta["W0"], np.float64)
+    b = float(theta["b0"])
+    raw = 1.0 / (1.0 + np.exp(-(test.phis.astype(np.float64) @ w + b)))
+    from repro.core.probe import smooth_scores
+    import jax.numpy as jnp
+    smoothed = np.asarray(smooth_scores(jnp.asarray(raw), pc.smooth_window))
+    np.testing.assert_allclose(smoothed * test.mask, calib.scores(test),
+                               atol=2e-5)
