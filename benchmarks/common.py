@@ -10,16 +10,15 @@ import functools
 import hashlib
 import json
 import os
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 
 from repro import api as orca
 from repro.checkpoint import restore, save_pytree
-from repro.core.pipeline import TrainedProbe, evaluate_probe, make_labels
+from repro.core.pipeline import TrainedProbe, evaluate_probe
 from repro.core.probe import ProbeConfig, init_outer
 from repro.core.static_probe import StaticProbe
 from repro.trajectories import TrajectorySet, corpus_splits, ood_benchmark

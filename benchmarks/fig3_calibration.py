@@ -3,7 +3,6 @@ every method; the LTT guarantee requires the curve to track/undershoot the
 diagonal."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks import common as C
 from repro.core.probe import ProbeConfig

@@ -11,7 +11,7 @@ import numpy as np
 from benchmarks import common as C
 from repro.core import ttt
 from repro.core.probe import ProbeConfig, init_outer
-from repro.kernels import flash_decode, make_unroll_kernel, ttt_probe_scan
+from repro.kernels import flash_decode, make_unroll_kernel
 
 
 def timeit(fn, *args, reps: int = 5) -> float:

@@ -1,28 +1,34 @@
-"""Continuous batching vs static batching at the SAME calibrated lambda*.
+"""Continuous vs static batching, and paged vs dense KV, at the SAME
+calibrated lambda*.
 
-    PYTHONPATH=src python benchmarks/serving_throughput.py [--arch smollm-360m]
+    PYTHONPATH=src:. python benchmarks/serving_throughput.py [--check]
 
-Drives a queue of ``--requests`` (default 4x the slot count) through
+Three comparisons, all serving the identical calibrated procedure (same
+probe theta, same lambda*, same burn-in) so per-request stop decisions must
+be IDENTICAL across paths (asserted):
 
-  * ``OrcaScheduler`` — continuous batching: each ORCA stop evicts its slot,
-    which is refilled from the queue before the next fused step;
-  * the static-batch ``ServingEngine`` baseline — requests grouped into
-    fixed batches of ``--slots``; stopped sequences burn their slot until
-    the slowest group member finishes.
+  * ``OrcaScheduler`` (continuous batching, ORCA-stop eviction) vs the
+    static-batch ``ServingEngine`` baseline;
+  * the fused Pallas probe step vs the PR-1 jnp probe (``probe_impl="ref"``);
+  * paged KV (block-pool admission + prefix sharing) vs the dense per-slot
+    cache on a SHARED-PREFIX workload — ``--prefix-samples`` self-consistency
+    samples per prompt — at EQUAL KV HBM budget: the paged pool holds exactly
+    as many token-slots as the dense engine's lanes, but shares each resident
+    prompt's full pages and reclaims pages on every ORCA stop, so it runs
+    more concurrent requests through the same bytes.
 
-Both paths run the identical calibrated procedure (same probe theta, same
-lambda*, same burn-in), so per-request stop decisions must be IDENTICAL —
-the benchmark asserts stop steps match exactly and score trajectories agree
-to tolerance, then reports requests/s, engine steps and slot utilization.
-Eviction is where the paper's calibrated savings become throughput.
-
-A third row replays the continuous queue with the PR-1 jnp probe
-(``probe_impl="ref"``) for a before/after of the fused Pallas serving step:
-same stop decisions (asserted), steps/s compared.
+``--check`` is the CI perf-regression gate: re-run, then compare against the
+committed ``results/serving_throughput.json`` baseline — stop decisions must
+be byte-identical and every tracked metric must stay within the tolerance
+stored IN the baseline file (re-baseline by re-running without ``--check``
+and committing the JSON).  Exits nonzero on regression.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import sys
 
 import numpy as np
 
@@ -36,7 +42,22 @@ from repro.models import build
 from repro.serving import (OrcaScheduler, ServeConfig, ServingEngine,
                            make_request, serve_queue_static)
 
-from benchmarks.common import print_table, save_rows
+from benchmarks.common import QUICK, RESULTS, print_table
+
+BASELINE = os.path.join(RESULTS, "serving_throughput.json")
+
+
+def kv_bytes_dense(cfg, n_slots: int, cache_len: int) -> int:
+    item = 1 if cfg.kv_cache_dtype == "int8" else \
+        np.dtype(cfg.dtype).itemsize
+    return 2 * cfg.n_layers * n_slots * cfg.n_kv_heads * cache_len \
+        * cfg.d_head * item
+
+
+def kv_bytes_paged(cfg, num_blocks: int, block_size: int) -> int:
+    """Bytes of ALL physical pages — including page 0, the NULL page, which
+    is real HBM even though it is never allocated to a request."""
+    return kv_bytes_dense(cfg, num_blocks, block_size)
 
 
 def main(argv=None) -> int:
@@ -51,11 +72,32 @@ def main(argv=None) -> int:
     ap.add_argument("--train-trajectories", type=int, default=24)
     ap.add_argument("--delta", type=float, default=0.25)
     ap.add_argument("--epochs", type=int, default=8)
-    ap.add_argument("--reps", type=int, default=3,
+    ap.add_argument("--reps", type=int, default=2 if QUICK else 3,
                     help="timed repetitions per path (best kept)")
     ap.add_argument("--seed", type=int, default=0)
+    # shared-prefix (self-consistency) workload for the paged-vs-dense row
+    ap.add_argument("--prefix-prompts", type=int, default=2)
+    ap.add_argument("--prefix-samples", type=int, default=6,
+                    help="self-consistency samples decoded per prompt")
+    ap.add_argument("--prefix-prompt-len", type=int, default=48)
+    ap.add_argument("--prefix-max-new", type=int, default=8)
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--paged-slots", type=int, default=6,
+                    help="batch rows for the paged engine (pages, not "
+                         "slots, are its memory budget)")
+    ap.add_argument("--check", action="store_true",
+                    help="CI gate: compare against the committed baseline "
+                         "instead of overwriting it; nonzero exit on "
+                         "regression")
+    ap.add_argument("--out", default="",
+                    help="output JSON (default: the committed baseline, or "
+                         "results/serving_throughput_fresh.json with "
+                         "--check)")
     args = ap.parse_args(argv)
     n_requests = args.requests or 4 * args.slots
+    out_path = args.out or (
+        os.path.join(RESULTS, "serving_throughput_fresh.json")
+        if args.check else BASELINE)
 
     cfg = get_config(args.arch).reduced()
     model = build(cfg)
@@ -130,6 +172,50 @@ def main(argv=None) -> int:
     print("[throughput] per-request stop decisions identical "
           f"(stop steps {stop_c.tolist()})")
 
+    # --- paged vs dense at EQUAL KV HBM on the shared-prefix workload ----
+    pcfg = ServeConfig(tokens_per_step=args.tokens_per_step,
+                       max_new_tokens=args.prefix_max_new, lam=float(lam),
+                       burn_in=2)
+    p_cache_len = args.prefix_prompt_len + args.prefix_max_new
+    bs = args.block_size
+    assert p_cache_len % bs == 0, (p_cache_len, bs)
+    # equal budget: TOTAL physical pages (null page included) hold exactly
+    # as many bytes as the dense lanes — the pool pays for its null page
+    # out of the same budget, leaving num_blocks_total - 1 usable pages
+    num_blocks_total = args.slots * p_cache_len // bs
+    hbm_dense = kv_bytes_dense(cfg, args.slots, p_cache_len)
+    hbm_paged = kv_bytes_paged(cfg, num_blocks_total, bs)
+    assert hbm_dense == hbm_paged, (hbm_dense, hbm_paged)
+    prompts = jax.random.randint(jax.random.PRNGKey(args.seed + 2),
+                                 (args.prefix_prompts, args.prefix_prompt_len),
+                                 0, cfg.vocab_size)
+
+    def prefix_requests():
+        # self-consistency: samples of one prompt enqueue back-to-back
+        return [make_request(prompts[p])
+                for p in range(args.prefix_prompts)
+                for _ in range(args.prefix_samples)]
+
+    n_prefix = args.prefix_prompts * args.prefix_samples
+    dense_sched = OrcaScheduler(model, params, pc, theta, pcfg,
+                                n_slots=args.slots, cache_len=p_cache_len)
+    dense_sched.run(prefix_requests())
+    done_d, fleet_d = best_of(lambda: dense_sched.run(prefix_requests()))
+    paged_sched = OrcaScheduler(model, params, pc, theta, pcfg,
+                                n_slots=args.paged_slots,
+                                cache_len=p_cache_len, paged=True,
+                                block_size=bs, num_blocks=num_blocks_total)
+    paged_sched.run(prefix_requests())
+    done_p, fleet_p = best_of(lambda: paged_sched.run(prefix_requests()))
+    stop_d = np.array([r.stop_step for r in done_d])
+    stop_p = np.array([r.stop_step for r in done_p])
+    assert (stop_d == stop_p).all(), \
+        f"paged KV changed stop decisions: dense {stop_d} vs paged {stop_p}"
+    print(f"[throughput] paged == dense stop decisions on shared-prefix "
+          f"workload ({stop_p.tolist()}); {fleet_p.prefill_skips} of "
+          f"{n_prefix} prefills served from the resident prefix, "
+          f"KV budget {hbm_dense / 1e6:.2f} MB each")
+
     util_b = base.active_slot_steps / max(base.total_slot_steps, 1)
     steps_s = fleet.engine_steps / max(fleet.wall_time_s, 1e-9)
     steps_s_ref = fleet_ref.engine_steps / max(fleet_ref.wall_time_s, 1e-9)
@@ -141,23 +227,112 @@ def main(argv=None) -> int:
          "wall_s": fleet.wall_time_s},
         {"mode": "continuous[pr1-jnp-probe]", **fleet_ref.row(),
          "steps_per_s": steps_s_ref, "wall_s": fleet_ref.wall_time_s},
+        {"mode": "dense-prefix", **fleet_d.row(),
+         "kv_mb": hbm_dense / 1e6, "wall_s": fleet_d.wall_time_s},
+        {"mode": "paged-prefix", **fleet_p.row(),
+         "kv_mb": hbm_paged / 1e6, "wall_s": fleet_p.wall_time_s},
     ]
     print_table("serving throughput (same lambda*, same stop decisions)",
                 rows, ("mode", "engine_steps", "requests_per_s",
-                       "slot_utilization", "wall_s"))
-    save_rows("serving_throughput", rows)
+                       "slot_utilization", "prefill_skips", "wall_s"))
 
     speedup = rows[1]["requests_per_s"] / max(rows[0]["requests_per_s"], 1e-9)
+    probe_ratio = steps_s / max(steps_s_ref, 1e-9)
+    paged_ratio = (fleet_p.requests_per_s
+                   / max(fleet_d.requests_per_s, 1e-9))
     print(f"\ncontinuous batching: {speedup:.2f}x requests/s, slot "
           f"utilization {util_b:.2f} -> {fleet.slot_utilization:.2f}")
     print(f"fused probe step: {steps_s:.1f} steps/s (kernel) vs "
-          f"{steps_s_ref:.1f} steps/s (pr1-jnp) -> "
-          f"{steps_s / max(steps_s_ref, 1e-9):.2f}x at identical stops")
-    if fleet.engine_steps > base.engine_steps:
-        print("note: queue shorter than needed to amortize? continuous ran "
-              "more fused steps than the static baseline")
+          f"{steps_s_ref:.1f} steps/s (pr1-jnp) -> {probe_ratio:.2f}x "
+          "at identical stops")
+    print(f"paged KV (equal HBM, shared prefix): {paged_ratio:.2f}x "
+          f"requests/s vs dense ({fleet_p.requests_per_s:.2f} vs "
+          f"{fleet_d.requests_per_s:.2f})")
+
+    report = {
+        "schema": 2,
+        "quick": QUICK,
+        "rows": rows,
+        # the gate requires these BYTE-IDENTICAL against the baseline: the
+        # calibrated procedure's stop decisions are part of the contract
+        "stop_steps": {
+            "continuous": stop_c.tolist(),
+            "dense_prefix": stop_d.tolist(),
+            "paged_prefix": stop_p.tolist(),
+        },
+        # every metric must stay >= min_frac * baseline value; tolerances
+        # live IN the baseline so re-baselining is an explicit commit
+        "check": {
+            "metrics": {
+                "continuous_vs_static_requests_per_s":
+                    {"value": speedup, "min_frac": 0.5},
+                "kernel_vs_ref_steps_per_s":
+                    {"value": probe_ratio, "min_frac": 0.5},
+                "paged_vs_dense_requests_per_s":
+                    {"value": paged_ratio, "min_frac": 0.6},
+                "continuous_steps_per_s":
+                    {"value": steps_s, "min_frac": 0.1},
+            },
+        },
+    }
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1, default=float)
+    print(f"[throughput] wrote {out_path}")
+
+    if args.check:
+        return check_against_baseline(report, BASELINE)
+    return 0
+
+
+def check_against_baseline(report: dict, baseline_path: str) -> int:
+    """The CI gate: stop decisions byte-identical, metrics within the
+    baseline's own tolerances.  Returns a nonzero exit code on regression."""
+    if not os.path.exists(baseline_path):
+        print(f"[check] FAIL: no committed baseline at {baseline_path}")
+        return 2
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    if baseline.get("schema") != report["schema"]:
+        print("[check] FAIL: baseline schema "
+              f"{baseline.get('schema')} != {report['schema']} — "
+              "re-baseline by running without --check and committing "
+              f"{baseline_path}")
+        return 2
+    if baseline.get("quick") != report["quick"]:
+        print(f"[check] FAIL: baseline quick={baseline.get('quick')} but "
+              f"this run has quick={report['quick']} (set "
+              "REPRO_BENCH_QUICK to match the committed baseline)")
+        return 2
+    failures = []
+    for name, b_stops in baseline["stop_steps"].items():
+        f_stops = report["stop_steps"].get(name)
+        if f_stops != b_stops:
+            failures.append(f"stop decisions for {name!r} changed: "
+                            f"baseline {b_stops} vs fresh {f_stops}")
+    for name, b in baseline["check"]["metrics"].items():
+        fresh = report["check"]["metrics"].get(name)
+        if fresh is None:
+            failures.append(f"metric {name!r} missing from fresh run")
+            continue
+        floor = b["value"] * b["min_frac"]
+        if fresh["value"] < floor:
+            failures.append(
+                f"{name}: {fresh['value']:.3f} < floor {floor:.3f} "
+                f"(baseline {b['value']:.3f} x min_frac {b['min_frac']})")
+        else:
+            print(f"[check] {name}: {fresh['value']:.3f} >= floor "
+                  f"{floor:.3f}  OK")
+    if failures:
+        for msg in failures:
+            print(f"[check] FAIL: {msg}")
+        print("[check] throughput regression gate FAILED — if intentional, "
+              "re-baseline: python benchmarks/serving_throughput.py && "
+              f"git add {baseline_path}")
+        return 1
+    print("[check] throughput regression gate passed")
     return 0
 
 
 if __name__ == "__main__":
-    raise SystemExit(main())
+    sys.exit(main())

@@ -2,7 +2,6 @@
 no-QK vs QK (paper: no-QK stable, QK peaks early and overfits)."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks import common as C
 from repro.core.probe import ProbeConfig

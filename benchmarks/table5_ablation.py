@@ -8,14 +8,13 @@
 """
 from __future__ import annotations
 
-import dataclasses
 
 import jax
 import numpy as np
 
 from benchmarks import common as C
 from repro.core import ttt
-from repro.core.probe import ProbeConfig, init_outer, smooth_scores
+from repro.core.probe import ProbeConfig, init_outer
 from repro.core.pipeline import evaluate_probe
 
 import jax.numpy as jnp

@@ -80,6 +80,8 @@ def engine(model, params, calibrator: Calibrator, *,
            n_slots: int = 4, cache_len: Optional[int] = None,
            lam: Optional[float] = None,
            serve: Optional[ServeConfig] = None,
+           paged: bool = False, block_size: int = 16,
+           num_blocks: Optional[int] = None,
            **serve_kwargs) -> OrcaScheduler:
     """Build a continuous-batching ``OrcaScheduler`` serving the calibrated
     procedure.
@@ -89,6 +91,13 @@ def engine(model, params, calibrator: Calibrator, *,
     (requires a prior ``calibrate()``).  A non-finite lambda* (LTT selected
     nothing) serves with stopping disabled — scores never cross a threshold
     above 1.
+
+    ``paged=True`` serves from a paged KV cache: admission reserves
+    fixed-size pages from a ``BlockPool`` of ``num_blocks`` (default: the
+    dense-equivalent n_slots * blocks-per-request + null page), resident
+    prompts are prefix-shared (refcount bump instead of recompute), ORCA
+    stops return pages to the pool immediately and the scheduler keeps
+    requests WAITING when the pool is exhausted.
     """
     pc, theta = calibrator.serving_params()
     if serve is not None:
@@ -102,7 +111,9 @@ def engine(model, params, calibrator: Calibrator, *,
             lam = 2.0               # sigmoid scores <= 1: never stop early
         serve = ServeConfig(lam=float(lam), **serve_kwargs)
     return OrcaScheduler(model, params, pc, theta, serve,
-                         n_slots=n_slots, cache_len=cache_len)
+                         n_slots=n_slots, cache_len=cache_len,
+                         paged=paged, block_size=block_size,
+                         num_blocks=num_blocks)
 
 
 def serve_requests(scheduler: OrcaScheduler, prompts: np.ndarray):

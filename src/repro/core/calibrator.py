@@ -15,8 +15,7 @@ driver glue); now both implementations expose one protocol and the
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Dict, Optional, Protocol, runtime_checkable
+from typing import Optional, Protocol, runtime_checkable
 
 import jax.numpy as jnp
 import numpy as np

@@ -8,7 +8,7 @@ metrics for the TTT probe and the static baseline.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +19,6 @@ from repro.core import labels as L
 from repro.core import stopping as S
 from repro.core import ttt
 from repro.core.probe import ProbeConfig, init_outer
-from repro.core.static_probe import fit_static_probe
 from repro.optim import Adam
 from repro.trajectories import TrajectorySet
 

@@ -16,8 +16,7 @@ BPTT), training Theta_outer = (theta_QK, W0, b0, [eta]).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,6 +8,14 @@ kernel optimizes).  A validity mask supports ring-buffer SWA caches and
 partially-filled caches.
 
 q (B, H, d); k, v (B, KV, S, d); valid (B, S) -> out (B, H, d)
+
+``paged_flash_decode`` is the paged-KV variant: K/V live in a pool of
+fixed-size token blocks (pages) shared by all requests, and each batch row
+reads *through its block table* — the table is a scalar-prefetch operand
+(``pltpu.PrefetchScalarGridSpec``), so the index map dereferences
+``table[b, block]`` to pick which physical page the next DMA fetches.  The
+kernel body is the same online softmax; int8-KV pages carry per-(position,
+head) scales and are dequantized per VMEM block (no HBM-sized temp).
 """
 from __future__ import annotations
 
@@ -82,3 +90,139 @@ def flash_decode(q, k, v, valid, *, bs: int = 512, interpret: bool = True):
         interpret=interpret,
     )(qg, k, v, valid)
     return out.reshape(b, h, d)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode: gather K/V through a per-request block table
+
+
+def _paged_kernel(tables_ref, q_ref, k_ref, v_ref, valid_ref, *rest,
+                  n_b: int, quantized: bool, scale: float):
+    """One (batch row, kv head, table entry) program.  The page this program
+    sees was selected by the index map via ``tables_ref[b, bi]`` — the
+    kernel body itself is table-oblivious online softmax.  Emits the
+    UNNORMALIZED (acc, l, m) triple so the caller can merge the current
+    token's column (``extra_kv``) before normalizing, exactly like the
+    dense ``_decode_partial`` path."""
+    if quantized:
+        ks_ref, vs_ref, o_ref, l_ref, m_ref, m_s, l_s, acc_s = rest
+    else:
+        o_ref, l_ref, m_ref, m_s, l_s, acc_s = rest
+    bi = pl.program_id(2)
+
+    @pl.when(bi == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0, 0, :, :] * scale                     # (G, d)
+    k = k_ref[0, 0, :, :]                             # (bs, d)
+    v = v_ref[0, 0, :, :]
+    if quantized:
+        # per-(position, head) absmax scales: dequantize this page in VMEM
+        k = k.astype(jnp.float32) * ks_ref[0, 0, :, :]
+        v = v.astype(jnp.float32) * vs_ref[0, 0, :, :]
+    s = jnp.dot(q, k.astype(q.dtype).T, preferred_element_type=jnp.float32)
+    ok = valid_ref[0, :][None, :]                     # (1, bs)
+    s = jnp.where(ok, s, NEG_INF)
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_s[...] = l_s[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_s[...] = acc_s[...] * corr + jnp.dot(
+        p.astype(jnp.float32), v.astype(jnp.float32),
+        preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+
+    @pl.when(bi == n_b - 1)
+    def _fin():
+        o_ref[0, 0, :, :] = acc_s[...]
+        l_ref[0, 0, :, :] = l_s[...]
+        m_ref[0, 0, :, :] = m_s[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("interpret", "return_partials"))
+def paged_flash_decode(q, k_pages, v_pages, block_tables, valid,
+                       k_scale_pages=None, v_scale_pages=None, *,
+                       interpret: bool = True,
+                       return_partials: bool = False):
+    """Single-query attention where each batch row gathers its K/V pages
+    through its block table.
+
+    q            (B, H, d)
+    k/v_pages    (P, KV, bs, d)   — the whole pool, pages shared by rows
+    block_tables (B, nb) int32    — physical page id per virtual block
+    valid        (B, nb * bs)     — readable virtual positions (masks both
+                                    unwritten tail positions and any NULL /
+                                    stale table entries)
+    k/v_scale_pages (P, KV, bs, 1) f32 — int8 dequant scales (both or none)
+
+    -> out (B, H, d), or with ``return_partials`` the unnormalized online-
+    softmax triple (o_un (B,KV,G,d), l (B,KV,G), m (B,KV,G)) so the caller
+    can fold in the current token's (k, v) before normalizing.
+    """
+    b, h, d = q.shape
+    p_total, n_kv, bs, _ = k_pages.shape
+    nb = block_tables.shape[1]
+    assert h % n_kv == 0
+    assert valid.shape == (b, nb * bs), (valid.shape, b, nb, bs)
+    quantized = k_scale_pages is not None
+    assert quantized == (v_scale_pages is not None)
+    g = h // n_kv
+    scale = 1.0 / (d ** 0.5)
+    qg = q.reshape(b, n_kv, g, d)
+
+    # index maps receive the scalar-prefetch block table last: the page a
+    # program DMAs is table[b, bi] — this indirection IS paged attention
+    page_spec = pl.BlockSpec(
+        (1, 1, bs, d), lambda b_, kv, bi, tbl: (tbl[b_, bi], kv, 0, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d), lambda b_, kv, bi, tbl: (b_, kv, 0, 0)),
+        page_spec,
+        page_spec,
+        pl.BlockSpec((1, bs), lambda b_, kv, bi, tbl: (b_, bi)),
+    ]
+    operands = [qg, k_pages, v_pages, valid]
+    if quantized:
+        scale_spec = pl.BlockSpec(
+            (1, 1, bs, 1), lambda b_, kv, bi, tbl: (tbl[b_, bi], kv, 0, 0))
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scale_pages, v_scale_pages]
+
+    kernel = functools.partial(_paged_kernel, n_b=nb, quantized=quantized,
+                               scale=scale)
+    stat_spec = pl.BlockSpec((1, 1, g, 1),
+                             lambda b_, kv, bi, tbl: (b_, kv, 0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, n_kv, nb),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, 1, g, d),
+                         lambda b_, kv, bi, tbl: (b_, kv, 0, 0)),
+            stat_spec,
+            stat_spec,
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    o_un, l, m = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n_kv, g, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, n_kv, g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, n_kv, g, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), *operands)
+    if return_partials:
+        return o_un, l[..., 0], m[..., 0]
+    out = o_un / jnp.maximum(l, 1e-30)
+    return out.reshape(b, h, d).astype(q.dtype)

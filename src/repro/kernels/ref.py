@@ -10,7 +10,6 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.probe import ProbeConfig
 from repro.core import ttt as _ttt
 from repro.models.attention import attn_prefill_einsum, _decode_core
 from repro.models import rwkv6 as _rwkv6
@@ -87,6 +86,31 @@ def flash_decode_ref(q, k, v, valid):
     n_kv = k.shape[1]
     qg = q.reshape(b, n_kv, h // n_kv, d).astype(jnp.float32)
     out = _decode_core(qg, k.astype(jnp.float32), v.astype(jnp.float32), valid)
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def paged_decode_ref(q, k_pages, v_pages, block_tables, valid,
+                     k_scale_pages=None, v_scale_pages=None):
+    """Oracle for ``paged_flash_decode``: gather every row's pages into a
+    contiguous virtual cache via its block table, then dense decode.
+    q (B,H,d); pages (P,KV,bs,d); block_tables (B,nb); valid (B, nb*bs)."""
+    b, h, d = q.shape
+    _, n_kv, bs, _ = k_pages.shape
+    nb = block_tables.shape[1]
+    bt = jnp.asarray(block_tables, jnp.int32)
+
+    def gather(pages, scales):
+        g = pages[bt]                                 # (B, nb, KV, bs, d')
+        g = g.astype(jnp.float32)
+        if scales is not None:
+            g = g * scales[bt].astype(jnp.float32)
+        # (B, nb, KV, bs, d') -> (B, KV, nb*bs, d')
+        return g.transpose(0, 2, 1, 3, 4).reshape(b, n_kv, nb * bs, -1)
+
+    k = gather(k_pages, k_scale_pages)
+    v = gather(v_pages, v_scale_pages)
+    qg = q.reshape(b, n_kv, h // n_kv, d).astype(jnp.float32)
+    out = _decode_core(qg, k, v, valid)
     return out.reshape(b, h, d).astype(q.dtype)
 
 

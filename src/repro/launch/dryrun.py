@@ -16,12 +16,11 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 # (EXPERIMENTS.md §Dry-run / §Roofline).
 
 import argparse
-import dataclasses
 import functools
 import json
 import sys
 import time
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import numpy as np
 
@@ -29,7 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs import ALIASES, ARCH_IDS, INPUT_SHAPES, InputShape, get_config
+from repro.configs import ALIASES, INPUT_SHAPES, InputShape, get_config
 from repro.core.probe import ProbeConfig, init_outer
 from repro.launch import shardings as SH
 from repro.launch.mesh import make_production_mesh
@@ -38,7 +37,6 @@ from repro.optim import Adam
 from repro.parallel import use_parallel
 from repro.roofline import build_report
 from repro.serving import init_probe_state, make_serve_step
-from repro.serving.engine import ProbeState
 
 
 def _abstract(tree):

@@ -79,6 +79,13 @@ def main(argv=None) -> int:
     ap.add_argument("--static-baseline", action="store_true",
                     help="also serve the same queue through the static-batch "
                          "engine and print the comparison")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve from the paged KV cache (block-pool "
+                         "admission, prefix sharing, eviction reclaims "
+                         "pages)")
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="pool size (0 -> dense-equivalent HBM)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -105,7 +112,9 @@ def main(argv=None) -> int:
     sched = orca.engine(model, params, calib, n_slots=args.slots, lam=lam,
                         tokens_per_step=args.tokens_per_step,
                         max_new_tokens=args.max_new_tokens,
-                        burn_in=args.burn_in)
+                        burn_in=args.burn_in, paged=args.paged,
+                        block_size=args.block_size,
+                        num_blocks=args.num_blocks or None)
     batch = model_inputs(cfg, jax.random.PRNGKey(args.seed + 1),
                          args.requests, args.prompt_len)
     extra_keys = [k for k in batch if k != "tokens"]
@@ -123,6 +132,11 @@ def main(argv=None) -> int:
           f"{fleet.tokens_per_s:.1f} tok/s, slot utilization "
           f"{fleet.slot_utilization:.2f}, mean step savings "
           f"{fleet.mean_step_savings:.3f}")
+    if args.paged:
+        print(f"[serve] pool: {fleet.pool_blocks} pages "
+              f"(x{args.block_size} tokens), peak in use "
+              f"{fleet.peak_blocks_in_use}, prefill skips "
+              f"{fleet.prefill_skips}")
 
     if args.static_baseline:
         pc, theta = calib.serving_params()

@@ -27,10 +27,9 @@ in tests/test_arch_smoke.py::test_divisibility_for_model_axis.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import InputShape, ModelConfig

@@ -10,9 +10,7 @@ pass --mesh single|multi (requires 256/512 devices) and the full config.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
-from typing import Optional
 
 import numpy as np
 
@@ -26,7 +24,7 @@ from repro.launch import shardings as SH
 from repro.launch.mesh import make_production_mesh
 from repro.models import build
 from repro.optim import Adam, cosine_schedule
-from repro.parallel import ParallelContext, use_parallel
+from repro.parallel import use_parallel
 
 
 def make_train_step(model, opt):

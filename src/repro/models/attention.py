@@ -9,7 +9,6 @@ cache:  {"k","v"}: (B, KV, S_cache, d_head)  (+ "k_scale","v_scale" for int8)
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -143,6 +142,171 @@ def cache_kv(cache_l: Dict[str, jnp.ndarray], dtype) -> Tuple[jnp.ndarray, jnp.n
         return (dequantize_kv(cache_l["k"], cache_l["k_scale"], dtype),
                 dequantize_kv(cache_l["v"], cache_l["v_scale"], dtype))
     return cache_l["k"], cache_l["v"]
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache: a pool of fixed-size token blocks shared by all requests.
+#
+# Layout: {"k","v"}: (L, P, KV, bs, d_head) — P physical pages; each batch
+# row reads/writes through its block table (B, nb): virtual position j lives
+# in page table[j // bs] at offset j % bs.  Page 0 is the NULL page
+# (``repro.serving.kv_pool.NULL_BLOCK``): parked slots point at it so their
+# no-op writes can't corrupt a reallocated page.
+
+def init_paged_cache(cfg, num_blocks: int, block_size: int,
+                     n_layers: Optional[int] = None,
+                     abstract: bool = False) -> Dict[str, jnp.ndarray]:
+    """Stacked-layer paged KV pool: (L, P, KV, bs, d_head)."""
+    L = cfg.n_layers if n_layers is None else n_layers
+    shape = (L, num_blocks, cfg.n_kv_heads, block_size, cfg.d_head)
+    mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if abstract else \
+         (lambda s, d: jnp.zeros(s, d))
+    if cfg.kv_cache_dtype == "int8":
+        return {"k": mk(shape, jnp.int8), "v": mk(shape, jnp.int8),
+                "k_scale": mk(shape[:-1] + (1,), jnp.float32),
+                "v_scale": mk(shape[:-1] + (1,), jnp.float32)}
+    dt = jnp.dtype(cfg.dtype)
+    return {"k": mk(shape, dt), "v": mk(shape, dt)}
+
+
+def cache_write_paged(cache: Dict[str, jnp.ndarray], ks: jnp.ndarray,
+                      vs: jnp.ndarray, block_tables: jnp.ndarray,
+                      pos: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Write one token for ALL layers through the block tables.
+
+    cache k/v (L, P, KV, bs, dh); ks/vs (L, B, KV, dh); block_tables
+    (B, nb) int32; ``pos`` scalar or (B,) — each row writes page
+    ``table[b, pos_b // bs]`` at offset ``pos_b % bs``.  Same single
+    donated-buffer scatter shape as ``cache_write_stacked``."""
+    bs = cache["k"].shape[3]
+    B = ks.shape[1]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    iB = jnp.arange(B)
+    page = block_tables[iB, pos // bs]            # (B,) physical page ids
+    off = pos % bs
+
+    def upd(buf, val):
+        # advanced indices (page, offset) at axes 1 and 3 move to the
+        # front: scattered value is (B, L, KV, dh) — per-row page write
+        return buf.at[:, page, :, off, :].set(
+            val.transpose(1, 0, 2, 3).astype(buf.dtype))
+
+    out = dict(cache)
+    if "k_scale" in cache:
+        kq, ksc = quantize_kv(ks)
+        vq, vsc = quantize_kv(vs)
+        out["k"] = upd(cache["k"], kq)
+        out["v"] = upd(cache["v"], vq)
+        out["k_scale"] = upd(cache["k_scale"], ksc)
+        out["v_scale"] = upd(cache["v_scale"], vsc)
+    else:
+        out["k"] = upd(cache["k"], ks.astype(cache["k"].dtype))
+        out["v"] = upd(cache["v"], vs.astype(cache["v"].dtype))
+    return out
+
+
+def prefill_to_pages(pages: Dict[str, jnp.ndarray],
+                     prefill_cache: Dict[str, jnp.ndarray],
+                     block_row: jnp.ndarray, n_blocks: int
+                     ) -> Dict[str, jnp.ndarray]:
+    """Scatter ONE request's prefilled dense cache into its pages.
+
+    ``prefill_cache`` leaves are (L, 1, KV, S_pad, dh) with S_pad a multiple
+    of the page size; the first ``n_blocks`` entries of ``block_row`` (nb,)
+    receive the prompt K/V, page by page.  int8 prefills carry their scales
+    through unchanged (same quantization as the dense path)."""
+    bs = pages["k"].shape[3]
+    out = dict(pages)
+    for key in pages:
+        src = prefill_cache[key]                  # (L, 1, KV, S_pad, d')
+        L, _, KV, s_pad, dl = src.shape
+        src = src.reshape(L, KV, s_pad // bs, bs, dl)[:, :, :n_blocks]
+        src = src.transpose(0, 2, 1, 3, 4)        # (L, nb, KV, bs, d')
+        out[key] = out[key].at[:, block_row[:n_blocks]].set(
+            src.astype(out[key].dtype))
+    return out
+
+
+def copy_pages(pages: Dict[str, jnp.ndarray], src: jnp.ndarray,
+               dst: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Copy physical pages ``src`` -> ``dst`` (1-D index arrays) across all
+    layers — the copy-on-write step when a new sharer takes a private copy
+    of a donor's partially-filled tail page."""
+    return {key: buf.at[:, dst].set(buf[:, src]) for key, buf in pages.items()}
+
+
+def paged_valid_mask(pos: jnp.ndarray, batch: int, n_virtual: int
+                     ) -> jnp.ndarray:
+    """Readable virtual positions for a paged decode step: [0, pos) per row.
+
+    Masked-off entries also cover NULL/stale table entries: a position is
+    only ever readable after this request wrote it (same stale-KV argument
+    as the dense per-slot cache)."""
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (batch,))
+    return jnp.arange(n_virtual)[None, :] < pos[:, None]
+
+
+def attn_decode_paged(q, cache_l: Dict[str, jnp.ndarray],
+                      block_tables: jnp.ndarray, valid: jnp.ndarray,
+                      dtype, extra_kv=None, *,
+                      impl: Optional[str] = None,
+                      interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Decode attention through a block table.  q (B,H,d); cache_l per-layer
+    pages {"k","v": (P,KV,bs,d)} READ-ONLY; valid (B, nb*bs); extra_kv the
+    current token's (k, v) each (B,KV,d).
+
+    ``impl="jnp"`` gathers pages with a jnp take and reuses the dense
+    online-softmax (bit-identical to the dense path when nb*bs equals the
+    dense cache length); ``impl="pallas"`` runs the paged flash-decode
+    kernel (the TPU hot path — pages are DMA'd through the scalar-prefetched
+    block table, never materialized contiguously).  Default comes from
+    ``REPRO_PAGED_ATTN`` (jnp off-TPU, pallas on TPU).
+    """
+    b, h, d = q.shape
+    impl = impl or default_paged_impl()
+    qg = q.reshape(b, cache_l["k"].shape[1], h // cache_l["k"].shape[1], d
+                   ).astype(jnp.float32)
+    if impl == "pallas":
+        from repro.kernels import ops as K           # deferred: no cycle
+        interp = K.default_interpret() if interpret is None else interpret
+        o, l, m = K.paged_flash_decode(
+            q.astype(jnp.float32), cache_l["k"], cache_l["v"], block_tables,
+            valid, cache_l.get("k_scale"), cache_l.get("v_scale"),
+            interpret=interp, return_partials=True)
+    elif impl == "jnp":
+        n_kv = cache_l["k"].shape[1]
+        bs = cache_l["k"].shape[2]
+        nb = block_tables.shape[1]
+        bt = jnp.asarray(block_tables, jnp.int32)
+
+        def gather(key, scale_key):
+            g = cache_l[key][bt]                     # (B, nb, KV, bs, d')
+            if scale_key in cache_l:
+                g = (g.astype(jnp.float32)
+                     * cache_l[scale_key][bt].astype(jnp.float32)
+                     ).astype(jnp.bfloat16)          # bf16 dequant (§Perf C3)
+            return g.transpose(0, 2, 1, 3, 4).reshape(b, n_kv, nb * bs, -1)
+
+        k = gather("k", "k_scale")
+        v = gather("v", "v_scale")
+        o, l, m = _decode_partial(qg, k, v, valid)
+    else:
+        raise ValueError(f"unknown paged attention impl {impl!r} "
+                         "(expected 'jnp' or 'pallas')")
+    o, l = _merge_extra_kv(qg, o, l, m, extra_kv, d)
+    out = o / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, h, d).astype(dtype)
+
+
+def default_paged_impl() -> str:
+    """jnp gather off-TPU, the Pallas paged kernel on TPU;
+    ``REPRO_PAGED_ATTN=jnp|pallas`` overrides (parity tests force both)."""
+    import os
+    forced = os.environ.get("REPRO_PAGED_ATTN")
+    if forced:
+        return forced
+    import jax as _jax
+    return "pallas" if _jax.default_backend() == "tpu" else "jnp"
 
 
 # ---------------------------------------------------------------------------
@@ -302,6 +466,23 @@ def _decode_core(qg, k, v, valid) -> jnp.ndarray:
     return o / jnp.maximum(l, 1e-30)[..., None]
 
 
+def _merge_extra_kv(qg, o, l, m, extra_kv, d):
+    """Fold the current token's (k, v) column into unnormalized online-
+    softmax partials (o, l, m).  Shared by the dense and paged paths."""
+    if extra_kv is None:
+        return o, l
+    k_x, v_x = extra_kv
+    k_x = k_x.astype(jnp.float32)
+    v_x = v_x.astype(jnp.float32)
+    s_x = jnp.einsum("bkgd,bkd->bkg", qg, k_x) / jnp.sqrt(d).astype(jnp.float32)
+    m_f = jnp.maximum(m, s_x)
+    w_c = jnp.where(jnp.isfinite(m), jnp.exp(m - m_f), 0.0)
+    w_x = jnp.exp(s_x - m_f)
+    o = o * w_c[..., None] + w_x[..., None] * v_x[:, :, None, :]
+    l = l * w_c + w_x
+    return o, l
+
+
 def attn_decode(q, cache_l, valid, dtype, extra_kv=None) -> jnp.ndarray:
     """q (B,H,d); cache_l per-layer dict (B,KV,S,d) READ-ONLY; valid (B,S);
     extra_kv: optional (k_new, v_new) each (B,KV,d) — the current token."""
@@ -316,16 +497,7 @@ def attn_decode(q, cache_l, valid, dtype, extra_kv=None) -> jnp.ndarray:
         o, l, m = _flash_decode_sharded(ctx, qg, k, v, valid)
     else:
         o, l, m = _decode_partial(qg, k, v, valid)
-    if extra_kv is not None:
-        k_x, v_x = extra_kv
-        k_x = k_x.astype(jnp.float32)
-        v_x = v_x.astype(jnp.float32)
-        s_x = jnp.einsum("bkgd,bkd->bkg", qg, k_x) / jnp.sqrt(d).astype(jnp.float32)
-        m_f = jnp.maximum(m, s_x)
-        w_c = jnp.where(jnp.isfinite(m), jnp.exp(m - m_f), 0.0)
-        w_x = jnp.exp(s_x - m_f)
-        o = o * w_c[..., None] + w_x[..., None] * v_x[:, :, None, :]
-        l = l * w_c + w_x
+    o, l = _merge_extra_kv(qg, o, l, m, extra_kv, d)
     out = o / jnp.maximum(l, 1e-30)[..., None]
     return out.reshape(b, h, d).astype(dtype)
 

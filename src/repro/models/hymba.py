@@ -8,7 +8,7 @@ and are always attendable (kept outside the SWA ring in decode).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

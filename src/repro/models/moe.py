@@ -16,7 +16,7 @@ Router aux losses (load-balance + z-loss) are returned for the train loss.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

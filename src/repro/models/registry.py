@@ -17,7 +17,6 @@ engine are architecture-agnostic.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -38,6 +37,14 @@ class Model:
     decode_step: Callable
     init_decode_state: Callable
     decode_geometry: Callable    # shape -> (cache_len, window)
+    # paged-KV serving (None for families without a paged cache layout):
+    # (batch, num_blocks, block_size, max_blocks, abstract) -> state pytree
+    # whose cache leaves are page pools + a per-row "block_tables" array
+    init_paged_state: Optional[Callable] = None
+
+    @property
+    def supports_paged(self) -> bool:
+        return self.init_paged_state is not None
 
     # ------------------------------------------------------------------
     def init(self, rng) -> Any:
@@ -146,6 +153,16 @@ def _build_dense(cfg: ModelConfig) -> Model:
     def init_decode_state(batch: int, cache_len: int, abstract: bool = False):
         return attn.init_cache(cfg, batch, cache_len, abstract=abstract)
 
+    def init_paged_state(batch: int, num_blocks: int, block_size: int,
+                         max_blocks: int, abstract: bool = False):
+        pages = attn.init_paged_cache(cfg, num_blocks, block_size,
+                                      abstract=abstract)
+        if abstract:
+            bt = jax.ShapeDtypeStruct((batch, max_blocks), jnp.int32)
+        else:
+            bt = jnp.zeros((batch, max_blocks), jnp.int32)   # -> NULL page
+        return dict(pages, block_tables=bt)
+
     def decode_step(cfg, params, token, state, pos, window=None):
         return transformer.decode_step(cfg, params, token, state, pos, window=window)
 
@@ -154,7 +171,8 @@ def _build_dense(cfg: ModelConfig) -> Model:
                  prefill=transformer.prefill,
                  decode_step=decode_step,
                  init_decode_state=init_decode_state,
-                 decode_geometry=geom)
+                 decode_geometry=geom,
+                 init_paged_state=init_paged_state)
 
 
 def _build_rwkv(cfg: ModelConfig) -> Model:

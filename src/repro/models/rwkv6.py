@@ -12,7 +12,7 @@ kernel lives in repro/kernels/rwkv6_scan.py.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

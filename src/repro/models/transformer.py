@@ -8,7 +8,6 @@ learned projector (vision tower stubbed per the assignment carve-out).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -130,11 +129,12 @@ def layer_prefill(cfg, p, x, positions, window: Optional[int]):
     return x, (k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)), aux
 
 
-def layer_decode(cfg, p, x, cache_l, pos, valid):
-    """x (B,d); cache_l per-layer (B,KV,S,dh) READ-ONLY; pos (B,) absolute
-    positions; valid (B,S) masks readable cache entries (current slot
-    excluded — the new token's (k, v) attends via extra_kv and is written
-    into the cache once, outside the layer scan)."""
+def layer_decode(cfg, p, x, cache_l, pos, valid, block_tables=None):
+    """x (B,d); cache_l per-layer (B,KV,S,dh) READ-ONLY — or, with
+    ``block_tables`` (B,nb), per-layer pages (P,KV,bs,dh) read through the
+    table; pos (B,) absolute positions; valid (B,S) masks readable cache
+    entries (current slot excluded — the new token's (k, v) attends via
+    extra_kv and is written into the cache once, outside the layer scan)."""
     b, d = x.shape
     h = apply_norm(cfg, p["ln1"], x[:, None, :])[:, 0]
     q, k, v = _qkv(cfg, p["attn"], h)
@@ -143,7 +143,11 @@ def layer_decode(cfg, p, x, cache_l, pos, valid):
     v = v.reshape(b, cfg.n_kv_heads, cfg.d_head)
     q = apply_rope(q[:, None], pos[:, None], cfg.rope_theta, cfg.rotary_pct)[:, 0]
     k = apply_rope(k[:, None], pos[:, None], cfg.rope_theta, cfg.rotary_pct)[:, 0]
-    o = attn.attn_decode(q, cache_l, valid, x.dtype, extra_kv=(k, v))
+    if block_tables is not None:
+        o = attn.attn_decode_paged(q, cache_l, block_tables, valid, x.dtype,
+                                   extra_kv=(k, v))
+    else:
+        o = attn.attn_decode(q, cache_l, valid, x.dtype, extra_kv=(k, v))
     o = o.reshape(b, cfg.attn_out_dim) @ p["attn"]["wo"].astype(x.dtype)
     x = x + o
     h = apply_norm(cfg, p["ln2"], x[:, None, :])
@@ -258,23 +262,42 @@ def decode_step(cfg, params, token, cache, pos, *, window: Optional[int] = None)
     every batch row sits at its own absolute position).
 
     With ``window`` set, the cache is a ring buffer of size window and
-    ``slot = pos % window``; otherwise slot = pos.  Returns (logits, hidden,
+    ``slot = pos % window``; otherwise slot = pos.  A cache carrying
+    ``block_tables`` is PAGED: per-layer leaves are page pools (P,KV,bs,dh)
+    and each row reads/writes through its block-table row (the table itself
+    is device state owned by the serving engine).  Returns (logits, hidden,
     cache).
     """
     b = token.shape[0]
     pos = jnp.asarray(pos, jnp.int32)
     x = embed_tokens(cfg, params, token)
-    s_cache = cache["k"].shape[3]
-    slot, valid = attn.decode_valid_mask(pos, b, s_cache, window)
+    paged = "block_tables" in cache
+    if paged:
+        assert window is None, "paged decode has no ring-buffer SWA variant"
+        bt = cache["block_tables"]
+        pages = {k: v for k, v in cache.items() if k != "block_tables"}
+        n_virtual = bt.shape[1] * pages["k"].shape[3]
+        valid = attn.paged_valid_mask(pos, b, n_virtual)
+        scanned = pages
+    else:
+        s_cache = cache["k"].shape[3]
+        slot, valid = attn.decode_valid_mask(pos, b, s_cache, window)
+        bt = None
+        scanned = cache
     positions = pos if pos.ndim == 1 else jnp.full((b,), pos, jnp.int32)
 
     def body(x, xs):
         p_l, cache_l = xs
-        x, kv_new = layer_decode(cfg, p_l, x, cache_l, positions, valid)
+        x, kv_new = layer_decode(cfg, p_l, x, cache_l, positions, valid,
+                                 block_tables=bt)
         return x, kv_new
 
-    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache))
-    new_cache = attn.cache_write_stacked(cache, ks, vs, slot)
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], scanned))
+    if paged:
+        new_cache = dict(attn.cache_write_paged(pages, ks, vs, bt, pos),
+                         block_tables=bt)
+    else:
+        new_cache = attn.cache_write_stacked(cache, ks, vs, slot)
     h = apply_norm(cfg, params["final_norm"], x[:, None, :])[:, 0]
     logits = logits_from_hidden(cfg, params, h)
     return logits, h, new_cache

@@ -7,7 +7,7 @@ positions, causal decoder with learned positions and cross-attention.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from repro import parallel
 from repro.models import attention as attn
 from repro.models.common import Param, apply_norm, gelu, norm_decls, stack_decls
-from repro.models.transformer import _qkv, logits_from_hidden
+from repro.models.transformer import _qkv
 
 MAX_TARGET_POSITIONS = 32768  # decoder learned positions (extended from 448)
 

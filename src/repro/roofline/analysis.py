@@ -18,7 +18,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional
 
 from repro.configs import InputShape, ModelConfig
 from repro.roofline import analytic

@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+from typing import Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -40,7 +40,9 @@ from repro.kernels import ops as K
 from repro.kernels import ref as KR
 from repro.kernels.ttt_probe import ProbeStepOut as KernelOut
 from repro.kernels.ttt_probe import serving_probe_step
+from repro.models import attention as A
 from repro.models.registry import Model
+from repro.serving.kv_pool import NULL_BLOCK, blocks_needed
 
 
 class ProbeState(NamedTuple):
@@ -253,14 +255,14 @@ class ServingEngine:
         model, cfg = self.model, self.cfg
         mcfg = model.cfg
         B = next(iter(batch.values())).shape[0]
-        n_total = prompt_len + cfg.max_new_tokens
-        cache_len = cache_len or n_total
+        pre = prefix_len(mcfg, batch, prompt_len)
+        cache_len = cache_len or (pre + cfg.max_new_tokens)
         state, last_h, _ = model.prefill(mcfg, self.params, batch, cache_len)
         step_fn = self._step_fn
         st = init_probe_state(self.pc, self.theta, B, mcfg.d_model)
         token = jnp.zeros((B,), jnp.int32)
         toks, scores, phis = [], [], []
-        pos0 = prompt_len if mcfg.arch_type != "audio" else 0
+        pos0 = pre if mcfg.arch_type != "audio" else 0
         # host-side watermark (st's buffers are donated to the next step)
         last_max_n = 0
         for i in range(cfg.max_new_tokens):
@@ -335,11 +337,12 @@ def extract_trajectories(model: Model, params, batch, prompt_len: int,
     the trajectory source for meta-training probes on a real model."""
     mcfg = model.cfg
     B = next(iter(batch.values())).shape[0]
-    cache_len = cache_len or (prompt_len + max_new_tokens)
+    pre = prefix_len(mcfg, batch, prompt_len)
+    cache_len = cache_len or (pre + max_new_tokens)
     state, _, _ = model.prefill(mcfg, params, batch, cache_len)
     token = jnp.zeros((B,), jnp.int32)
     step_fn = jax.jit(functools.partial(model.decode_step, mcfg))
-    pos0 = prompt_len if mcfg.arch_type != "audio" else 0
+    pos0 = pre if mcfg.arch_type != "audio" else 0
     phis, acc, cnt = [], jnp.zeros((B, mcfg.d_model), jnp.float32), 0
     tokens = []
     for i in range(max_new_tokens):
@@ -369,6 +372,17 @@ class SlotStepView(NamedTuple):
     smoothed: np.ndarray    # (n_slots,) current smoothed score
 
 
+def prefix_len(mcfg, batch_one: Dict[str, jnp.ndarray],
+               prompt_len: int) -> int:
+    """Sequence length ``model.prefill`` will actually run for one request
+    (text prompt + vlm patch prefix + learned meta tokens)."""
+    n = prompt_len
+    if mcfg.arch_type == "vlm" and "patch_embeds" in batch_one:
+        n += mcfg.frontend.n_tokens
+    n += getattr(mcfg, "n_meta_tokens", 0) or 0
+    return n
+
+
 class ContinuousServingEngine:
     """Fixed-shape batch of ``n_slots`` whose rows live independent lives.
 
@@ -383,19 +397,43 @@ class ContinuousServingEngine:
     * ``release`` parks the slot (probe ``stopped=True``): the fused step
       treats it as no-op until the scheduler refills it.
 
+    With ``paged=True`` (model families exposing ``init_paged_state``) the
+    KV cache is a pool of fixed-size pages instead of one max-length lane
+    per slot: ``admit`` takes the request's physical block row (reserved by
+    the scheduler from ``repro.serving.kv_pool.BlockPool``), writes prefill
+    K/V page-by-page through it — or, on a prefix hit, skips prefill
+    entirely and just copies the donor's partial tail page — and
+    ``release`` points the slot's table row at the NULL page so a parked
+    slot's no-op write can never corrupt a reallocated page.
+
     The scheduler (``repro.serving.scheduler.OrcaScheduler``) owns queues,
-    request lifecycles and metrics; this class owns device state only.
+    request lifecycles, the block pool and metrics; this class owns device
+    state only.
     """
 
     def __init__(self, model: Model, params, pc: ProbeConfig, theta,
                  cfg: ServeConfig, n_slots: int, cache_len: int,
                  window: Optional[int] = None, *, probe_impl: str = "kernel",
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None, paged: bool = False,
+                 block_size: int = 16, num_blocks: Optional[int] = None):
         self.model, self.params, self.pc, self.theta, self.cfg = \
             model, params, pc, theta, cfg
-        self.n_slots, self.cache_len = n_slots, cache_len
         mcfg = model.cfg
-        self.state = model.init_decode_state(n_slots, cache_len)
+        self.paged = bool(paged)
+        if self.paged:
+            assert model.supports_paged, \
+                f"{mcfg.name}: no paged cache layout for this family"
+            assert window is None, "paged serving has no SWA ring buffer"
+            self.block_size = int(block_size)
+            self.max_blocks = blocks_needed(cache_len, block_size)
+            cache_len = self.max_blocks * self.block_size
+            self.num_blocks = int(num_blocks or
+                                  (n_slots * self.max_blocks + 1))
+            self.state = model.init_paged_state(
+                n_slots, self.num_blocks, self.block_size, self.max_blocks)
+        else:
+            self.state = model.init_decode_state(n_slots, cache_len)
+        self.n_slots, self.cache_len = n_slots, cache_len
         st = init_probe_state(pc, theta, n_slots, mcfg.d_model)
         self.st = st._replace(stopped=jnp.ones((n_slots,), bool))
         self.token = jnp.zeros((n_slots,), jnp.int32)
@@ -404,25 +442,95 @@ class ContinuousServingEngine:
             make_serve_step(model, pc, cfg, window=window,
                             probe_impl=probe_impl, interpret=interpret),
             donate_argnums=_SERVE_STEP_DONATE)
-        self._inject = jax.jit(functools.partial(
-            inject_prefill, model, cache_len=cache_len))
+        if self.paged:
+            # the page pool is the largest serving buffer: donate it through
+            # every admit/release op so XLA updates it in place instead of
+            # copying the whole pool per call
+            self._set_row = jax.jit(self._set_row_impl, donate_argnums=0)
+            self._copy = jax.jit(self._copy_impl, donate_argnums=0)
+            self._prefill_pages = jax.jit(self._prefill_pages_impl,
+                                          static_argnames=("s_pad",),
+                                          donate_argnums=1)
+        else:
+            self._inject = jax.jit(functools.partial(
+                inject_prefill, model, cache_len=cache_len))
         self._reset = jax.jit(functools.partial(reset_probe_slot, pc),
                               static_argnames=("active",))
 
+    # ------------------------------------------------------------------
+    # paged device ops (jitted in __init__)
+    @staticmethod
+    def _set_row_impl(state, slot, row):
+        return dict(state, block_tables=state["block_tables"].at[slot].set(row))
+
+    @staticmethod
+    def _copy_impl(state, src, dst):
+        pages = {k: v for k, v in state.items() if k != "block_tables"}
+        return dict(A.copy_pages(pages, src, dst),
+                    block_tables=state["block_tables"])
+
+    def _prefill_pages_impl(self, params, state, batch_one, row, *,
+                            s_pad: int):
+        sub, _, _ = self.model.prefill(self.model.cfg, params, batch_one,
+                                       s_pad)
+        pages = {k: v for k, v in state.items() if k != "block_tables"}
+        pages = A.prefill_to_pages(pages, sub, row,
+                                   s_pad // self.block_size)
+        return dict(pages, block_tables=state["block_tables"])
+
+    # ------------------------------------------------------------------
     def admit(self, slot: int, batch_one: Dict[str, jnp.ndarray],
-              prompt_len: int) -> None:
-        """Prefill + inject one request into ``slot`` and arm its probe."""
-        self.state = self._inject(self.params, self.state, batch_one,
-                                  jnp.asarray(slot, jnp.int32))
+              prompt_len: int, *, block_row=None, skip_prefill: bool = False,
+              copy_tail=None) -> None:
+        """Prefill + inject one request into ``slot`` and arm its probe.
+
+        Paged mode additionally takes the request's reserved physical block
+        ids (``block_row``); ``skip_prefill`` marks a prefix hit (the shared
+        full pages already hold the prompt K/V) and ``copy_tail`` is the
+        (src, dst) page pair for the donor's partial tail page, copied
+        before this slot starts writing its own decode tokens into it."""
+        if self.paged:
+            assert block_row is not None, "paged admit needs a block row"
+            row = np.full((self.max_blocks,), NULL_BLOCK, np.int32)
+            row[:len(block_row)] = np.asarray(block_row, np.int32)
+            row = jnp.asarray(row)
+            self.state = self._set_row(self.state,
+                                       jnp.asarray(slot, jnp.int32), row)
+            if copy_tail is not None:
+                src, dst = copy_tail
+                self.state = self._copy(self.state,
+                                        jnp.asarray([src], jnp.int32),
+                                        jnp.asarray([dst], jnp.int32))
+            if not skip_prefill:
+                pre = prefix_len(self.model.cfg, batch_one, prompt_len)
+                s_pad = blocks_needed(pre, self.block_size) * self.block_size
+                assert s_pad // self.block_size <= len(block_row), \
+                    "block row shorter than the prefill prefix"
+                self.state = self._prefill_pages(self.params, self.state,
+                                                 batch_one, row, s_pad=s_pad)
+        else:
+            assert block_row is None and copy_tail is None and not skip_prefill
+            self.state = self._inject(self.params, self.state, batch_one,
+                                      jnp.asarray(slot, jnp.int32))
         self.st = self._reset(self.theta, self.st,
                               jnp.asarray(slot, jnp.int32), active=True)
         self.token = self.token.at[slot].set(0)
-        self.pos[slot] = 0 if self.model.cfg.arch_type == "audio" else prompt_len
+        # decode resumes AFTER the whole prefill prefix (vlm patches / meta
+        # tokens included) — starting at prompt_len would clobber prefix
+        # K/V and leave the prompt's own K/V forever behind the valid mask
+        self.pos[slot] = 0 if self.model.cfg.arch_type == "audio" else \
+            prefix_len(self.model.cfg, batch_one, prompt_len)
 
     def release(self, slot: int) -> None:
-        """Evict the slot's request: park the probe row as no-op compute."""
+        """Evict the slot's request: park the probe row as no-op compute.
+        Paged: the slot's table row is pointed at the NULL page so its
+        parked write can't touch pages the pool hands to someone else."""
         self.st = self._reset(self.theta, self.st,
                               jnp.asarray(slot, jnp.int32), active=False)
+        if self.paged:
+            null_row = jnp.full((self.max_blocks,), NULL_BLOCK, jnp.int32)
+            self.state = self._set_row(self.state,
+                                       jnp.asarray(slot, jnp.int32), null_row)
         self.pos[slot] = 0
 
     def step(self) -> SlotStepView:

@@ -22,7 +22,7 @@ server) and the parity suite's engine-level fixtures.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import List, Sequence
 
 import jax.numpy as jnp
 import numpy as np

@@ -56,6 +56,11 @@ class Request:
     stop_step: int = -1                   # reasoning step at ORCA stop (-1 budget)
     steps_run: int = 0                    # reasoning steps actually executed
 
+    # paged-KV bookkeeping (owned by the scheduler's BlockPool)
+    block_ids: List[int] = dataclasses.field(default_factory=list)
+    n_shared_blocks: int = 0              # prefix pages shared with a donor
+    prefill_skipped: bool = False         # prompt was resident: no prefill
+
     @property
     def done(self) -> bool:
         return self.state in (RequestState.STOPPED, RequestState.FINISHED)
@@ -99,6 +104,10 @@ class FleetMetrics:
     slot_utilization: float      # active_slot_steps / (engine_steps * n_slots)
     mean_step_savings: float     # mean over requests (shared metric)
     mean_queue_steps: float
+    # paged-KV pool stats (zero when serving from the dense cache)
+    pool_blocks: int = 0         # usable pages in the pool
+    peak_blocks_in_use: int = 0  # high-water mark across the run
+    prefill_skips: int = 0       # admissions served from a resident prefix
 
     def row(self) -> Dict[str, float]:
         return {
@@ -109,4 +118,7 @@ class FleetMetrics:
             "slot_utilization": self.slot_utilization,
             "mean_step_savings": self.mean_step_savings,
             "mean_queue_steps": self.mean_queue_steps,
+            "pool_blocks": self.pool_blocks,
+            "peak_blocks_in_use": self.peak_blocks_in_use,
+            "prefill_skips": self.prefill_skips,
         }

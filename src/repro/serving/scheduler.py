@@ -1,20 +1,37 @@
 """OrcaScheduler: continuous batching with ORCA-stop eviction.
 
 The scheduler owns the request lifecycle (queues, admission, eviction,
-metrics); ``ContinuousServingEngine`` owns device state.  The loop follows
-the vLLM/sarathi shape — waiting requests are admitted into fixed-shape
-batch slots; the moment the calibrated ORCA threshold test stops a
-sequence, its slot is released and refilled from the queue on the very
-next step — but the *capacity mechanism* here is the paper's calibrated
-early stopping: every early stop returns its remaining step budget to the
-fleet, so calibrated savings become measurable throughput.
+metrics) and — in paged mode — the KV block pool; ``ContinuousServingEngine``
+owns device state.  The loop follows the vLLM/sarathi shape — waiting
+requests are admitted into fixed-shape batch slots; the moment the
+calibrated ORCA threshold test stops a sequence, its slot is released and
+refilled from the queue on the very next step — but the *capacity
+mechanism* here is the paper's calibrated early stopping: every early stop
+returns its remaining step budget to the fleet, so calibrated savings
+become measurable throughput.
+
+Paged admission (``paged=True``) replaces "find a free slot lane" with
+"reserve blocks from the pool":
+
+* a request needs ``ceil((prompt_len + max_new) / block_size)`` pages; if
+  the pool can't cover the reservation the request stays WAITING — the
+  scheduler backpressures instead of over-admitting (FIFO order is kept:
+  head-of-line blocking, no starvation);
+* a prompt that is already resident (self-consistency decoding: N samples
+  of one prompt) is admitted as a block-table copy + refcount bump on the
+  shared full prompt pages — prefill is skipped entirely; only the partial
+  tail page (if any) is copied into a private page before this request
+  writes its own decode tokens there;
+* an ORCA stop releases the request's pages back to the pool immediately —
+  the paper's early stop is literally a memory-reclaim event.
 
 Eviction is score-invariant by construction: each slot's probe fast
-weights are reset to (W0, b0) at admission and the per-slot KV cache only
-ever exposes the slot's own request, so a request's score trajectory and
-stop step are identical to a fresh single-request run (tested in
-``tests/test_serving_scheduler.py``; the throughput benchmark asserts it
-against the static-batch baseline).
+weights are reset to (W0, b0) at admission and the per-slot KV view (dense
+lane or block table) only ever exposes the slot's own request, so a
+request's score trajectory and stop step are identical to a fresh
+single-request run (tested in ``tests/test_serving_scheduler.py`` and
+``tests/test_paged_kv.py``; the throughput benchmark asserts it against
+the static-batch baseline).
 """
 from __future__ import annotations
 
@@ -28,8 +45,19 @@ import numpy as np
 from repro.core.probe import ProbeConfig
 from repro.models.registry import Model
 from repro.serving.engine import (ContinuousServingEngine, ServeConfig,
-                                  SlotStepView)
+                                  prefix_len)
+from repro.serving.kv_pool import BlockPool, blocks_needed, prompt_key
 from repro.serving.request import FleetMetrics, Request, RequestState
+
+
+@dataclasses.dataclass(frozen=True)
+class _AdmitPlan:
+    """One request's reserved pages + how to fill them."""
+    row: List[int]               # physical pages, virtual order
+    n_shared: int                # leading pages refcount-shared with a donor
+    skip_prefill: bool
+    copy_tail: Optional[Tuple[int, int]]   # (donor tail page, private copy)
+    register_key: Optional[str]  # register as prefix donor after admission
 
 
 class OrcaScheduler:
@@ -39,7 +67,10 @@ class OrcaScheduler:
                  cfg: ServeConfig, *, n_slots: int = 4,
                  cache_len: Optional[int] = None,
                  probe_impl: str = "kernel",
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 paged: bool = False, block_size: int = 16,
+                 num_blocks: Optional[int] = None,
+                 prefix_sharing: bool = True):
         self.model, self.params, self.pc, self.theta, self.cfg = \
             model, params, pc, theta, cfg
         self.n_slots = n_slots
@@ -48,24 +79,115 @@ class OrcaScheduler:
         # (the Pallas serving_probe_step) or "ref" (jnp parity oracle)
         self.probe_impl = probe_impl
         self.interpret = interpret
+        self.paged = bool(paged)
+        self.block_size = int(block_size)
+        self.num_blocks = num_blocks
+        self.prefix_sharing = bool(prefix_sharing)
+        self.pool: Optional[BlockPool] = None
         self._engine: Optional[ContinuousServingEngine] = None
 
     # ------------------------------------------------------------------
     def _ensure_engine(self, requests: Sequence[Request]) -> ContinuousServingEngine:
         cache_len = self.cache_len
         if cache_len is None:
-            max_prompt = max((r.prompt_len for r in requests), default=0)
-            if self.model.cfg.arch_type == "audio":
+            mcfg = self.model.cfg
+            max_prompt = max((prefix_len(mcfg, r.inputs, r.prompt_len)
+                              for r in requests), default=0)
+            if mcfg.arch_type == "audio":
                 max_prompt = 0  # decoder cache holds generated tokens only
             max_new = max([r.max_new_tokens or self.cfg.max_new_tokens
                            for r in requests] + [self.cfg.max_new_tokens])
             cache_len = max_prompt + max_new
-        if self._engine is None or self._engine.cache_len < cache_len:
+        if self.paged:
+            # device-paged only for families with a page layout; every
+            # family still gets pool-based admission control (backpressure)
+            device_paged = self.model.supports_paged
+            # the virtual capacity must also cover the largest prefill
+            # prefix (vlm patches / meta tokens can exceed prompt+max_new);
+            # _request_blocks reserves pages for it, so the engine's block
+            # tables and the default pool have to be sized for it too
+            cache_len = max([cache_len]
+                            + [self._request_tokens(r) for r in requests])
+            max_blocks = blocks_needed(cache_len, self.block_size)
+            num_blocks = int(self.num_blocks or
+                             (self.n_slots * max_blocks + 1))
+            if self.pool is None or self.pool.num_blocks != num_blocks:
+                self.pool = BlockPool(num_blocks, self.block_size)
+            if self._engine is None or self._engine.cache_len < cache_len:
+                self._engine = ContinuousServingEngine(
+                    self.model, self.params, self.pc, self.theta, self.cfg,
+                    self.n_slots, cache_len, probe_impl=self.probe_impl,
+                    interpret=self.interpret, paged=device_paged,
+                    block_size=self.block_size, num_blocks=num_blocks)
+        elif self._engine is None or self._engine.cache_len < cache_len:
             self._engine = ContinuousServingEngine(
                 self.model, self.params, self.pc, self.theta, self.cfg,
                 self.n_slots, cache_len, probe_impl=self.probe_impl,
                 interpret=self.interpret)
         return self._engine
+
+    # ------------------------------------------------------------------
+    # paged admission: reserve pages (all-or-nothing) + prefix sharing
+    def _request_tokens(self, req: Request) -> int:
+        """Virtual positions this request needs: the full prefill prefix
+        (vlm patches / meta tokens included — decode resumes after it)
+        plus the decode budget."""
+        mcfg = self.model.cfg
+        max_new = req.max_new_tokens or self.cfg.max_new_tokens
+        if mcfg.arch_type == "audio":
+            return max_new
+        return prefix_len(mcfg, req.inputs, req.prompt_len) + max_new
+
+    def _request_blocks(self, req: Request) -> int:
+        return blocks_needed(self._request_tokens(req), self.block_size)
+
+    def _sharing_key(self, req: Request) -> Optional[str]:
+        if not (self.prefix_sharing and self._engine is not None
+                and self._engine.paged):
+            return None
+        if set(req.inputs) != {"tokens"}:      # multimodal prefixes differ
+            return None
+        # sharing assumes virtual positions [0, prompt_len) hold exactly
+        # the prompt's K/V — a hidden prefix (meta tokens) breaks that
+        if prefix_len(self.model.cfg, req.inputs, req.prompt_len) \
+                != req.prompt_len:
+            return None
+        return prompt_key(np.asarray(req.inputs["tokens"]))
+
+    def _reserve(self, req: Request) -> Optional[_AdmitPlan]:
+        """Try to reserve this request's pages; None = pool exhausted (the
+        request stays WAITING — backpressure, not over-admission)."""
+        pool = self.pool
+        n_total = self._request_blocks(req)
+        key = self._sharing_key(req)
+        entry = pool.lookup_prefix(key) if key else None
+        if entry is not None and entry.prompt_len == req.prompt_len \
+                and len(entry.full_blocks) <= n_total:
+            private = pool.allocate(n_total - len(entry.full_blocks))
+            if private is None:
+                return None
+            shared = pool.share(entry.full_blocks)
+            copy_tail = None
+            if entry.tail_block is not None and private:
+                copy_tail = (entry.tail_block, private[0])
+            return _AdmitPlan(row=shared + private, n_shared=len(shared),
+                              skip_prefill=True, copy_tail=copy_tail,
+                              register_key=None)
+        row = pool.allocate(n_total)
+        if row is None:
+            return None
+        return _AdmitPlan(row=row, n_shared=0, skip_prefill=False,
+                          copy_tail=None, register_key=key)
+
+    def _register_donor(self, req: Request, plan: _AdmitPlan) -> None:
+        if plan.register_key is None:
+            return
+        bs = self.block_size
+        n_full = req.prompt_len // bs
+        tail = plan.row[n_full] if (req.prompt_len % bs
+                                    and n_full < len(plan.row)) else None
+        self.pool.register_prefix(plan.register_key, plan.row[:n_full],
+                                  tail, req.prompt_len)
 
     # ------------------------------------------------------------------
     def run(self, requests: Sequence[Request]
@@ -77,15 +199,47 @@ class OrcaScheduler:
         free = list(range(self.n_slots))
         steps = active_slot_steps = 0
         total_tokens = 0
+        peak_blocks = prefill_skips = 0
         t0 = time.perf_counter()
 
         while waiting or running:
-            # admission: refill every free slot before the next fused step
+            # admission: refill free slots before the next fused step; in
+            # paged mode a request that doesn't fit the pool keeps FIFO
+            # order and WAITS for an eviction to return pages
             while free and waiting:
-                req = waiting.popleft()
+                req = waiting[0]
+                plan = None
+                if self.paged:
+                    plan = self._reserve(req)
+                    if plan is None:
+                        if not running:
+                            raise RuntimeError(
+                                f"request {req.req_id} needs "
+                                f"{self._request_blocks(req)} pages but the "
+                                f"pool holds {self.pool.num_usable}; nothing "
+                                "left to evict")
+                        break
+                waiting.popleft()
                 slot = free.pop()
                 req.state = RequestState.PREFILL
-                eng.admit(slot, req.inputs, req.prompt_len)
+                if plan is not None:
+                    if eng.paged:
+                        eng.admit(slot, req.inputs, req.prompt_len,
+                                  block_row=plan.row,
+                                  skip_prefill=plan.skip_prefill,
+                                  copy_tail=plan.copy_tail)
+                    else:
+                        # family without a page layout: the pool still
+                        # admission-controls, the device cache stays dense
+                        eng.admit(slot, req.inputs, req.prompt_len)
+                    req.block_ids = list(plan.row)
+                    req.n_shared_blocks = plan.n_shared
+                    req.prefill_skipped = plan.skip_prefill
+                    prefill_skips += int(plan.skip_prefill)
+                    self._register_donor(req, plan)
+                    peak_blocks = max(peak_blocks, self.pool.blocks_in_use)
+                else:
+                    eng.admit(slot, req.inputs, req.prompt_len)
                 req.slot, req.admitted_step = slot, steps
                 req.state = RequestState.RUNNING
                 running[slot] = req
@@ -113,13 +267,17 @@ class OrcaScheduler:
                 else:
                     continue
                 eng.release(slot)
+                if self.paged and req.block_ids:
+                    # the stop IS the reclaim: pages return to the pool now
+                    self.pool.free(req.block_ids)
                 free.append(slot)
                 del running[slot]
 
         wall = max(time.perf_counter() - t0, 1e-9)
         return list(requests), self._metrics(requests, steps,
                                              active_slot_steps,
-                                             total_tokens, wall)
+                                             total_tokens, wall,
+                                             peak_blocks, prefill_skips)
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -129,7 +287,8 @@ class OrcaScheduler:
 
     def _metrics(self, requests: Sequence[Request], steps: int,
                  active_slot_steps: int, total_tokens: int,
-                 wall: float) -> FleetMetrics:
+                 wall: float, peak_blocks: int = 0,
+                 prefill_skips: int = 0) -> FleetMetrics:
         n = len(requests)
         sav = [r.savings(self.cfg.tokens_per_step, self.cfg.max_new_tokens)
                for r in requests]
@@ -141,4 +300,6 @@ class OrcaScheduler:
             slot_utilization=(active_slot_steps
                               / max(steps * self.n_slots, 1)),
             mean_step_savings=float(np.mean(sav)) if sav else 0.0,
-            mean_queue_steps=float(np.mean(queue)) if queue else 0.0)
+            mean_queue_steps=float(np.mean(queue)) if queue else 0.0,
+            pool_blocks=self.pool.num_usable if self.pool else 0,
+            peak_blocks_in_use=peak_blocks, prefill_skips=prefill_skips)

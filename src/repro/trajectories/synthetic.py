@@ -29,7 +29,7 @@ Off-u dimensions carry instance baselines, smooth stage drift and iid noise
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import numpy as np
 

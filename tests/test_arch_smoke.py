@@ -9,7 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCH_IDS, INPUT_SHAPES, InputShape, get_config
+from repro.configs import ARCH_IDS, InputShape, get_config
 from repro.models import build
 
 SMOKE_TRAIN = InputShape("smoke_train", 64, 2, "train")

@@ -1,7 +1,6 @@
 """Calibrator protocol conformance (TTT + static) and facade/shim regression."""
 import math
 
-import numpy as np
 import pytest
 
 from repro import api as orca

@@ -1,0 +1,335 @@
+"""Paged KV-cache serving: pool invariants, write/read round trips,
+engine-level dense-vs-paged stop parity (jnp + forced-interpret Pallas,
+fp32 + int8 KV), prefix sharing, pool exhaustion backpressure, and a
+hypothesis sweep over admit/release/stop orderings."""
+import dataclasses
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.probe import ProbeConfig, init_outer
+from repro.models import build
+from repro.models import attention as attn
+from repro.serving import (BlockPool, NULL_BLOCK, OrcaScheduler,
+                           RequestState, ServeConfig, blocks_needed,
+                           make_request, prompt_key)
+
+from tests._hypothesis_stub import given, settings, st
+
+
+# ---------------------------------------------------------------------------
+# BlockPool unit invariants
+
+def test_pool_allocate_free_refcount_roundtrip():
+    pool = BlockPool(num_blocks=8, block_size=4)
+    assert pool.num_usable == 7 and pool.num_free == 7
+    row = pool.allocate(3)
+    assert row is not None and len(set(row)) == 3
+    assert NULL_BLOCK not in row
+    assert pool.blocks_in_use == 3
+    assert all(pool.refcount(b) == 1 for b in row)
+    pool.free(row)
+    assert pool.num_free == 7
+    assert all(pool.refcount(b) == 0 for b in row)
+    pool.check()
+
+
+def test_pool_allocation_is_all_or_nothing():
+    pool = BlockPool(num_blocks=5, block_size=4)    # 4 usable
+    assert pool.allocate(5) is None                 # doesn't fit
+    assert pool.num_free == 4                       # pool untouched
+    row = pool.allocate(4)
+    assert row is not None
+    assert pool.allocate(1) is None
+    pool.free(row[:1])
+    assert pool.allocate(1) is not None
+    pool.check()
+
+
+def test_pool_sharing_refcounts_and_registry_invalidation():
+    pool = BlockPool(num_blocks=10, block_size=4)
+    row = pool.allocate(4)
+    key = prompt_key(np.arange(8))                  # 8 tokens = 2 full blocks
+    pool.register_prefix(key, row[:2], None, 8)
+    entry = pool.lookup_prefix(key)
+    assert entry is not None and entry.full_blocks == tuple(row[:2])
+    shared = pool.share(entry.full_blocks)
+    assert all(pool.refcount(b) == 2 for b in shared)
+    pool.free(row)                                  # donor leaves
+    assert all(pool.refcount(b) == 1 for b in shared)
+    assert pool.lookup_prefix(key) is not None      # sharers keep it alive
+    pool.free(shared)                               # last sharer leaves
+    assert all(pool.refcount(b) == 0 for b in shared)
+    assert pool.lookup_prefix(key) is None          # dead blocks -> no entry
+    assert pool.num_free == pool.num_usable
+    pool.check()
+
+
+def test_pool_double_free_asserts():
+    pool = BlockPool(num_blocks=4, block_size=4)
+    row = pool.allocate(1)
+    pool.free(row)
+    with pytest.raises(AssertionError):
+        pool.free(row)
+
+
+# ---------------------------------------------------------------------------
+# page write / prefill round trips against the dense layout
+
+def test_cache_write_paged_matches_dense_lane():
+    cfg = get_config("smollm_360m").reduced()
+    L, B, bs, nb = cfg.n_layers, 3, 4, 4
+    cache_len = nb * bs
+    dense = attn.init_cache(cfg, B, cache_len)
+    pages = attn.init_paged_cache(cfg, 1 + B * nb, bs)
+    rows = jnp.asarray([[1 + b * nb + j for j in range(nb)]
+                        for b in range(B)], jnp.int32)
+    rng = jax.random.PRNGKey(0)
+    pos = jnp.asarray([0, 5, 11], jnp.int32)
+    for step in range(3):
+        ks = jax.random.normal(rng, (L, B, cfg.n_kv_heads, cfg.d_head))
+        vs = ks * 0.5
+        dense = attn.cache_write_stacked(dense, ks, vs, pos + step)
+        pages = attn.cache_write_paged(pages, ks, vs, rows, pos + step)
+    # virtual position j of row b lives at pages[rows[b, j//bs], :, j%bs]
+    for b in range(B):
+        for step in range(3):
+            j = int(pos[b]) + step
+            np.testing.assert_array_equal(
+                np.asarray(pages["k"][:, rows[b, j // bs], :, j % bs]),
+                np.asarray(dense["k"][:, b, :, j]))
+
+
+def test_prefill_to_pages_round_trip():
+    cfg = get_config("smollm_360m").reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    bs, S = 4, 8
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, S), 0,
+                                cfg.vocab_size)
+    prefill_cache, _, _ = model.prefill(cfg, params, {"tokens": tokens}, S)
+    pages = attn.init_paged_cache(cfg, 4, bs)
+    row = np.array([2, 1, 3], np.int32)       # deliberately out of order
+    pages = attn.prefill_to_pages(pages, prefill_cache, row, S // bs)
+    for j in range(S):
+        np.testing.assert_array_equal(
+            np.asarray(pages["k"][:, row[j // bs], :, j % bs]),
+            np.asarray(prefill_cache["k"][:, 0, :, j]))
+
+
+# ---------------------------------------------------------------------------
+# engine-level parity: paged serving == dense serving, stop for stop
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("smollm_360m").reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _probe(mcfg, bias, smooth_window=2):
+    pc = ProbeConfig(d_phi=mcfg.d_model, smooth_window=smooth_window)
+    theta = init_outer(pc, jax.random.PRNGKey(1))
+    theta["b0"] = jnp.asarray(float(bias))
+    return pc, theta
+
+
+def _prompts(mcfg, n, prompt_len=8, seed=2):
+    return jax.random.randint(jax.random.PRNGKey(seed), (n, prompt_len), 0,
+                              mcfg.vocab_size)
+
+
+def _run_pair(model, params, scfg, prompts, paged_kwargs):
+    pc, theta = _probe(model.cfg, 3.0)
+    dense = OrcaScheduler(model, params, pc, theta, scfg, n_slots=2)
+    d_done, _ = dense.run([make_request(p) for p in prompts])
+    paged = OrcaScheduler(model, params, pc, theta, scfg, n_slots=2,
+                          paged=True, **paged_kwargs)
+    p_done, p_fleet = paged.run([make_request(p) for p in prompts])
+    assert [r.stop_step for r in d_done] == [r.stop_step for r in p_done]
+    for a, b in zip(d_done, p_done):
+        np.testing.assert_allclose(np.array(a.scores), np.array(b.scores),
+                                   atol=1e-4)
+    return p_done, p_fleet, paged
+
+
+def test_paged_scheduler_matches_dense_stop_decisions(small_model):
+    model, params = small_model
+    scfg = ServeConfig(tokens_per_step=2, max_new_tokens=16, lam=0.6,
+                       burn_in=1)
+    prompts = _prompts(model.cfg, 5)
+    p_done, _, paged = _run_pair(model, params, scfg, prompts,
+                                 dict(block_size=4))
+    # eviction returned every page: refcounts all zero after the run
+    for r in p_done:
+        assert r.block_ids and all(paged.pool.refcount(b) == 0
+                                   for b in r.block_ids)
+    paged.pool.check()
+
+
+def test_paged_pallas_impl_matches_dense(small_model, monkeypatch):
+    """The Pallas paged-attention kernel (forced interpret off-TPU) serves
+    the same stop decisions as the dense engine."""
+    monkeypatch.setenv("REPRO_PAGED_ATTN", "pallas")
+    model, params = small_model
+    scfg = ServeConfig(tokens_per_step=2, max_new_tokens=8, lam=0.6,
+                       burn_in=1)
+    prompts = _prompts(model.cfg, 3)
+    _run_pair(model, params, scfg, prompts, dict(block_size=4))
+
+
+def test_paged_int8_kv_matches_dense_int8():
+    cfg = dataclasses.replace(get_config("smollm_360m").reduced(),
+                              kv_cache_dtype="int8")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    scfg = ServeConfig(tokens_per_step=2, max_new_tokens=8, lam=0.6,
+                       burn_in=1)
+    prompts = _prompts(cfg, 3)
+    _run_pair(model, params, scfg, prompts, dict(block_size=4))
+
+
+def test_prefix_sharing_stops_and_refcounts(small_model):
+    """N self-consistency samples of one prompt: prefill runs once, full
+    prompt pages are shared, every sample stops exactly like a solo run,
+    and refcounts return to zero after all sharers stop."""
+    model, params = small_model
+    pc, theta = _probe(model.cfg, 3.0)
+    scfg = ServeConfig(tokens_per_step=2, max_new_tokens=12, lam=0.6,
+                       burn_in=1)
+    prompt = _prompts(model.cfg, 1, prompt_len=8)[0]   # 2 full blocks @ bs 4
+    sched = OrcaScheduler(model, params, pc, theta, scfg, n_slots=4,
+                          paged=True, block_size=4)
+    done, fleet = sched.run([make_request(prompt) for _ in range(4)])
+    assert fleet.prefill_skips == 3
+    shared = done[0].block_ids[:2]
+    for r in done[1:]:
+        assert r.n_shared_blocks == 2
+        assert r.block_ids[:2] == shared           # the prompt stored ONCE
+    solo = OrcaScheduler(model, params, pc, theta, scfg, n_slots=1)
+    s_done, _ = solo.run([make_request(prompt)])
+    assert {r.stop_step for r in done} == {s_done[0].stop_step}
+    assert all(sched.pool.refcount(b) == 0 for b in shared)
+    sched.pool.check()
+
+
+def test_pool_exhaustion_backpressures_without_overadmitting(small_model):
+    """Pool smaller than the offered load: requests WAIT (FIFO), nothing
+    crashes, no page is owned by two live requests, every request reaches a
+    terminal state with dense-identical stop decisions."""
+    model, params = small_model
+    pc, theta = _probe(model.cfg, 3.0)
+    scfg = ServeConfig(tokens_per_step=2, max_new_tokens=16, lam=0.6,
+                       burn_in=1)
+    prompts = _prompts(model.cfg, 6)
+    per_req = blocks_needed(8 + 16, 4)                 # 6 pages each
+    sched = OrcaScheduler(model, params, pc, theta, scfg, n_slots=4,
+                          paged=True, block_size=4,
+                          num_blocks=1 + 2 * per_req,  # only 2 fit at once
+                          prefix_sharing=False)
+    done, fleet = sched.run([make_request(p) for p in prompts])
+    assert all(r.done for r in done)
+    assert fleet.peak_blocks_in_use <= 2 * per_req
+    # overlapping-in-time requests may never hold the same page (sharing off)
+    for a, b in itertools.combinations(done, 2):
+        overlap = not (a.completed_step <= b.admitted_step
+                       or b.completed_step <= a.admitted_step)
+        if overlap:
+            assert not set(a.block_ids) & set(b.block_ids), (a, b)
+    # backpressure showed up as queueing beyond the slot count
+    assert fleet.mean_queue_steps > 0
+    dense = OrcaScheduler(model, params, pc, theta, scfg, n_slots=4)
+    d_done, _ = dense.run([make_request(p) for p in prompts])
+    assert [r.stop_step for r in d_done] == [r.stop_step for r in done]
+
+
+def test_paged_vlm_prefix_reserved_and_decode_resumes_after_it():
+    """A vlm's patch prefix is part of the prefill sequence: the paged
+    reservation covers prefix + decode budget, the auto-sized pool fits it,
+    and decode resumes AFTER the whole prefix (pos = patches + prompt) so
+    prompt K/V is readable and never clobbered."""
+    cfg = get_config("llava_next_34b").reduced()     # 16 patch tokens
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    pc, theta = _probe(cfg, 3.0)
+    scfg = ServeConfig(tokens_per_step=2, max_new_tokens=8, lam=0.6,
+                       burn_in=1)
+    # prefix = 4 prompt + 16 patches = 20; need 20 + 8 decode = 28 tokens
+    prompts = _prompts(cfg, 3, prompt_len=4)
+    patches = jnp.zeros((1, cfg.frontend.n_tokens, cfg.frontend.embed_dim))
+    reqs = [make_request(p, extra={"patch_embeds": patches})
+            for p in prompts]
+    sched = OrcaScheduler(model, params, pc, theta, scfg, n_slots=2,
+                          paged=True, block_size=4)
+    done, fleet = sched.run(reqs)
+    assert all(r.done for r in done)
+    assert all(len(r.block_ids) == blocks_needed(20 + 8, 4) for r in done)
+    assert fleet.pool_blocks >= 2 * blocks_needed(20 + 8, 4)
+    # engine-level: admission parks the decode cursor after the prefix
+    eng = sched._engine
+    eng.admit(0, reqs[0].inputs, reqs[0].prompt_len,
+              block_row=sched.pool.allocate(blocks_needed(28, 4)))
+    assert int(eng.pos[0]) == 20
+
+
+def test_oversized_request_raises_instead_of_hanging(small_model):
+    model, params = small_model
+    pc, theta = _probe(model.cfg, 3.0)
+    scfg = ServeConfig(tokens_per_step=2, max_new_tokens=64, lam=0.6,
+                       burn_in=1)
+    sched = OrcaScheduler(model, params, pc, theta, scfg, n_slots=2,
+                          paged=True, block_size=4, num_blocks=4)
+    with pytest.raises(RuntimeError, match="pool holds"):
+        sched.run([make_request(_prompts(model.cfg, 1)[0])])
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweep: no page simultaneously owned by two live requests under
+# arbitrary admit / share / stop orderings
+
+@settings(max_examples=40, deadline=None)
+@given(ops=st.lists(st.tuples(st.integers(0, 2), st.integers(0, 7)),
+                    min_size=1, max_size=60))
+def test_pool_fuzz_no_double_ownership(ops):
+    pool = BlockPool(num_blocks=12, block_size=4)
+    live = {}                     # req id -> (blocks, n_shared)
+    next_id = 0
+    keys = [prompt_key(np.arange(8) + g) for g in range(3)]
+    for op, arg in ops:
+        if op == 0:               # admit (maybe sharing group arg % 3)
+            key = keys[arg % 3]
+            entry = pool.lookup_prefix(key)
+            if entry is not None:
+                private = pool.allocate(2)
+                if private is None:
+                    continue
+                blocks = pool.share(entry.full_blocks) + private
+                live[next_id] = (blocks, len(entry.full_blocks))
+            else:
+                blocks = pool.allocate(4)
+                if blocks is None:
+                    continue
+                pool.register_prefix(key, blocks[:2], None, 8)
+                live[next_id] = (blocks, 0)
+            next_id += 1
+        elif op == 1 and live:    # ORCA stop: free everything
+            rid = sorted(live)[arg % len(live)]
+            blocks, _ = live.pop(rid)
+            pool.free(blocks)
+        # op == 2: no-op step
+        pool.check()
+        # private pages are exclusively owned; only registered full-prefix
+        # pages may appear in two live requests
+        owned = {}
+        for rid, (blocks, n_shared) in live.items():
+            for b in blocks[n_shared:]:
+                assert b not in owned, f"page {b} owned twice"
+                owned[b] = rid
+    for blocks, _ in live.values():
+        pool.free(blocks)
+    assert pool.num_free == pool.num_usable

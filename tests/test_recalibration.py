@@ -1,7 +1,6 @@
 """Online recalibration under drift (beyond-paper extension)."""
 import numpy as np
 
-from repro.core.labels import supervised_labels
 from repro.core.pipeline import make_labels, train_ttt_probe
 from repro.core.probe import ProbeConfig
 from repro.core.recalibration import OnlineRecalibrator, RecalibratorConfig

@@ -1,7 +1,5 @@
 """Unit tests for the roofline analysis: HLO collective parsing, analytic
 FLOP/byte model, report assembly."""
-import numpy as np
-import pytest
 
 from repro.configs import INPUT_SHAPES, get_config
 from repro.roofline import analytic, build_report, parse_collectives

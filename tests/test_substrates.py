@@ -7,11 +7,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import InputShape, get_config
+from repro.configs import get_config
 from repro.core.probe import ProbeConfig, init_outer
 from repro.data import TokenPipeline, TokenPipelineConfig
 from repro.models import build
-from repro.optim import Adam, cosine_schedule, global_norm
+from repro.optim import Adam, cosine_schedule
 from repro.checkpoint import latest_step, restore, save_pytree
 from repro.serving import (ServeConfig, ServingEngine, extract_trajectories,
                            init_probe_state, make_serve_step)

@@ -49,9 +49,16 @@ def _serve(calibrator, test, lam):
     cfg = ServeConfig(tokens_per_step=1,
                       max_new_tokens=int(test.lengths.max()),
                       lam=float(lam), burn_in=10)
+    # served through the PAGED scheduler with a pool deliberately smaller
+    # than slots x blocks-per-request: admission reserves pages and
+    # backpressures (requests WAIT) — validity must survive the paged
+    # capacity mechanism, not just the slot mechanism
+    max_blocks = (int(test.lengths.max()) + 1 + 15) // 16
     sched = OrcaScheduler(replay_model(test.phis), replay_params(test.phis),
-                          pc, theta, cfg, n_slots=4)
+                          pc, theta, cfg, n_slots=4, paged=True,
+                          block_size=16, num_blocks=1 + 3 * max_blocks)
     done, fleet = sched.run(replay_requests(test.lengths))
+    assert fleet.peak_blocks_in_use <= 3 * max_blocks
     return served_stop_times(done, test.lengths), fleet
 
 
