@@ -15,7 +15,13 @@ be IDENTICAL across paths (asserted):
     samples per prompt — at EQUAL KV HBM budget: the paged pool holds exactly
     as many token-slots as the dense engine's lanes, but shares each resident
     prompt's full pages and reclaims pages on every ORCA stop, so it runs
-    more concurrent requests through the same bytes.
+    more concurrent requests through the same bytes;
+  * chunked prefill vs admission-time prefill on a MIXED long-prompt /
+    short-decode workload at EQUAL KV HBM (identical paged pool): the
+    unified token-budget step packs resident decode tokens + one prompt
+    chunk per iteration, so the per-step decode-stall tail (p99) and TTFT
+    collapse — admission prefill stalls every resident decode for a whole
+    batch-1 full-prompt prefill (and compiles per prompt length).
 
 ``--check`` is the CI perf-regression gate: re-run, then compare against the
 committed ``results/serving_throughput.json`` baseline — stop decisions must
@@ -85,6 +91,11 @@ def main(argv=None) -> int:
     ap.add_argument("--paged-slots", type=int, default=6,
                     help="batch rows for the paged engine (pages, not "
                          "slots, are its memory budget)")
+    # mixed long-prompt/short-decode workload for the chunked-prefill row
+    ap.add_argument("--chunk-tokens", type=int, default=0,
+                    help="prefill chunk width for the mixed workload "
+                         "(0 -> 8 quick / 16 full)")
+    ap.add_argument("--mixed-max-new", type=int, default=16)
     ap.add_argument("--check", action="store_true",
                     help="CI gate: compare against the committed baseline "
                          "instead of overwriting it; nonzero exit on "
@@ -216,6 +227,55 @@ def main(argv=None) -> int:
           f"{n_prefix} prefills served from the resident prefix, "
           f"KV budget {hbm_dense / 1e6:.2f} MB each")
 
+    # --- chunked vs admission prefill on mixed long-prompt/short-decode --
+    chunk = args.chunk_tokens or 16
+    mixed_lens = [64, 96, 128, 96, 64, 112, 80, 128,
+                  128, 64, 96, 112]
+    # a wider resident fleet makes the admission stall story concrete:
+    # every batch-1 full-prompt prefill blocks FOUR live decode rows
+    m_slots = max(args.slots, 4)
+    mcfg_serve = ServeConfig(tokens_per_step=args.tokens_per_step,
+                             max_new_tokens=args.mixed_max_new,
+                             lam=float(lam), burn_in=2)
+    m_cache = max(mixed_lens) + args.mixed_max_new
+    m_blocks = m_slots * ((m_cache + bs - 1) // bs) + 1
+    hbm_mixed = kv_bytes_paged(cfg, m_blocks, bs)
+    m_prompts = [jax.random.randint(jax.random.PRNGKey(args.seed + 3 + i),
+                                    (L,), 0, cfg.vocab_size)
+                 for i, L in enumerate(mixed_lens)]
+
+    def mixed_requests():
+        return [make_request(p) for p in m_prompts]
+
+    # IDENTICAL pool both sides: equal KV HBM, only the prefill schedule
+    # differs (admission-time full prompt vs token-budget chunks)
+    adm_sched = OrcaScheduler(model, params, pc, theta, mcfg_serve,
+                              n_slots=m_slots, paged=True, block_size=bs,
+                              num_blocks=m_blocks)
+    adm_sched.run(mixed_requests())
+    done_a, fleet_a = best_of(lambda: adm_sched.run(mixed_requests()))
+    chk_sched = OrcaScheduler(model, params, pc, theta, mcfg_serve,
+                              n_slots=m_slots, paged=True, block_size=bs,
+                              num_blocks=m_blocks, chunk_tokens=chunk)
+    chk_sched.run(mixed_requests())
+    done_k, fleet_k = best_of(lambda: chk_sched.run(mixed_requests()))
+    stop_a = np.array([r.stop_step for r in done_a])
+    stop_k = np.array([r.stop_step for r in done_k])
+    assert (stop_a == stop_k).all(), \
+        f"chunked prefill changed stop decisions: {stop_a} vs {stop_k}"
+    assert chk_sched._engine.compile_counts()["step"] == 1
+    assert chk_sched._engine.compile_counts()["admission_prefill"] == 0
+    stall_ratio = fleet_a.stall_ms_p99 / max(fleet_k.stall_ms_p99, 1e-9)
+    ttft_ratio = fleet_a.ttft_ms_p99 / max(fleet_k.ttft_ms_p99, 1e-9)
+    print(f"[throughput] chunked == admission stop decisions on mixed "
+          f"workload ({stop_k.tolist()}); KV budget {hbm_mixed / 1e6:.2f} "
+          f"MB each, ONE step executable, {fleet_k.prefill_chunks} chunks "
+          f"of {chunk}")
+    print(f"[throughput] p99 decode stall {fleet_a.stall_ms_p99:.2f} ms -> "
+          f"{fleet_k.stall_ms_p99:.2f} ms ({stall_ratio:.2f}x), p99 TTFT "
+          f"{fleet_a.ttft_ms_p99:.1f} -> {fleet_k.ttft_ms_p99:.1f} ms "
+          f"({ttft_ratio:.2f}x)")
+
     util_b = base.active_slot_steps / max(base.total_slot_steps, 1)
     steps_s = fleet.engine_steps / max(fleet.wall_time_s, 1e-9)
     steps_s_ref = fleet_ref.engine_steps / max(fleet_ref.wall_time_s, 1e-9)
@@ -231,10 +291,16 @@ def main(argv=None) -> int:
          "kv_mb": hbm_dense / 1e6, "wall_s": fleet_d.wall_time_s},
         {"mode": "paged-prefix", **fleet_p.row(),
          "kv_mb": hbm_paged / 1e6, "wall_s": fleet_p.wall_time_s},
+        {"mode": "admission-prefill-mixed", **fleet_a.row(),
+         "kv_mb": hbm_mixed / 1e6, "wall_s": fleet_a.wall_time_s},
+        {"mode": "chunked-prefill-mixed", **fleet_k.row(),
+         "kv_mb": hbm_mixed / 1e6, "chunk_tokens": chunk,
+         "wall_s": fleet_k.wall_time_s},
     ]
     print_table("serving throughput (same lambda*, same stop decisions)",
                 rows, ("mode", "engine_steps", "requests_per_s",
-                       "slot_utilization", "prefill_skips", "wall_s"))
+                       "slot_utilization", "prefill_skips",
+                       "stall_ms_p99", "ttft_ms_p99", "wall_s"))
 
     speedup = rows[1]["requests_per_s"] / max(rows[0]["requests_per_s"], 1e-9)
     probe_ratio = steps_s / max(steps_s_ref, 1e-9)
@@ -250,7 +316,7 @@ def main(argv=None) -> int:
           f"{fleet_d.requests_per_s:.2f})")
 
     report = {
-        "schema": 2,
+        "schema": 3,
         "quick": QUICK,
         "rows": rows,
         # the gate requires these BYTE-IDENTICAL against the baseline: the
@@ -259,6 +325,8 @@ def main(argv=None) -> int:
             "continuous": stop_c.tolist(),
             "dense_prefix": stop_d.tolist(),
             "paged_prefix": stop_p.tolist(),
+            "mixed_admission": stop_a.tolist(),
+            "mixed_chunked": stop_k.tolist(),
         },
         # every metric must stay >= min_frac * baseline value; tolerances
         # live IN the baseline so re-baselining is an explicit commit
@@ -272,6 +340,12 @@ def main(argv=None) -> int:
                     {"value": paged_ratio, "min_frac": 0.6},
                 "continuous_steps_per_s":
                     {"value": steps_s, "min_frac": 0.1},
+                # stall-free serving: admission-prefill p99 step stall over
+                # chunked p99 (the tentpole win — >= 2x committed)
+                "admission_vs_chunked_stall_p99":
+                    {"value": stall_ratio, "min_frac": 0.4},
+                "chunked_mixed_requests_per_s":
+                    {"value": fleet_k.requests_per_s, "min_frac": 0.3},
             },
         },
     }

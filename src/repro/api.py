@@ -82,6 +82,8 @@ def engine(model, params, calibrator: Calibrator, *,
            serve: Optional[ServeConfig] = None,
            paged: bool = False, block_size: int = 16,
            num_blocks: Optional[int] = None,
+           chunk_tokens: Optional[int] = None,
+           token_budget: Optional[int] = None,
            **serve_kwargs) -> OrcaScheduler:
     """Build a continuous-batching ``OrcaScheduler`` serving the calibrated
     procedure.
@@ -98,6 +100,14 @@ def engine(model, params, calibrator: Calibrator, *,
     prompts are prefix-shared (refcount bump instead of recompute), ORCA
     stops return pages to the pool immediately and the scheduler keeps
     requests WAITING when the pool is exhausted.
+
+    ``chunk_tokens=N`` enables chunked prefill (stall-free serving): prompt
+    prefill becomes schedulable work — each engine iteration packs every
+    resident decode token plus up to N prompt tokens of the head PREFILL
+    request (``token_budget`` tokens per step total), instead of a batch-1
+    full-prompt prefill stalling the fleet at admission.  Stop decisions
+    are unchanged; TTFT/stall tails and per-prompt-length recompiles go
+    away.
     """
     pc, theta = calibrator.serving_params()
     if serve is not None:
@@ -113,7 +123,8 @@ def engine(model, params, calibrator: Calibrator, *,
     return OrcaScheduler(model, params, pc, theta, serve,
                          n_slots=n_slots, cache_len=cache_len,
                          paged=paged, block_size=block_size,
-                         num_blocks=num_blocks)
+                         num_blocks=num_blocks, chunk_tokens=chunk_tokens,
+                         token_budget=token_budget)
 
 
 def serve_requests(scheduler: OrcaScheduler, prompts: np.ndarray):

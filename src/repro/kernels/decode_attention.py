@@ -16,6 +16,11 @@ reads *through its block table* — the table is a scalar-prefetch operand
 ``table[b, block]`` to pick which physical page the next DMA fetches.  The
 kernel body is the same online softmax; int8-KV pages carry per-(position,
 head) scales and are dequantized per VMEM block (no HBM-sized temp).
+
+``paged_flash_prefill_chunk`` extends the paged kernel to a q-block > 1:
+the C queries of a prefill chunk share each page DMA (Sarathi-style chunked
+prefill — the serving engine's unified token-budget step), emitting
+unnormalized partials the caller merges with the causal within-chunk block.
 """
 from __future__ import annotations
 
@@ -103,7 +108,11 @@ def _paged_kernel(tables_ref, q_ref, k_ref, v_ref, valid_ref, *rest,
     kernel body itself is table-oblivious online softmax.  Emits the
     UNNORMALIZED (acc, l, m) triple so the caller can merge the current
     token's column (``extra_kv``) before normalizing, exactly like the
-    dense ``_decode_partial`` path."""
+    dense ``_decode_partial`` path.
+
+    The query block is (R, d) with R = G query rows for decode or R = G*Q
+    for the chunked-prefill variant (q-block > 1): the body is row-count
+    oblivious, so one kernel serves both."""
     if quantized:
         ks_ref, vs_ref, o_ref, l_ref, m_ref, m_s, l_s, acc_s = rest
     else:
@@ -143,6 +152,71 @@ def _paged_kernel(tables_ref, q_ref, k_ref, v_ref, valid_ref, *rest,
         m_ref[0, 0, :, :] = m_s[...]
 
 
+def _paged_attend(qg, k_pages, v_pages, block_tables, valid,
+                  k_scale_pages, v_scale_pages, *, interpret: bool):
+    """Shared launcher: online-softmax attention of an (R, d) query block
+    per (batch row, kv head) against that row's pages, gathered through the
+    scalar-prefetched block table.  R = G (decode) or G*Q (chunked
+    prefill).  qg (B, KV, R, d) -> unnormalized (o (B,KV,R,d), l (B,KV,R),
+    m (B,KV,R))."""
+    b, n_kv, r, d = qg.shape
+    _, _, bs, _ = k_pages.shape
+    nb = block_tables.shape[1]
+    assert valid.shape == (b, nb * bs), (valid.shape, b, nb, bs)
+    quantized = k_scale_pages is not None
+    assert quantized == (v_scale_pages is not None)
+    scale = 1.0 / (d ** 0.5)
+
+    # index maps receive the scalar-prefetch block table last: the page a
+    # program DMAs is table[b, bi] — this indirection IS paged attention
+    page_spec = pl.BlockSpec(
+        (1, 1, bs, d), lambda b_, kv, bi, tbl: (tbl[b_, bi], kv, 0, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, r, d), lambda b_, kv, bi, tbl: (b_, kv, 0, 0)),
+        page_spec,
+        page_spec,
+        pl.BlockSpec((1, bs), lambda b_, kv, bi, tbl: (b_, bi)),
+    ]
+    operands = [qg, k_pages, v_pages, valid]
+    if quantized:
+        scale_spec = pl.BlockSpec(
+            (1, 1, bs, 1), lambda b_, kv, bi, tbl: (tbl[b_, bi], kv, 0, 0))
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scale_pages, v_scale_pages]
+
+    kernel = functools.partial(_paged_kernel, n_b=nb, quantized=quantized,
+                               scale=scale)
+    stat_spec = pl.BlockSpec((1, 1, r, 1),
+                             lambda b_, kv, bi, tbl: (b_, kv, 0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, n_kv, nb),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, 1, r, d),
+                         lambda b_, kv, bi, tbl: (b_, kv, 0, 0)),
+            stat_spec,
+            stat_spec,
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((r, 1), jnp.float32),
+            pltpu.VMEM((r, 1), jnp.float32),
+            pltpu.VMEM((r, d), jnp.float32),
+        ],
+    )
+    o_un, l, m = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n_kv, r, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, n_kv, r, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, n_kv, r, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), *operands)
+    return o_un, l[..., 0], m[..., 0]
+
+
 @functools.partial(jax.jit,
                    static_argnames=("interpret", "return_partials"))
 def paged_flash_decode(q, k_pages, v_pages, block_tables, valid,
@@ -165,64 +239,47 @@ def paged_flash_decode(q, k_pages, v_pages, block_tables, valid,
     can fold in the current token's (k, v) before normalizing.
     """
     b, h, d = q.shape
-    p_total, n_kv, bs, _ = k_pages.shape
-    nb = block_tables.shape[1]
+    n_kv = k_pages.shape[1]
     assert h % n_kv == 0
-    assert valid.shape == (b, nb * bs), (valid.shape, b, nb, bs)
-    quantized = k_scale_pages is not None
-    assert quantized == (v_scale_pages is not None)
     g = h // n_kv
-    scale = 1.0 / (d ** 0.5)
     qg = q.reshape(b, n_kv, g, d)
-
-    # index maps receive the scalar-prefetch block table last: the page a
-    # program DMAs is table[b, bi] — this indirection IS paged attention
-    page_spec = pl.BlockSpec(
-        (1, 1, bs, d), lambda b_, kv, bi, tbl: (tbl[b_, bi], kv, 0, 0))
-    in_specs = [
-        pl.BlockSpec((1, 1, g, d), lambda b_, kv, bi, tbl: (b_, kv, 0, 0)),
-        page_spec,
-        page_spec,
-        pl.BlockSpec((1, bs), lambda b_, kv, bi, tbl: (b_, bi)),
-    ]
-    operands = [qg, k_pages, v_pages, valid]
-    if quantized:
-        scale_spec = pl.BlockSpec(
-            (1, 1, bs, 1), lambda b_, kv, bi, tbl: (tbl[b_, bi], kv, 0, 0))
-        in_specs += [scale_spec, scale_spec]
-        operands += [k_scale_pages, v_scale_pages]
-
-    kernel = functools.partial(_paged_kernel, n_b=nb, quantized=quantized,
-                               scale=scale)
-    stat_spec = pl.BlockSpec((1, 1, g, 1),
-                             lambda b_, kv, bi, tbl: (b_, kv, 0, 0))
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(b, n_kv, nb),
-        in_specs=in_specs,
-        out_specs=[
-            pl.BlockSpec((1, 1, g, d),
-                         lambda b_, kv, bi, tbl: (b_, kv, 0, 0)),
-            stat_spec,
-            stat_spec,
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((g, 1), jnp.float32),
-            pltpu.VMEM((g, 1), jnp.float32),
-            pltpu.VMEM((g, d), jnp.float32),
-        ],
-    )
-    o_un, l, m = pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct((b, n_kv, g, d), jnp.float32),
-            jax.ShapeDtypeStruct((b, n_kv, g, 1), jnp.float32),
-            jax.ShapeDtypeStruct((b, n_kv, g, 1), jnp.float32),
-        ],
-        interpret=interpret,
-    )(block_tables.astype(jnp.int32), *operands)
+    o_un, l, m = _paged_attend(qg, k_pages, v_pages, block_tables, valid,
+                               k_scale_pages, v_scale_pages,
+                               interpret=interpret)
     if return_partials:
-        return o_un, l[..., 0], m[..., 0]
-    out = o_un / jnp.maximum(l, 1e-30)
+        return o_un, l, m
+    out = o_un / jnp.maximum(l, 1e-30)[..., None]
     return out.reshape(b, h, d).astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_flash_prefill_chunk(q, k_pages, v_pages, block_tables, valid,
+                              k_scale_pages=None, v_scale_pages=None, *,
+                              interpret: bool = True):
+    """Chunked-prefill attention over the pages: ``paged_flash_decode``
+    extended to a q-block > 1 — all C chunk queries of a request ride ONE
+    program per (row, kv head, page), so each K/V page is DMA'd once for
+    the whole chunk instead of once per token.
+
+    q (B, C, H, d) — the query chunk; every chunk query attends the same
+    readable cache positions ``valid`` (B, nb*bs) = [0, pos_start), so the
+    per-key mask is shared across the q-block (causal-within-chunk is the
+    caller's merge step, the chunk's K/V not being in pages yet).
+
+    -> UNNORMALIZED (o (B,KV,G,C,d), l (B,KV,G,C), m (B,KV,G,C)): the
+    caller folds in the within-chunk causal block (``_merge_kv_block``)
+    before normalizing — the same partials contract as the decode kernel's
+    ``extra_kv`` merge.
+    """
+    b, c, h, d = q.shape
+    n_kv = k_pages.shape[1]
+    assert h % n_kv == 0
+    g = h // n_kv
+    # (B, C, H, d) -> (B, KV, G*C, d): the kernel sees one (G*C, d) q-block
+    qg = q.reshape(b, c, n_kv, g, d).transpose(0, 2, 3, 1, 4) \
+        .reshape(b, n_kv, g * c, d)
+    o_un, l, m = _paged_attend(qg, k_pages, v_pages, block_tables, valid,
+                               k_scale_pages, v_scale_pages,
+                               interpret=interpret)
+    return (o_un.reshape(b, n_kv, g, c, d), l.reshape(b, n_kv, g, c),
+            m.reshape(b, n_kv, g, c))

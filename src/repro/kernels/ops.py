@@ -17,7 +17,8 @@ from repro.kernels.ttt_probe import (ProbeStepOut, make_unroll_kernel,
                                      serving_probe_step, ttt_probe_batched,
                                      ttt_probe_scan)
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.decode_attention import flash_decode, paged_flash_decode
+from repro.kernels.decode_attention import (flash_decode, paged_flash_decode,
+                                             paged_flash_prefill_chunk)
 from repro.kernels.rwkv6_scan import wkv_scan
 
 
@@ -34,5 +35,5 @@ def default_interpret() -> bool:
 
 __all__ = ["ProbeStepOut", "ttt_probe_scan", "ttt_probe_batched",
            "make_unroll_kernel", "serving_probe_step", "flash_attention",
-           "flash_decode", "paged_flash_decode", "wkv_scan", "on_tpu",
-           "default_interpret"]
+           "flash_decode", "paged_flash_decode", "paged_flash_prefill_chunk",
+           "wkv_scan", "on_tpu", "default_interpret"]

@@ -89,29 +89,54 @@ def flash_decode_ref(q, k, v, valid):
     return out.reshape(b, h, d).astype(q.dtype)
 
 
+def _gather_virtual_cache(k_pages, v_pages, block_tables,
+                          k_scale_pages, v_scale_pages):
+    """Pages -> per-row contiguous virtual caches (B, KV, nb*bs, d) f32,
+    via the SAME gather the engine's jnp paged path uses
+    (``attention.gather_page_rows``) — one page layout, one gather."""
+    from repro.models.attention import gather_page_rows
+    cache_l = {"k": k_pages, "v": v_pages}
+    if k_scale_pages is not None:
+        cache_l["k_scale"] = k_scale_pages
+        cache_l["v_scale"] = v_scale_pages
+    return gather_page_rows(cache_l, block_tables)
+
+
 def paged_decode_ref(q, k_pages, v_pages, block_tables, valid,
                      k_scale_pages=None, v_scale_pages=None):
     """Oracle for ``paged_flash_decode``: gather every row's pages into a
     contiguous virtual cache via its block table, then dense decode.
     q (B,H,d); pages (P,KV,bs,d); block_tables (B,nb); valid (B, nb*bs)."""
     b, h, d = q.shape
-    _, n_kv, bs, _ = k_pages.shape
-    nb = block_tables.shape[1]
-    bt = jnp.asarray(block_tables, jnp.int32)
-
-    def gather(pages, scales):
-        g = pages[bt]                                 # (B, nb, KV, bs, d')
-        g = g.astype(jnp.float32)
-        if scales is not None:
-            g = g * scales[bt].astype(jnp.float32)
-        # (B, nb, KV, bs, d') -> (B, KV, nb*bs, d')
-        return g.transpose(0, 2, 1, 3, 4).reshape(b, n_kv, nb * bs, -1)
-
-    k = gather(k_pages, k_scale_pages)
-    v = gather(v_pages, v_scale_pages)
+    n_kv = k_pages.shape[1]
+    k, v = _gather_virtual_cache(k_pages, v_pages, block_tables,
+                                 k_scale_pages, v_scale_pages)
     qg = q.reshape(b, n_kv, h // n_kv, d).astype(jnp.float32)
     out = _decode_core(qg, k, v, valid)
     return out.reshape(b, h, d).astype(q.dtype)
+
+
+def paged_prefill_chunk_ref(q, k_pages, v_pages, block_tables, valid,
+                            k_scale_pages=None, v_scale_pages=None):
+    """Oracle for ``paged_flash_prefill_chunk``: gather every row's pages
+    into a contiguous virtual cache, then compute the UNNORMALIZED online-
+    softmax partials of the whole query chunk against it.
+
+    q (B, C, H, d); pages (P, KV, bs, d); block_tables (B, nb);
+    valid (B, nb*bs) -> (o (B,KV,G,C,d), l (B,KV,G,C), m (B,KV,G,C))."""
+    from repro.models.attention import _decode_partial
+    b, c, h, d = q.shape
+    n_kv = k_pages.shape[1]
+    k, v = _gather_virtual_cache(k_pages, v_pages, block_tables,
+                                 k_scale_pages, v_scale_pages)
+    g = h // n_kv
+    # (B, C, H, d) -> (B, KV, G*C, d): _decode_partial is row-count
+    # oblivious, exactly like the kernel body
+    qg = q.reshape(b, c, n_kv, g, d).transpose(0, 2, 3, 1, 4) \
+        .reshape(b, n_kv, g * c, d).astype(jnp.float32)
+    o, l, m = _decode_partial(qg, k, v, valid)
+    return (o.reshape(b, n_kv, g, c, d), l.reshape(b, n_kv, g, c),
+            m.reshape(b, n_kv, g, c))
 
 
 def wkv_scan_ref(r, k, v, w, u, s0):

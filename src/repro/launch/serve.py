@@ -86,6 +86,12 @@ def main(argv=None) -> int:
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--num-blocks", type=int, default=0,
                     help="pool size (0 -> dense-equivalent HBM)")
+    ap.add_argument("--chunk-tokens", type=int, default=0,
+                    help="chunked prefill: schedule prompt prefill in "
+                         "chunks of this many tokens through the unified "
+                         "token-budget step (0 = admission-time prefill)")
+    ap.add_argument("--token-budget", type=int, default=0,
+                    help="max tokens per unified step (0 -> slots + chunk)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -114,7 +120,9 @@ def main(argv=None) -> int:
                         max_new_tokens=args.max_new_tokens,
                         burn_in=args.burn_in, paged=args.paged,
                         block_size=args.block_size,
-                        num_blocks=args.num_blocks or None)
+                        num_blocks=args.num_blocks or None,
+                        chunk_tokens=args.chunk_tokens or None,
+                        token_budget=args.token_budget or None)
     batch = model_inputs(cfg, jax.random.PRNGKey(args.seed + 1),
                          args.requests, args.prompt_len)
     extra_keys = [k for k in batch if k != "tokens"]
@@ -137,6 +145,11 @@ def main(argv=None) -> int:
               f"(x{args.block_size} tokens), peak in use "
               f"{fleet.peak_blocks_in_use}, prefill skips "
               f"{fleet.prefill_skips}")
+    print(f"[serve] latency: ttft p50/p99 {fleet.ttft_ms_p50:.1f}/"
+          f"{fleet.ttft_ms_p99:.1f} ms, step stall p50/p99 "
+          f"{fleet.stall_ms_p50:.1f}/{fleet.stall_ms_p99:.1f} ms"
+          + (f", {fleet.prefill_chunks} prefill chunks"
+             if args.chunk_tokens else " (admission-time prefill)"))
 
     if args.static_baseline:
         pc, theta = calib.serving_params()

@@ -88,9 +88,11 @@ def cache_write_stacked(cache: Dict[str, jnp.ndarray], ks: jnp.ndarray,
         def upd(buf, val):
             # advanced indices (batch row, per-row slot) sit at axes 1 and 3;
             # jax moves them to the front, so the scattered value is
-            # (B, L, KV, dh) — a per-row scatter, not a full-buffer rewrite
+            # (B, L, KV, dh) — a per-row scatter, not a full-buffer rewrite.
+            # mode="drop": rows routed out of range (parked / mid-prefill
+            # slots under a write mask) simply don't write
             return buf.at[:, iB, :, slot, :].set(
-                val.transpose(1, 0, 2, 3).astype(buf.dtype))
+                val.transpose(1, 0, 2, 3).astype(buf.dtype), mode="drop")
     else:
         def upd(buf, val):
             return jax.lax.dynamic_update_slice_in_dim(
@@ -203,6 +205,210 @@ def cache_write_paged(cache: Dict[str, jnp.ndarray], ks: jnp.ndarray,
         out["k"] = upd(cache["k"], ks.astype(cache["k"].dtype))
         out["v"] = upd(cache["v"], vs.astype(cache["v"].dtype))
     return out
+
+
+def chunk_write_positions(pos_start: jnp.ndarray, chunk_len: jnp.ndarray,
+                          c: int, s_cache: int) -> jnp.ndarray:
+    """Target positions for a C-token prefill chunk: ``pos_start + i`` for
+    real tokens, ``s_cache`` (out of range — the scatter drops the write)
+    for padding past ``chunk_len``."""
+    i = jnp.arange(c)
+    return jnp.where(i < chunk_len, jnp.asarray(pos_start, jnp.int32) + i,
+                     s_cache)
+
+
+def cache_write_chunk(cache: Dict[str, jnp.ndarray], ks: jnp.ndarray,
+                      vs: jnp.ndarray, rows: jnp.ndarray,
+                      pos_start: jnp.ndarray, chunk_len: jnp.ndarray
+                      ) -> Dict[str, jnp.ndarray]:
+    """Write one prefill chunk's K/V for ALL layers into the ``rows`` lanes
+    of a dense stacked cache.
+
+    cache (L,B,KV,S,dh); ks/vs (L,Bc,KV,C,dh); rows (Bc,) batch lanes;
+    positions [pos_start, pos_start+chunk_len) receive the chunk, padded
+    chunk positions are routed out of range and dropped."""
+    s_cache = cache["k"].shape[3]
+    c = ks.shape[3]
+    wpos = chunk_write_positions(pos_start, chunk_len, c, s_cache)
+    r = jnp.asarray(rows, jnp.int32)[:, None]        # (Bc, 1)
+    w = wpos[None, :]                                # (1, C)
+
+    def upd(buf, val):
+        # advanced indices at axes 1 and 3 broadcast to (Bc, C) and move to
+        # the front: the scattered value is (Bc, C, L, KV, dh)
+        return buf.at[:, r, :, w, :].set(
+            val.transpose(1, 3, 0, 2, 4).astype(buf.dtype), mode="drop")
+
+    out = dict(cache)
+    if "k_scale" in cache:
+        kq, ksc = quantize_kv(ks)
+        vq, vsc = quantize_kv(vs)
+        out["k"] = upd(cache["k"], kq)
+        out["v"] = upd(cache["v"], vq)
+        out["k_scale"] = upd(cache["k_scale"], ksc)
+        out["v_scale"] = upd(cache["v_scale"], vsc)
+    else:
+        out["k"] = upd(cache["k"], ks.astype(cache["k"].dtype))
+        out["v"] = upd(cache["v"], vs.astype(cache["v"].dtype))
+    return out
+
+
+def cache_write_chunk_paged(cache: Dict[str, jnp.ndarray], ks: jnp.ndarray,
+                            vs: jnp.ndarray, block_rows: jnp.ndarray,
+                            pos_start: jnp.ndarray, chunk_len: jnp.ndarray
+                            ) -> Dict[str, jnp.ndarray]:
+    """Paged variant of :func:`cache_write_chunk`: virtual position
+    ``pos_start + i`` of request ``b`` lands in page
+    ``block_rows[b, (pos_start+i) // bs]`` at offset ``(pos_start+i) % bs``;
+    padded chunk positions are routed to the NULL page (page 0 — scratch by
+    construction, never allocated to a request)."""
+    bs = cache["k"].shape[3]
+    c = ks.shape[3]
+    block_rows = jnp.asarray(block_rows, jnp.int32)  # (Bc, nb)
+    bc, nb = block_rows.shape
+    i = jnp.arange(c)
+    vpos = jnp.asarray(pos_start, jnp.int32) + i
+    blk = jnp.clip(vpos // bs, 0, nb - 1)
+    off = vpos % bs
+    real = (i < chunk_len)[None, :]                  # (1, C)
+    page = jnp.where(real, block_rows[jnp.arange(bc)[:, None], blk[None, :]],
+                     0)                              # (Bc, C); 0 = NULL page
+    off_b = jnp.broadcast_to(off[None, :], (bc, c))
+
+    def upd(buf, val):
+        # advanced indices (page, offset) at axes 1 and 3 -> value (Bc, C,
+        # L, KV, dh); duplicate NULL targets may race, NULL is scratch
+        return buf.at[:, page, :, off_b, :].set(
+            val.transpose(1, 3, 0, 2, 4).astype(buf.dtype), mode="drop")
+
+    out = dict(cache)
+    if "k_scale" in cache:
+        kq, ksc = quantize_kv(ks)
+        vq, vsc = quantize_kv(vs)
+        out["k"] = upd(cache["k"], kq)
+        out["v"] = upd(cache["v"], vq)
+        out["k_scale"] = upd(cache["k_scale"], ksc)
+        out["v_scale"] = upd(cache["v_scale"], vsc)
+    else:
+        out["k"] = upd(cache["k"], ks.astype(cache["k"].dtype))
+        out["v"] = upd(cache["v"], vs.astype(cache["v"].dtype))
+    return out
+
+
+def gather_cache_rows(cache_l: Dict[str, jnp.ndarray], rows: jnp.ndarray
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-layer dense cache lanes for a prefill chunk: (Bc, KV, S, d) f32
+    (int8 lanes dequantized)."""
+    rows = jnp.asarray(rows, jnp.int32)
+    k = cache_l["k"][rows].astype(jnp.float32)
+    v = cache_l["v"][rows].astype(jnp.float32)
+    if "k_scale" in cache_l:
+        k = k * cache_l["k_scale"][rows].astype(jnp.float32)
+        v = v * cache_l["v_scale"][rows].astype(jnp.float32)
+    return k, v
+
+
+def gather_page_rows(cache_l: Dict[str, jnp.ndarray],
+                     block_tables: jnp.ndarray
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-layer paged K/V gathered through block tables into contiguous
+    virtual caches: (Bc, KV, nb*bs, d) f32."""
+    bt = jnp.asarray(block_tables, jnp.int32)
+    bc, nb = bt.shape
+    n_kv, bs = cache_l["k"].shape[1], cache_l["k"].shape[2]
+
+    def gather(key, scale_key):
+        g = cache_l[key][bt].astype(jnp.float32)     # (Bc, nb, KV, bs, d')
+        if scale_key in cache_l:
+            g = g * cache_l[scale_key][bt].astype(jnp.float32)
+        return g.transpose(0, 2, 1, 3, 4).reshape(bc, n_kv, nb * bs, -1)
+
+    return gather("k", "k_scale"), gather("v", "v_scale")
+
+
+def _merge_kv_block(qc, o, l, m, k_blk, v_blk, mask):
+    """Fold a block of keys into unnormalized online-softmax partials.
+
+    qc (B,KV,G,C,d) f32; o (B,KV,G,C,d); l/m (B,KV,G,C); k_blk/v_blk
+    (B,KV,T,d); mask (C,T) — the causal-within-chunk mask.  The chunked-
+    prefill sibling of ``_merge_extra_kv`` (T keys per query row instead of
+    one)."""
+    d = qc.shape[-1]
+    s = jnp.einsum("bkgcd,bktd->bkgct", qc, k_blk) \
+        / jnp.sqrt(d).astype(jnp.float32)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m_x = jnp.max(s, axis=-1)
+    m_f = jnp.maximum(m, m_x)
+    # NEG_INF is finite (-1e30): exp underflows to exactly 0, flushing the
+    # garbage partials a fully-masked cache pass accumulates
+    w_c = jnp.exp(m - m_f)
+    p = jnp.exp(s - m_f[..., None])
+    p = jnp.where(mask[None, None, None], p, 0.0)
+    o = o * w_c[..., None] + jnp.einsum("bkgct,bktd->bkgcd", p, v_blk)
+    l = l * w_c + jnp.sum(p, axis=-1)
+    return o, l
+
+
+def attn_prefill_chunk(q, k_new, v_new, cache_l: Dict[str, jnp.ndarray],
+                       valid: jnp.ndarray, dtype, *, rows=None,
+                       block_tables=None, impl: Optional[str] = None,
+                       interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Chunked-prefill attention: a C-token query chunk of each request
+    attends to its already-written cache positions plus causally within the
+    chunk.
+
+    q (Bc, C, H, d); k_new/v_new (Bc, C, KV, d) — the chunk's own K/V (not
+    yet in the cache); cache_l — per-layer dense cache (Bfull, KV, S, dh)
+    read through ``rows`` (Bc,), or paged pools (P, KV, bs, dh) read
+    through ``block_tables`` (Bc, nb); valid (Bc, S_virtual) marks readable
+    cache positions ([0, pos_start) — stale/unwritten entries masked).
+    Padded chunk positions (beyond the real chunk length) produce garbage
+    rows whose K/V writes are dropped downstream; causality keeps real
+    queries from attending padded keys.  Returns (Bc, C, H, d).
+
+    The paged path has two impls mirroring ``attn_decode_paged``:
+    ``jnp`` gathers pages and runs one full softmax over [cache | chunk]
+    (numerically closest to full prefill), ``pallas`` runs the q-block > 1
+    ``paged_flash_prefill_chunk`` kernel over the pages and folds the
+    within-chunk block into its unnormalized partials.
+    """
+    b, c, h, d = q.shape
+    n_kv = k_new.shape[2]
+    g = h // n_kv
+    qc = q.reshape(b, c, n_kv, g, d).transpose(0, 2, 3, 1, 4) \
+        .astype(jnp.float32)                         # (B, KV, G, C, d)
+    kb = k_new.transpose(0, 2, 1, 3).astype(jnp.float32)   # (B, KV, C, d)
+    vb = v_new.transpose(0, 2, 1, 3).astype(jnp.float32)
+    causal = jnp.arange(c)[:, None] >= jnp.arange(c)[None, :]
+    paged = block_tables is not None
+    impl = impl or (default_paged_impl() if paged else "jnp")
+    if paged and impl == "pallas":
+        from repro.kernels import ops as K           # deferred: no cycle
+        interp = K.default_interpret() if interpret is None else interpret
+        o, l, m = K.paged_flash_prefill_chunk(
+            q.astype(jnp.float32), cache_l["k"], cache_l["v"], block_tables,
+            valid, cache_l.get("k_scale"), cache_l.get("v_scale"),
+            interpret=interp)
+        o, l = _merge_kv_block(qc, o, l, m, kb, vb, causal)
+        out = o / jnp.maximum(l, 1e-30)[..., None]
+    else:
+        if paged:
+            k_c, v_c = gather_page_rows(cache_l, block_tables)
+        else:
+            k_c, v_c = gather_cache_rows(cache_l, rows)
+        scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+        sc_c = jnp.einsum("bkgcd,bksd->bkgcs", qc, k_c) * scale
+        sc_c = jnp.where(valid[:, None, None, None, :], sc_c, NEG_INF)
+        sc_n = jnp.einsum("bkgcd,bktd->bkgct", qc, kb) * scale
+        sc_n = jnp.where(causal[None, None, None], sc_n, NEG_INF)
+        # ONE softmax over [cache | chunk] — the same full-row softmax
+        # shape as attn_prefill_einsum, so chunked == full prefill up to
+        # reduction order (exactly, for non-quantized caches)
+        p = jax.nn.softmax(jnp.concatenate([sc_c, sc_n], axis=-1), axis=-1)
+        s_len = k_c.shape[2]
+        out = jnp.einsum("bkgcs,bksd->bkgcd", p[..., :s_len], v_c) \
+            + jnp.einsum("bkgct,bktd->bkgcd", p[..., s_len:], vb)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, c, h, d).astype(dtype)
 
 
 def prefill_to_pages(pages: Dict[str, jnp.ndarray],

@@ -41,10 +41,19 @@ class Model:
     # (batch, num_blocks, block_size, max_blocks, abstract) -> state pytree
     # whose cache leaves are page pools + a per-row "block_tables" array
     init_paged_state: Optional[Callable] = None
+    # chunked prefill (None for families without one): (cfg, params, tokens,
+    # state, rows, pos_start, chunk_len, block_rows=None) -> state — the
+    # serving engine's unified token-budget step schedules prompt prefill
+    # through it in fixed-shape chunks instead of at admission time
+    prefill_chunk: Optional[Callable] = None
 
     @property
     def supports_paged(self) -> bool:
         return self.init_paged_state is not None
+
+    @property
+    def supports_chunked(self) -> bool:
+        return self.prefill_chunk is not None
 
     # ------------------------------------------------------------------
     def init(self, rng) -> Any:
@@ -163,8 +172,10 @@ def _build_dense(cfg: ModelConfig) -> Model:
             bt = jnp.zeros((batch, max_blocks), jnp.int32)   # -> NULL page
         return dict(pages, block_tables=bt)
 
-    def decode_step(cfg, params, token, state, pos, window=None):
-        return transformer.decode_step(cfg, params, token, state, pos, window=window)
+    def decode_step(cfg, params, token, state, pos, window=None,
+                    write_mask=None):
+        return transformer.decode_step(cfg, params, token, state, pos,
+                                       window=window, write_mask=write_mask)
 
     return Model(cfg=cfg, decls=transformer.decls(cfg),
                  forward=transformer.forward,
@@ -172,7 +183,8 @@ def _build_dense(cfg: ModelConfig) -> Model:
                  decode_step=decode_step,
                  init_decode_state=init_decode_state,
                  decode_geometry=geom,
-                 init_paged_state=init_paged_state)
+                 init_paged_state=init_paged_state,
+                 prefill_chunk=transformer.prefill_chunk)
 
 
 def _build_rwkv(cfg: ModelConfig) -> Model:
@@ -185,7 +197,8 @@ def _build_rwkv(cfg: ModelConfig) -> Model:
     def geom(shape: InputShape):
         return 1, None            # O(1) recurrent state
 
-    def decode_step(cfg, params, token, state, pos, window=None):
+    def decode_step(cfg, params, token, state, pos, window=None,
+                    write_mask=None):
         return rwkv6.decode_step(cfg, params, token, state, pos)
 
     return Model(cfg=cfg, decls=rwkv6.decls(cfg), forward=rwkv6.forward,
@@ -206,7 +219,8 @@ def _build_hymba(cfg: ModelConfig) -> Model:
         w = cfg.sliding_window or shape.seq_len
         return min(w, shape.seq_len), w
 
-    def decode_step(cfg, params, token, state, pos, window=None):
+    def decode_step(cfg, params, token, state, pos, window=None,
+                    write_mask=None):
         return hymba.decode_step(cfg, params, token, state, pos)
 
     return Model(cfg=cfg, decls=hymba.decls(cfg), forward=hymba.forward,
@@ -229,7 +243,8 @@ def _build_whisper(cfg: ModelConfig) -> Model:
     def geom(shape: InputShape):
         return shape.seq_len, None
 
-    def decode_step(cfg, params, token, state, pos, window=None):
+    def decode_step(cfg, params, token, state, pos, window=None,
+                    write_mask=None):
         return whisper.decode_step(cfg, params, token, state, pos)
 
     return Model(cfg=cfg, decls=whisper.decls(cfg), forward=whisper.forward,

@@ -158,6 +158,81 @@ def layer_decode(cfg, p, x, cache_l, pos, valid, block_tables=None):
     return x + m[:, 0], (k, v)
 
 
+def layer_prefill_chunk(cfg, p, x, cache_l, rows, block_rows, positions,
+                        valid):
+    """One layer of chunked prefill: x (Bc, C, d) at absolute ``positions``
+    (Bc, C); the chunk attends to readable cache entries (``valid``) plus
+    causally within itself.  Returns (x', (k, v)) with k/v (Bc, KV, C, dh)
+    for the page-by-page cache write outside the scan."""
+    b, c, d = x.shape
+    h = apply_norm(cfg, p["ln1"], x)
+    q, k, v = _qkv(cfg, p["attn"], h)
+    q = q.reshape(b, c, cfg.n_heads, cfg.d_head)
+    k = k.reshape(b, c, cfg.n_kv_heads, cfg.d_head)
+    v = v.reshape(b, c, cfg.n_kv_heads, cfg.d_head)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.rotary_pct)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.rotary_pct)
+    o = attn.attn_prefill_chunk(q, k, v, cache_l, valid, x.dtype,
+                                rows=rows, block_tables=block_rows)
+    o = o.reshape(b, c, cfg.attn_out_dim) @ p["attn"]["wo"].astype(x.dtype)
+    x = x + o
+    h = apply_norm(cfg, p["ln2"], x)
+    if cfg.moe is not None:
+        m, _ = moe_mod.moe_block(p["mlp"], h, cfg)
+    else:
+        m = mlp_apply(cfg, p["mlp"], h)
+    return x + m, (k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3))
+
+
+def prefill_chunk(cfg, params, tokens, state, rows, pos_start, chunk_len,
+                  block_rows=None):
+    """Chunked prefill: run C prompt tokens of each request through the
+    stack and write their K/V into the request's resident cache, resuming
+    at ``pos_start`` (the request's ``prefill_progress``).
+
+    tokens (Bc, C) int32, zero-padded past ``chunk_len``; rows (Bc,) batch
+    rows of ``state`` (dense stacked cache — or, when the state carries
+    ``block_tables``, the paged pool written through ``block_rows``
+    (Bc, nb), the request's physical pages).  ``pos_start``/``chunk_len``
+    are traced scalars, so ONE compiled executable covers every chunk of
+    every prompt length.  Queries attend to already-written positions
+    [0, pos_start) plus causally within the chunk; padded positions beyond
+    ``chunk_len`` have their K/V writes dropped (dense: out-of-range
+    scatter; paged: routed to the NULL page).  Text-only prompts (no vlm /
+    meta-token prefix — those keep the one-shot ``prefill`` path).
+    Returns the updated state."""
+    bc, c = tokens.shape
+    pos_start = jnp.asarray(pos_start, jnp.int32)
+    chunk_len = jnp.asarray(chunk_len, jnp.int32)
+    rows = jnp.asarray(rows, jnp.int32)
+    x = embed_tokens(cfg, params, tokens)
+    positions = jnp.broadcast_to(pos_start + jnp.arange(c)[None, :], (bc, c))
+    paged = "block_tables" in state
+    if paged:
+        assert block_rows is not None, "paged prefill_chunk needs block rows"
+        scanned = {k: v for k, v in state.items() if k != "block_tables"}
+        n_virtual = block_rows.shape[1] * scanned["k"].shape[3]
+    else:
+        scanned = state
+        n_virtual = state["k"].shape[3]
+    valid = jnp.broadcast_to(jnp.arange(n_virtual)[None, :] < pos_start,
+                             (bc, n_virtual))
+
+    def body(x, xs):
+        p_l, cache_l = xs
+        x, kv = layer_prefill_chunk(cfg, p_l, x, cache_l, rows, block_rows,
+                                    positions, valid)
+        return x, kv
+
+    _, (ks, vs) = jax.lax.scan(body, x, (params["layers"], scanned))
+    # ks/vs (L, Bc, KV, C, dh): one write for all layers, outside the scan
+    if paged:
+        pages = attn.cache_write_chunk_paged(scanned, ks, vs, block_rows,
+                                             pos_start, chunk_len)
+        return dict(pages, block_tables=state["block_tables"])
+    return attn.cache_write_chunk(state, ks, vs, rows, pos_start, chunk_len)
+
+
 # ---------------------------------------------------------------------------
 # Embedding / logits
 
@@ -256,7 +331,8 @@ def prefill(cfg, params, batch, cache_len: int):
     return cache, h[:, -1], h
 
 
-def decode_step(cfg, params, token, cache, pos, *, window: Optional[int] = None):
+def decode_step(cfg, params, token, cache, pos, *, window: Optional[int] = None,
+                write_mask: Optional[jnp.ndarray] = None):
     """One-token decode. token (B,); pos int32 — scalar (whole batch at one
     shared length: static batching) or (B,) vector (continuous batching:
     every batch row sits at its own absolute position).
@@ -265,7 +341,11 @@ def decode_step(cfg, params, token, cache, pos, *, window: Optional[int] = None)
     ``slot = pos % window``; otherwise slot = pos.  A cache carrying
     ``block_tables`` is PAGED: per-layer leaves are page pools (P,KV,bs,dh)
     and each row reads/writes through its block-table row (the table itself
-    is device state owned by the serving engine).  Returns (logits, hidden,
+    is device state owned by the serving engine).  ``write_mask`` (B,) bool
+    drops the dense K/V write for False rows (parked / mid-prefill slots in
+    the chunked serving engine, whose lanes hold chunk-written prompt K/V a
+    no-op decode write must not clobber); paged rows ignore it — their
+    parked writes already land in the NULL page.  Returns (logits, hidden,
     cache).
     """
     b = token.shape[0]
@@ -282,6 +362,10 @@ def decode_step(cfg, params, token, cache, pos, *, window: Optional[int] = None)
     else:
         s_cache = cache["k"].shape[3]
         slot, valid = attn.decode_valid_mask(pos, b, s_cache, window)
+        if write_mask is not None:
+            # masked rows route their write out of range -> scatter drops it
+            slot = jnp.where(write_mask, jnp.broadcast_to(slot, (b,)),
+                             s_cache)
         bt = None
         scanned = cache
     positions = pos if pos.ndim == 1 else jnp.full((b,), pos, jnp.int32)

@@ -1,10 +1,11 @@
-from repro.serving.engine import (ContinuousServingEngine, ProbeState,
-                                  ServeConfig, ServeResult, ServingEngine,
-                                  SlotStepView, StaticQueueResult,
-                                  extract_trajectories, init_probe_state,
-                                  inject_prefill, make_serve_step,
-                                  prefix_len, probe_update, reset_probe_slot,
-                                  serve_queue_static)
+from repro.serving.engine import (ChunkWork, ContinuousServingEngine,
+                                  ProbeState, ServeConfig, ServeResult,
+                                  ServingEngine, SlotStepView,
+                                  StaticQueueResult, chunk_supported,
+                                  chunked_prefill, extract_trajectories,
+                                  init_probe_state, inject_prefill,
+                                  make_serve_step, prefix_len, probe_update,
+                                  reset_probe_slot, serve_queue_static)
 from repro.serving.kv_pool import (NULL_BLOCK, BlockPool, PrefixEntry,
                                    blocks_needed, prompt_key)
 from repro.serving.replay import (replay_model, replay_params,
@@ -13,11 +14,12 @@ from repro.serving.request import (FleetMetrics, Request, RequestState,
                                    make_request)
 from repro.serving.scheduler import OrcaScheduler
 
-__all__ = ["BlockPool", "ContinuousServingEngine", "FleetMetrics",
-           "NULL_BLOCK", "OrcaScheduler", "PrefixEntry", "ProbeState",
-           "Request", "RequestState", "ServeConfig", "ServeResult",
-           "ServingEngine", "SlotStepView", "StaticQueueResult",
-           "blocks_needed", "extract_trajectories", "init_probe_state",
+__all__ = ["BlockPool", "ChunkWork", "ContinuousServingEngine",
+           "FleetMetrics", "NULL_BLOCK", "OrcaScheduler", "PrefixEntry",
+           "ProbeState", "Request", "RequestState", "ServeConfig",
+           "ServeResult", "ServingEngine", "SlotStepView",
+           "StaticQueueResult", "blocks_needed", "chunk_supported",
+           "chunked_prefill", "extract_trajectories", "init_probe_state",
            "inject_prefill", "make_request", "make_serve_step",
            "prefix_len", "probe_update", "prompt_key", "replay_model",
            "replay_params", "replay_requests", "reset_probe_slot",

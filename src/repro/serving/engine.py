@@ -19,6 +19,17 @@ Two execution modes share the fused step:
   is evicted and refilled from the waiting queue — calibrated early stopping
   becomes the capacity mechanism, not just shorter trajectories.
 
+With ``chunk_tokens=N`` the continuous engine's fused step becomes the
+UNIFIED token-budget step (Sarathi-style chunked prefill): prompt prefill is
+no longer an admission-time, batch-1, per-prompt-length-compiled event but
+schedulable work — each iteration decodes every slot AND processes up to N
+prompt tokens of one mid-prefill request (``begin_prefill`` -> per-step
+``ChunkWork`` -> ``finish_prefill``), all inside ONE fixed-shape executable.
+Mid-prefill slots ride along as parked no-op rows: the probe's boundary gate
+never touches their state and their no-op K/V write is masked (dense) or
+NULL-paged (paged), so chunking changes *when* prefill work happens, never
+*what* the probe sees.
+
 This same ``serve_step`` is what the decode-shape dry-runs lower to the
 production mesh: the deployed procedure (model + adaptation + stopping) is
 exactly what gets calibrated, per the paper's validity argument.
@@ -115,6 +126,70 @@ def inject_prefill(model: Model, params, state, batch_one: Dict[str, jnp.ndarray
         state, sub)
 
 
+class ChunkWork(NamedTuple):
+    """Host-side descriptor of one prefill chunk for the unified step:
+    process prompt positions [start, start + length) of the request
+    resident in batch row ``slot``."""
+    slot: int
+    tokens: np.ndarray               # (S,) the FULL prompt token ids
+    start: int
+    length: int
+    row: Optional[np.ndarray] = None  # paged: the request's physical pages
+
+
+def chunk_supported(model: Model, inputs: Dict[str, jnp.ndarray]) -> bool:
+    """A prompt can be prefilled in chunks iff the family exposes
+    ``prefill_chunk`` and the prompt is pure text with no hidden prefix —
+    vlm patches, learned meta tokens and audio frontends prefill their
+    non-token prefix in one shot, so those requests keep the admission-time
+    ``model.prefill`` path."""
+    mcfg = model.cfg
+    return (model.prefill_chunk is not None
+            and set(inputs) == {"tokens"}
+            and mcfg.arch_type != "audio"
+            and not (getattr(mcfg, "n_meta_tokens", 0) or 0))
+
+
+@functools.lru_cache(maxsize=None)
+def _chunk_prefill_fn(prefill_chunk, mcfg):
+    """One jitted chunk executable per (family, config) — repeated
+    ``serve()``/``extract_trajectories`` calls must not recompile, the same
+    contract as the engines' step functions."""
+    return jax.jit(functools.partial(prefill_chunk, mcfg),
+                   donate_argnums=2)     # the state is rebuilt in place
+
+
+def chunked_prefill(model: Model, params, batch: Dict[str, jnp.ndarray],
+                    cache_len: int, *, chunk_tokens: Optional[int] = None):
+    """Build a decode state for ``batch`` — the ONE prompt-prefill helper
+    behind ``ServingEngine.serve``, ``extract_trajectories`` and the
+    offline shims.
+
+    ``chunk_tokens=None`` (or unsupported inputs) runs one full-prompt
+    ``model.prefill`` — the legacy path, bit-identical to before.
+    Otherwise the prompt runs through fixed-shape ``chunk_tokens``-wide
+    ``model.prefill_chunk`` calls with traced start/length, so ONE compiled
+    executable covers every prompt length (the unbounded per-length compile
+    cache was §ISSUE-4's satellite fix).  Returns the decode state."""
+    mcfg = model.cfg
+    if not chunk_tokens or not chunk_supported(model, batch):
+        state, _, _ = model.prefill(mcfg, params, batch, cache_len)
+        return state
+    tokens = np.asarray(batch["tokens"])
+    b, s = tokens.shape
+    c = int(chunk_tokens)
+    state = model.init_decode_state(b, cache_len)
+    rows = jnp.arange(b, dtype=jnp.int32)
+    fn = _chunk_prefill_fn(model.prefill_chunk, mcfg)
+    for start in range(0, s, c):
+        n = min(c, s - start)
+        buf = np.zeros((b, c), np.int32)
+        buf[:, :n] = tokens[:, start:start + n]
+        state = fn(params, jnp.asarray(buf), state, rows,
+                   jnp.asarray(start, jnp.int32), jnp.asarray(n, jnp.int32))
+    return state
+
+
 def probe_update(pc: ProbeConfig, theta, st: ProbeState, hidden: jnp.ndarray,
                  lam: float, tokens_per_step: int, burn_in: int, *,
                  probe_impl: str = "kernel",
@@ -187,7 +262,9 @@ class ServeConfig:
 def make_serve_step(model: Model, pc: ProbeConfig, cfg: ServeConfig,
                     window: Optional[int] = None, *,
                     probe_impl: str = "kernel",
-                    interpret: Optional[bool] = None):
+                    interpret: Optional[bool] = None,
+                    chunk_tokens: int = 0,
+                    mask_stopped_writes: bool = False):
     """Build the fused decode+ORCA step:
     (params, theta, token, cache, pos, probe_state) ->
     (next_token, cache, probe_state).
@@ -195,12 +272,26 @@ def make_serve_step(model: Model, pc: ProbeConfig, cfg: ServeConfig,
     One jitted step fuses decode attention, step-embedding pooling, the
     Pallas probe score-then-update, smoothing and the threshold test for all
     slots; engines jit it with the KV cache and probe state donated so XLA
-    updates them in place."""
+    updates them in place.
+
+    With ``chunk_tokens > 0`` the step becomes the UNIFIED token-budget
+    step (Sarathi-style chunked prefill): it takes a 7th argument ``chunk``
+    — a fixed-shape descriptor of up to ``chunk_tokens`` pending prompt
+    tokens of ONE mid-prefill request — and runs ``model.prefill_chunk``
+    for them before the decode of every slot, all in one executable
+    whatever the prompt length.  Mid-prefill slots ride the decode as
+    parked no-op rows (probe ``stopped=True`` — the boundary gate already
+    keeps the probe kernel off them) and, with ``mask_stopped_writes``,
+    their dense no-op K/V write is dropped so it can never clobber
+    chunk-written prompt K/V (paged parked rows already write the NULL
+    page)."""
     mcfg = model.cfg
 
-    def serve_step(params, theta, token, cache, pos, st: ProbeState):
+    def decode_probe(params, theta, token, cache, pos, st: ProbeState):
+        write_mask = ~st.stopped if mask_stopped_writes else None
         logits, hidden, cache = model.decode_step(mcfg, params, token, cache,
-                                                  pos, window=window)
+                                                  pos, window=window,
+                                                  write_mask=write_mask)
         prev_stopped = st.stopped
         st = probe_update(pc, theta, st, hidden, cfg.lam,
                           cfg.tokens_per_step, cfg.burn_in,
@@ -211,7 +302,29 @@ def make_serve_step(model: Model, pc: ProbeConfig, cfg: ServeConfig,
         nxt = jnp.where(prev_stopped, token, nxt)
         return nxt, cache, st
 
-    return serve_step
+    if not chunk_tokens:
+        def serve_step(params, theta, token, cache, pos, st: ProbeState):
+            return decode_probe(params, theta, token, cache, pos, st)
+        return serve_step
+
+    assert model.prefill_chunk is not None, \
+        f"{mcfg.name}: no chunked prefill for this family"
+
+    def unified_step(params, theta, token, cache, pos, st: ProbeState,
+                     chunk: Dict[str, jnp.ndarray]):
+        def run_chunk(cache):
+            return model.prefill_chunk(mcfg, params, chunk["tokens"], cache,
+                                       chunk["slot"], chunk["start"],
+                                       chunk["length"],
+                                       chunk.get("row"))
+
+        # prefill work first, decode after: order is immaterial (the chunk
+        # slot is parked, other slots never read its lane) but keeps the
+        # trace linear
+        cache = jax.lax.cond(chunk["active"], run_chunk, lambda c: c, cache)
+        return decode_probe(params, theta, token, cache, pos, st)
+
+    return unified_step
 
 
 # serve_step arg indices donated by the engines' jitted hot loop: the KV
@@ -240,9 +353,14 @@ class ServingEngine:
 
     def __init__(self, model: Model, params, pc: ProbeConfig, theta,
                  cfg: ServeConfig, *, probe_impl: str = "kernel",
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 chunk_tokens: Optional[int] = None):
         self.model, self.params, self.pc, self.theta, self.cfg = \
             model, params, pc, theta, cfg
+        # prompt prefill routes through the shared chunked helper: None ->
+        # one full model.prefill call (legacy, bit-identical); an int ->
+        # fixed-shape chunks, one executable across prompt lengths
+        self.chunk_tokens = chunk_tokens
         # one jitted step for the engine's lifetime: repeated serve() calls
         # (e.g. group loops in the throughput benchmark) must not recompile
         self._step_fn = jax.jit(
@@ -257,7 +375,8 @@ class ServingEngine:
         B = next(iter(batch.values())).shape[0]
         pre = prefix_len(mcfg, batch, prompt_len)
         cache_len = cache_len or (pre + cfg.max_new_tokens)
-        state, last_h, _ = model.prefill(mcfg, self.params, batch, cache_len)
+        state = chunked_prefill(model, self.params, batch, cache_len,
+                                chunk_tokens=self.chunk_tokens)
         step_fn = self._step_fn
         st = init_probe_state(self.pc, self.theta, B, mcfg.d_model)
         token = jnp.zeros((B,), jnp.int32)
@@ -332,14 +451,18 @@ def serve_queue_static(engine: ServingEngine, batch: Dict[str, jnp.ndarray],
 
 def extract_trajectories(model: Model, params, batch, prompt_len: int,
                          max_new_tokens: int, tokens_per_step: int,
-                         cache_len: Optional[int] = None):
+                         cache_len: Optional[int] = None,
+                         chunk_tokens: Optional[int] = None):
     """Run the model WITHOUT stopping and harvest step embeddings phi_t —
-    the trajectory source for meta-training probes on a real model."""
+    the trajectory source for meta-training probes on a real model.
+    Prompt prefill routes through the shared ``chunked_prefill`` helper
+    (``chunk_tokens=None`` keeps the legacy one-shot prefill)."""
     mcfg = model.cfg
     B = next(iter(batch.values())).shape[0]
     pre = prefix_len(mcfg, batch, prompt_len)
     cache_len = cache_len or (pre + max_new_tokens)
-    state, _, _ = model.prefill(mcfg, params, batch, cache_len)
+    state = chunked_prefill(model, params, batch, cache_len,
+                            chunk_tokens=chunk_tokens)
     token = jnp.zeros((B,), jnp.int32)
     step_fn = jax.jit(functools.partial(model.decode_step, mcfg))
     pos0 = pre if mcfg.arch_type != "audio" else 0
@@ -415,7 +538,8 @@ class ContinuousServingEngine:
                  cfg: ServeConfig, n_slots: int, cache_len: int,
                  window: Optional[int] = None, *, probe_impl: str = "kernel",
                  interpret: Optional[bool] = None, paged: bool = False,
-                 block_size: int = 16, num_blocks: Optional[int] = None):
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 chunk_tokens: Optional[int] = None):
         self.model, self.params, self.pc, self.theta, self.cfg = \
             model, params, pc, theta, cfg
         mcfg = model.cfg
@@ -434,14 +558,34 @@ class ContinuousServingEngine:
         else:
             self.state = model.init_decode_state(n_slots, cache_len)
         self.n_slots, self.cache_len = n_slots, cache_len
+        # chunked prefill: the fused step becomes the unified token-budget
+        # step (decode every slot + up to chunk_tokens of one mid-prefill
+        # request's prompt) — ONE executable regardless of prompt length
+        self.chunk_tokens = int(chunk_tokens or 0)
+        if self.chunk_tokens:
+            assert window is None, "chunked prefill has no SWA ring buffer"
+            assert model.supports_chunked, \
+                f"{mcfg.name}: no chunked prefill for this family"
         st = init_probe_state(pc, theta, n_slots, mcfg.d_model)
         self.st = st._replace(stopped=jnp.ones((n_slots,), bool))
         self.token = jnp.zeros((n_slots,), jnp.int32)
         self.pos = np.zeros((n_slots,), np.int32)
         self._step_fn = jax.jit(
             make_serve_step(model, pc, cfg, window=window,
-                            probe_impl=probe_impl, interpret=interpret),
+                            probe_impl=probe_impl, interpret=interpret,
+                            chunk_tokens=self.chunk_tokens,
+                            mask_stopped_writes=bool(self.chunk_tokens)),
             donate_argnums=_SERVE_STEP_DONATE)
+        if self.chunk_tokens:
+            null = {"tokens": jnp.zeros((1, self.chunk_tokens), jnp.int32),
+                    "start": jnp.zeros((), jnp.int32),
+                    "length": jnp.zeros((), jnp.int32),
+                    "slot": jnp.zeros((1,), jnp.int32),
+                    "active": jnp.zeros((), bool)}
+            if self.paged:
+                null["row"] = jnp.full((1, self.max_blocks), NULL_BLOCK,
+                                       jnp.int32)
+            self._null_chunk = null
         if self.paged:
             # the page pool is the largest serving buffer: donate it through
             # every admit/release op so XLA updates it in place instead of
@@ -533,11 +677,92 @@ class ContinuousServingEngine:
                                        jnp.asarray(slot, jnp.int32), null_row)
         self.pos[slot] = 0
 
-    def step(self) -> SlotStepView:
-        """One fused decode+probe step for every slot (vector pos)."""
+    # ------------------------------------------------------------------
+    # chunked prefill: PREFILL is a resident phase, not an admission event
+    def begin_prefill(self, slot: int) -> None:
+        """Make ``slot`` a resident PREFILL row.  The probe is parked
+        (``stopped=True``): the unified step treats the row as no-op decode
+        — the probe kernel's boundary gate never touches its state and its
+        dense K/V write is dropped by the write mask.  Paged: the slot's
+        table row STAYS at NULL for the whole prefill (chunks write through
+        their explicit block row), so the parked decode write can't corrupt
+        the reserved pages."""
+        assert self.chunk_tokens, "engine built without chunk_tokens"
+        self.st = self._reset(self.theta, self.st,
+                              jnp.asarray(slot, jnp.int32), active=False)
+        if self.paged:
+            null_row = jnp.full((self.max_blocks,), NULL_BLOCK, jnp.int32)
+            self.state = self._set_row(self.state,
+                                       jnp.asarray(slot, jnp.int32), null_row)
+        self.token = self.token.at[slot].set(0)
+        self.pos[slot] = 0
+
+    def finish_prefill(self, slot: int, batch_one: Dict[str, jnp.ndarray],
+                       prompt_len: int, *, block_row=None) -> None:
+        """Arm ``slot`` after its last prefill chunk: point its table row at
+        the now-filled pages (paged), reset the probe to (W0, b0) and resume
+        decode at the prompt length — byte-identical slot state to a
+        full-prefill ``admit``."""
+        assert self.chunk_tokens, "engine built without chunk_tokens"
+        if self.paged:
+            assert block_row is not None, "paged finish_prefill needs a row"
+            row = np.full((self.max_blocks,), NULL_BLOCK, np.int32)
+            row[:len(block_row)] = np.asarray(block_row, np.int32)
+            self.state = self._set_row(self.state,
+                                       jnp.asarray(slot, jnp.int32),
+                                       jnp.asarray(row))
+        self.st = self._reset(self.theta, self.st,
+                              jnp.asarray(slot, jnp.int32), active=True)
+        self.token = self.token.at[slot].set(0)
+        self.pos[slot] = prefix_len(self.model.cfg, batch_one, prompt_len)
+
+    def _chunk_to_device(self, chunk: ChunkWork) -> Dict[str, jnp.ndarray]:
+        c = self.chunk_tokens
+        toks = np.zeros((1, c), np.int32)
+        toks[0, :chunk.length] = np.asarray(
+            chunk.tokens[chunk.start:chunk.start + chunk.length])
+        out = {"tokens": jnp.asarray(toks),
+               "start": jnp.asarray(chunk.start, jnp.int32),
+               "length": jnp.asarray(chunk.length, jnp.int32),
+               "slot": jnp.asarray([chunk.slot], jnp.int32),
+               "active": jnp.asarray(True)}
+        if self.paged:
+            row = np.full((1, self.max_blocks), NULL_BLOCK, np.int32)
+            if chunk.row is not None:
+                row[0, :len(chunk.row)] = np.asarray(chunk.row, np.int32)
+            out["row"] = jnp.asarray(row)
+        return out
+
+    def compile_counts(self) -> Dict[str, int]:
+        """Executables behind each jitted engine entry point — the compile-
+        cache regression surface.  The unified chunked step keeps ``step``
+        at 1 however many distinct prompt lengths are admitted;
+        ``admission_prefill`` counts the legacy per-length prefill
+        executables (one per distinct prompt length / pad size)."""
+        out = {"step": self._step_fn._cache_size()}
+        if self.paged:
+            out["admission_prefill"] = self._prefill_pages._cache_size()
+        else:
+            out["admission_prefill"] = self._inject._cache_size()
+        return out
+
+    # ------------------------------------------------------------------
+    def step(self, chunk: Optional[ChunkWork] = None) -> SlotStepView:
+        """One fused step for every slot (vector pos): decode + probe — and,
+        in chunked mode, up to ``chunk_tokens`` prompt tokens of the ONE
+        mid-prefill request described by ``chunk`` (None = decode-only, the
+        same executable runs with an inactive chunk)."""
         pos = jnp.asarray(self.pos, jnp.int32)
-        self.token, self.state, self.st = self._step_fn(
-            self.params, self.theta, self.token, self.state, pos, self.st)
+        if self.chunk_tokens:
+            dev = (self._null_chunk if chunk is None
+                   else self._chunk_to_device(chunk))
+            self.token, self.state, self.st = self._step_fn(
+                self.params, self.theta, self.token, self.state, pos,
+                self.st, dev)
+        else:
+            assert chunk is None, "engine built without chunk_tokens"
+            self.token, self.state, self.st = self._step_fn(
+                self.params, self.theta, self.token, self.state, pos, self.st)
         self.pos = self.pos + 1
         return SlotStepView(tokens=np.asarray(self.token),
                             stopped=np.asarray(self.st.stopped),

@@ -63,7 +63,8 @@ def replay_model(phis: np.ndarray, *, prompt_len: int = 1,
                            jnp.float32)
         return state, hidden[:, -1], hidden
 
-    def decode_step(cfg, params, token, state, pos, window=None):
+    def decode_step(cfg, params, token, state, pos, window=None,
+                    write_mask=None):
         traj = state["traj"][0]                           # (B,)
         bank = params["phis"]                             # (N, T, d)
         step = (jnp.asarray(pos, jnp.int32) - cfg.prompt_len) \
@@ -73,12 +74,24 @@ def replay_model(phis: np.ndarray, *, prompt_len: int = 1,
         logits = jnp.zeros((hidden.shape[0], cfg.vocab_size), jnp.float32)
         return logits, hidden, state
 
+    def prefill_chunk(cfg, params, tokens, state, rows, pos_start, chunk_len,
+                      block_rows=None):
+        # the whole "prompt" is the trajectory id in token 0: only the chunk
+        # containing position 0 carries information, later chunks are no-ops
+        traj = state["traj"]
+        rows = jnp.asarray(rows, jnp.int32)
+        first = (jnp.asarray(pos_start, jnp.int32) == 0) \
+            & (jnp.asarray(chunk_len, jnp.int32) > 0)
+        new = jnp.where(first, tokens[:, 0].astype(jnp.int32), traj[0, rows])
+        return {"traj": traj.at[0, rows].set(new)}
+
     def init_decode_state(batch: int, cache_len: int, abstract: bool = False):
         return {"traj": jnp.zeros((1, batch), jnp.int32)}
 
     return Model(cfg=cfg, decls=None, forward=None, prefill=prefill,
                  decode_step=decode_step, init_decode_state=init_decode_state,
-                 decode_geometry=lambda shape: (shape.seq_len, None))
+                 decode_geometry=lambda shape: (shape.seq_len, None),
+                 prefill_chunk=prefill_chunk)
 
 
 def replay_params(phis: np.ndarray):

@@ -26,7 +26,8 @@ from repro.core import stopping as S
 
 class RequestState(enum.Enum):
     WAITING = "waiting"
-    PREFILL = "prefill"
+    PREFILL = "prefill"      # RESIDENT: owns a slot; prompt prefills in
+    #                          token-budget chunks (or one admission shot)
     RUNNING = "running"
     STOPPED = "stopped"      # ORCA threshold fired -> slot evicted
     FINISHED = "finished"    # token budget exhausted without a stop
@@ -49,6 +50,12 @@ class Request:
     submitted_step: int = 0               # engine step at enqueue
     admitted_step: int = -1               # engine step at slot admission
     completed_step: int = -1              # engine step at stop/finish
+
+    # chunked prefill (PREFILL is a RESIDENT phase: the request owns a slot
+    # and its prompt is processed in token-budget chunks by the unified step)
+    prefill_progress: int = 0             # prompt tokens already prefilled
+    first_token_step: int = -1            # engine step of the first decode token
+    ttft_s: float = -1.0                  # wall-clock time to first token
 
     # observations
     tokens: List[int] = dataclasses.field(default_factory=list)
@@ -108,6 +115,17 @@ class FleetMetrics:
     pool_blocks: int = 0         # usable pages in the pool
     peak_blocks_in_use: int = 0  # high-water mark across the run
     prefill_skips: int = 0       # admissions served from a resident prefix
+    # latency distribution (chunked-prefill tentpole: stall-free serving).
+    # A "stall" is one scheduler iteration's wall time — the latency every
+    # resident decode slot pays before its next token.  Admission-time
+    # prefill spikes the tail (one batch-1 full-prompt prefill blocks the
+    # fleet); the chunked unified step bounds every iteration by the token
+    # budget, so p99 stall collapses toward p50.
+    ttft_ms_p50: float = 0.0     # wall-clock time-to-first-token percentiles
+    ttft_ms_p99: float = 0.0
+    stall_ms_p50: float = 0.0    # per-step decode-stall percentiles
+    stall_ms_p99: float = 0.0
+    prefill_chunks: int = 0      # chunk launches (0 = admission-time prefill)
 
     def row(self) -> Dict[str, float]:
         return {
@@ -121,4 +139,9 @@ class FleetMetrics:
             "pool_blocks": self.pool_blocks,
             "peak_blocks_in_use": self.peak_blocks_in_use,
             "prefill_skips": self.prefill_skips,
+            "ttft_ms_p50": self.ttft_ms_p50,
+            "ttft_ms_p99": self.ttft_ms_p99,
+            "stall_ms_p50": self.stall_ms_p50,
+            "stall_ms_p99": self.stall_ms_p99,
+            "prefill_chunks": self.prefill_chunks,
         }

@@ -25,6 +25,19 @@ Paged admission (``paged=True``) replaces "find a free slot lane" with
 * an ORCA stop releases the request's pages back to the pool immediately —
   the paper's early stop is literally a memory-reclaim event.
 
+Chunked prefill (``chunk_tokens=N``) turns prefill itself into schedulable
+work (the Sarathi shape): admission still reserves pages all-or-nothing,
+but instead of a batch-1 full-prompt prefill stalling the whole fleet, the
+request becomes a resident PREFILL row and the *batch composer* packs each
+engine iteration up to ``token_budget`` tokens — every resident decode
+token first, the remainder filled FIFO with up to one ``chunk_tokens``-wide
+chunk of the head PREFILL request's prompt.  No decode slot ever skips a
+step while prefill work is pending, TTFT and per-step stall tails collapse
+(FleetMetrics p50/p99), and ONE compiled step executable serves every
+prompt length.  Chunking changes *when* prefill work happens, never *what*
+the probe sees: stop decisions are identical to admission-time prefill
+(asserted in ``tests/test_chunked_prefill.py`` and the throughput gate).
+
 Eviction is score-invariant by construction: each slot's probe fast
 weights are reset to (W0, b0) at admission and the per-slot KV view (dense
 lane or block table) only ever exposes the slot's own request, so a
@@ -44,8 +57,8 @@ import numpy as np
 
 from repro.core.probe import ProbeConfig
 from repro.models.registry import Model
-from repro.serving.engine import (ContinuousServingEngine, ServeConfig,
-                                  prefix_len)
+from repro.serving.engine import (ChunkWork, ContinuousServingEngine,
+                                  ServeConfig, chunk_supported, prefix_len)
 from repro.serving.kv_pool import BlockPool, blocks_needed, prompt_key
 from repro.serving.request import FleetMetrics, Request, RequestState
 
@@ -70,7 +83,9 @@ class OrcaScheduler:
                  interpret: Optional[bool] = None,
                  paged: bool = False, block_size: int = 16,
                  num_blocks: Optional[int] = None,
-                 prefix_sharing: bool = True):
+                 prefix_sharing: bool = True,
+                 chunk_tokens: Optional[int] = None,
+                 token_budget: Optional[int] = None):
         self.model, self.params, self.pc, self.theta, self.cfg = \
             model, params, pc, theta, cfg
         self.n_slots = n_slots
@@ -83,6 +98,17 @@ class OrcaScheduler:
         self.block_size = int(block_size)
         self.num_blocks = num_blocks
         self.prefix_sharing = bool(prefix_sharing)
+        # chunked prefill (Sarathi-style): prefill stops being an admission
+        # event and becomes schedulable work — each engine iteration packs
+        # every resident decode token plus up to ``chunk_tokens`` of the
+        # FIFO-head PREFILL request's prompt, bounded by ``token_budget``
+        # tokens per step (default: n_slots decode tokens + one full chunk)
+        self.chunk_tokens = int(chunk_tokens) if chunk_tokens else None
+        if self.chunk_tokens is not None and not model.supports_chunked:
+            self.chunk_tokens = None      # family without prefill_chunk
+        self.token_budget = (int(token_budget) if token_budget
+                             else n_slots + (self.chunk_tokens or 0))
+        assert self.token_budget >= 1
         self.pool: Optional[BlockPool] = None
         self._engine: Optional[ContinuousServingEngine] = None
 
@@ -118,12 +144,13 @@ class OrcaScheduler:
                     self.model, self.params, self.pc, self.theta, self.cfg,
                     self.n_slots, cache_len, probe_impl=self.probe_impl,
                     interpret=self.interpret, paged=device_paged,
-                    block_size=self.block_size, num_blocks=num_blocks)
+                    block_size=self.block_size, num_blocks=num_blocks,
+                    chunk_tokens=self.chunk_tokens)
         elif self._engine is None or self._engine.cache_len < cache_len:
             self._engine = ContinuousServingEngine(
                 self.model, self.params, self.pc, self.theta, self.cfg,
                 self.n_slots, cache_len, probe_impl=self.probe_impl,
-                interpret=self.interpret)
+                interpret=self.interpret, chunk_tokens=self.chunk_tokens)
         return self._engine
 
     # ------------------------------------------------------------------
@@ -194,25 +221,32 @@ class OrcaScheduler:
             ) -> Tuple[List[Request], FleetMetrics]:
         """Drive every request to STOPPED/FINISHED; return them + metrics."""
         eng = self._ensure_engine(requests)
+        chunked = bool(eng.chunk_tokens)
         waiting = deque(requests)
         running: Dict[int, Request] = {}          # slot -> request
+        prefilling: Dict[int, Request] = {}       # slot -> mid-prefill req
+        plans: Dict[int, _AdmitPlan] = {}         # deferred donor registry
         free = list(range(self.n_slots))
         steps = active_slot_steps = 0
-        total_tokens = 0
+        total_tokens = n_chunks = 0
         peak_blocks = prefill_skips = 0
+        stalls: List[float] = []
         t0 = time.perf_counter()
 
-        while waiting or running:
+        while waiting or running or prefilling:
+            t_iter = time.perf_counter()
             # admission: refill free slots before the next fused step; in
             # paged mode a request that doesn't fit the pool keeps FIFO
-            # order and WAITS for an eviction to return pages
+            # order and WAITS for an eviction to return pages.  Pages are
+            # still reserved ALL-OR-NOTHING here, whether the prompt then
+            # prefills in one admission shot or in scheduled chunks.
             while free and waiting:
                 req = waiting[0]
                 plan = None
                 if self.paged:
                     plan = self._reserve(req)
                     if plan is None:
-                        if not running:
+                        if not (running or prefilling):
                             raise RuntimeError(
                                 f"request {req.req_id} needs "
                                 f"{self._request_blocks(req)} pages but the "
@@ -221,34 +255,70 @@ class OrcaScheduler:
                         break
                 waiting.popleft()
                 slot = free.pop()
+                req.slot, req.admitted_step = slot, steps
                 req.state = RequestState.PREFILL
+                skip = plan.skip_prefill if plan is not None else False
                 if plan is not None:
-                    if eng.paged:
-                        eng.admit(slot, req.inputs, req.prompt_len,
-                                  block_row=plan.row,
-                                  skip_prefill=plan.skip_prefill,
-                                  copy_tail=plan.copy_tail)
-                    else:
-                        # family without a page layout: the pool still
-                        # admission-controls, the device cache stays dense
-                        eng.admit(slot, req.inputs, req.prompt_len)
                     req.block_ids = list(plan.row)
                     req.n_shared_blocks = plan.n_shared
-                    req.prefill_skipped = plan.skip_prefill
-                    prefill_skips += int(plan.skip_prefill)
-                    self._register_donor(req, plan)
+                    req.prefill_skipped = skip
+                    prefill_skips += int(skip)
                     peak_blocks = max(peak_blocks, self.pool.blocks_in_use)
+                if chunked and not skip \
+                        and chunk_supported(self.model, req.inputs):
+                    # prefill is schedulable work, not an admission event:
+                    # the slot becomes a resident PREFILL row and the
+                    # prompt rides the unified step in token-budget chunks
+                    eng.begin_prefill(slot)
+                    req.prefill_progress = 0
+                    prefilling[slot] = req
+                    if plan is not None:
+                        # donor registration deferred: the pages only hold
+                        # the prompt K/V once the last chunk lands
+                        plans[slot] = plan
                 else:
-                    eng.admit(slot, req.inputs, req.prompt_len)
-                req.slot, req.admitted_step = slot, steps
-                req.state = RequestState.RUNNING
-                running[slot] = req
+                    if plan is not None and eng.paged:
+                        eng.admit(slot, req.inputs, req.prompt_len,
+                                  block_row=plan.row,
+                                  skip_prefill=skip,
+                                  copy_tail=plan.copy_tail)
+                    else:
+                        # family without a page layout / non-text prompt:
+                        # the pool still admission-controls, the device
+                        # cache stays dense and prefill stays one shot
+                        eng.admit(slot, req.inputs, req.prompt_len)
+                    if plan is not None:
+                        self._register_donor(req, plan)
+                    req.state = RequestState.RUNNING
+                    running[slot] = req
 
-            view = eng.step()
+            # batch composer: every resident decode token rides this step;
+            # what's left of the token budget goes to the FIFO-head
+            # PREFILL request, capped at one chunk
+            chunk = None
+            if prefilling:
+                room = min(self.token_budget - len(running),
+                           eng.chunk_tokens)
+                if room > 0:
+                    slot, req = next(iter(prefilling.items()))
+                    n = min(room, req.prompt_len - req.prefill_progress)
+                    chunk = ChunkWork(
+                        slot=slot,
+                        tokens=np.asarray(req.inputs["tokens"][0]),
+                        start=req.prefill_progress, length=int(n),
+                        row=(np.asarray(req.block_ids, np.int32)
+                             if eng.paged and req.block_ids else None))
+                    n_chunks += 1
+
+            view = eng.step(chunk) if chunked else eng.step()
             steps += 1
             active_slot_steps += len(running)
+            now = time.perf_counter()
 
             for slot, req in list(running.items()):
+                if req.first_token_step < 0:
+                    req.first_token_step = steps
+                    req.ttft_s = now - t0
                 req.tokens.append(int(view.tokens[slot]))
                 total_tokens += 1
                 n_scores = int(view.n_scores[slot])
@@ -273,11 +343,30 @@ class OrcaScheduler:
                 free.append(slot)
                 del running[slot]
 
+            # prefill bookkeeping AFTER token collection: a request whose
+            # last chunk just landed decodes its first token NEXT step
+            if chunk is not None:
+                req = prefilling[chunk.slot]
+                req.prefill_progress += chunk.length
+                if req.prefill_progress >= req.prompt_len:
+                    eng.finish_prefill(
+                        chunk.slot, req.inputs, req.prompt_len,
+                        block_row=(req.block_ids
+                                   if eng.paged and req.block_ids else None))
+                    del prefilling[chunk.slot]
+                    plan = plans.pop(chunk.slot, None)
+                    if plan is not None:
+                        self._register_donor(req, plan)
+                    req.state = RequestState.RUNNING
+                    running[chunk.slot] = req
+            stalls.append((time.perf_counter() - t_iter) * 1e3)
+
         wall = max(time.perf_counter() - t0, 1e-9)
         return list(requests), self._metrics(requests, steps,
                                              active_slot_steps,
                                              total_tokens, wall,
-                                             peak_blocks, prefill_skips)
+                                             peak_blocks, prefill_skips,
+                                             stalls, n_chunks)
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -288,11 +377,15 @@ class OrcaScheduler:
     def _metrics(self, requests: Sequence[Request], steps: int,
                  active_slot_steps: int, total_tokens: int,
                  wall: float, peak_blocks: int = 0,
-                 prefill_skips: int = 0) -> FleetMetrics:
+                 prefill_skips: int = 0,
+                 stalls: Optional[Sequence[float]] = None,
+                 prefill_chunks: int = 0) -> FleetMetrics:
         n = len(requests)
         sav = [r.savings(self.cfg.tokens_per_step, self.cfg.max_new_tokens)
                for r in requests]
         queue = [r.queue_steps for r in requests]
+        ttft = np.array([r.ttft_s for r in requests if r.ttft_s >= 0]) * 1e3
+        st = np.asarray(stalls if stalls else [0.0])
         return FleetMetrics(
             n_requests=n, n_slots=self.n_slots, engine_steps=steps,
             active_slot_steps=active_slot_steps, wall_time_s=wall,
@@ -302,4 +395,9 @@ class OrcaScheduler:
             mean_step_savings=float(np.mean(sav)) if sav else 0.0,
             mean_queue_steps=float(np.mean(queue)) if queue else 0.0,
             pool_blocks=self.pool.num_usable if self.pool else 0,
-            peak_blocks_in_use=peak_blocks, prefill_skips=prefill_skips)
+            peak_blocks_in_use=peak_blocks, prefill_skips=prefill_skips,
+            ttft_ms_p50=float(np.percentile(ttft, 50)) if ttft.size else 0.0,
+            ttft_ms_p99=float(np.percentile(ttft, 99)) if ttft.size else 0.0,
+            stall_ms_p50=float(np.percentile(st, 50)),
+            stall_ms_p99=float(np.percentile(st, 99)),
+            prefill_chunks=prefill_chunks)

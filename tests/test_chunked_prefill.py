@@ -1,0 +1,364 @@
+"""Chunked prefill (the unified token-budget step): stop-decision parity
+with admission-time prefill across dense/paged/prefix-shared serving, the
+shared prefill helper vs ``model.prefill``, legacy-shim regressions, the
+bounded-compile-cache guarantee, and a hypothesis sweep over the batch
+composer's (token budget, chunk size, prompt lengths) space."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.probe import ProbeConfig, init_outer
+from repro.models import build
+from repro.serving import (ContinuousServingEngine, OrcaScheduler,
+                           RequestState, ServeConfig, ServingEngine,
+                           ChunkWork, chunk_supported, chunked_prefill,
+                           extract_trajectories, init_probe_state,
+                           make_request, replay_model, replay_params)
+
+from tests._hypothesis_stub import given, settings, st
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("smollm_360m").reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _probe(mcfg, bias, smooth_window=2):
+    pc = ProbeConfig(d_phi=mcfg.d_model, smooth_window=smooth_window)
+    theta = init_outer(pc, jax.random.PRNGKey(1))
+    theta["b0"] = jnp.asarray(float(bias))
+    return pc, theta
+
+
+def _mixed_prompts(mcfg, lens, seed=3):
+    return [jax.random.randint(jax.random.PRNGKey(seed + i), (L,), 0,
+                               mcfg.vocab_size)
+            for i, L in enumerate(lens)]
+
+
+# ---------------------------------------------------------------------------
+# the shared prefill helper == model.prefill
+
+@pytest.mark.parametrize("chunk", [4, 5, 11, 64])
+def test_chunked_prefill_cache_matches_full_prefill(small_model, chunk):
+    model, params = small_model
+    mcfg = model.cfg
+    B, S, cache_len = 2, 11, 24
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0,
+                              mcfg.vocab_size)
+    full, _, _ = model.prefill(mcfg, params, {"tokens": toks}, cache_len)
+    state = chunked_prefill(model, params, {"tokens": toks}, cache_len,
+                            chunk_tokens=chunk)
+    for key in full:
+        np.testing.assert_allclose(
+            np.asarray(full[key][:, :, :, :S]).astype(np.float32),
+            np.asarray(state[key][:, :, :, :S]).astype(np.float32),
+            rtol=2e-5, atol=2e-5, err_msg=key)
+    # padding beyond the prompt is DROPPED, not written
+    assert np.abs(np.asarray(state["k"][:, :, :, S:]).astype(
+        np.float32)).max(initial=0.0) == 0.0
+
+
+def test_chunked_prefill_int8_serves_same_stops():
+    """int8 chunked prefill reads QUANTIZED prefix K/V where the one-shot
+    prefill read exact activations, so caches drift beyond quantization
+    noise — but served stop decisions (the procedure's contract) must
+    agree with admission-time prefill end-to-end."""
+    cfg = dataclasses.replace(get_config("smollm_360m").reduced(),
+                              kv_cache_dtype="int8")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    pc, theta = _probe(cfg, 3.0)           # decisive scores, robust stops
+    scfg = ServeConfig(tokens_per_step=2, max_new_tokens=12, lam=0.6,
+                       burn_in=1)
+    prompts = _mixed_prompts(cfg, [8, 13, 6, 10], seed=17)
+    (done_b, _, _), (done_c, fleet_c, _) = _run_pair(
+        model, params, pc, theta, scfg, prompts, chunk=4)
+    assert [r.stop_step for r in done_b] == [r.stop_step for r in done_c]
+    assert [r.state for r in done_b] == [r.state for r in done_c]
+    assert fleet_c.prefill_chunks > 0
+
+
+def test_chunk_supported_gates_hidden_prefixes(small_model):
+    model, _ = small_model
+    assert chunk_supported(model, {"tokens": jnp.zeros((1, 4), jnp.int32)})
+    # multimodal prompts keep the one-shot prefill path
+    assert not chunk_supported(model, {"tokens": jnp.zeros((1, 4), jnp.int32),
+                                       "patch_embeds": jnp.zeros((1, 2, 8))})
+    vlm = build(get_config("llava_next_34b").reduced())
+    assert not chunk_supported(
+        vlm, {"tokens": jnp.zeros((1, 4), jnp.int32),
+              "patch_embeds": jnp.zeros((1, 2, 8))})
+
+
+# ---------------------------------------------------------------------------
+# legacy shims route through the helper and stay equal
+
+def test_static_serve_shim_chunked_equals_legacy(small_model):
+    model, params = small_model
+    pc, theta = _probe(model.cfg, 3.0)
+    cfg = ServeConfig(tokens_per_step=2, max_new_tokens=16, lam=0.6,
+                      burn_in=1)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(4), (3, 10), 0,
+                                          model.cfg.vocab_size)}
+    legacy = ServingEngine(model, params, pc, theta, cfg).serve(
+        batch, prompt_len=10)
+    chunked = ServingEngine(model, params, pc, theta, cfg,
+                            chunk_tokens=4).serve(batch, prompt_len=10)
+    assert legacy.stop_step.tolist() == chunked.stop_step.tolist()
+    assert legacy.steps_run.tolist() == chunked.steps_run.tolist()
+    np.testing.assert_allclose(legacy.scores, chunked.scores, atol=1e-4)
+    np.testing.assert_array_equal(legacy.tokens, chunked.tokens)
+
+
+def test_extract_trajectories_chunked_equals_legacy(small_model):
+    model, params = small_model
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(5), (2, 9), 0,
+                                          model.cfg.vocab_size)}
+    phis_a, toks_a = extract_trajectories(model, params, batch, 9,
+                                          max_new_tokens=12,
+                                          tokens_per_step=3)
+    phis_b, toks_b = extract_trajectories(model, params, batch, 9,
+                                          max_new_tokens=12,
+                                          tokens_per_step=3, chunk_tokens=4)
+    np.testing.assert_array_equal(toks_a, toks_b)
+    np.testing.assert_allclose(phis_a, phis_b, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# scheduler: chunked == unchunked oracle (the tentpole invariant)
+
+def _run_pair(model, params, pc, theta, cfg, prompts, *, n_slots=2,
+              chunk=5, **kw):
+    base = OrcaScheduler(model, params, pc, theta, cfg, n_slots=n_slots,
+                         **kw)
+    done_b, fleet_b = base.run([make_request(p) for p in prompts])
+    ch = OrcaScheduler(model, params, pc, theta, cfg, n_slots=n_slots,
+                       chunk_tokens=chunk, **kw)
+    done_c, fleet_c = ch.run([make_request(p) for p in prompts])
+    return (done_b, fleet_b, base), (done_c, fleet_c, ch)
+
+
+def _assert_equal_service(done_b, done_c):
+    assert [r.stop_step for r in done_b] == [r.stop_step for r in done_c]
+    assert [r.steps_run for r in done_b] == [r.steps_run for r in done_c]
+    assert [r.state for r in done_b] == [r.state for r in done_c]
+    for rb, rc in zip(done_b, done_c):
+        np.testing.assert_allclose(np.array(rb.scores), np.array(rc.scores),
+                                   atol=1e-4)
+
+
+def test_scheduler_chunked_matches_unchunked_dense(small_model):
+    """Mixed prompt lengths with chunk < prompt: admissions overlap live
+    decode (mid-prefill residents), stop decisions must not move."""
+    model, params = small_model
+    pc, theta = _probe(model.cfg, 1.5)    # borderline: mixed stop outcomes
+    cfg = ServeConfig(tokens_per_step=2, max_new_tokens=16, lam=0.6,
+                      burn_in=1)
+    prompts = _mixed_prompts(model.cfg, [8, 13, 6, 17, 10, 8])
+    (done_b, _, _), (done_c, fleet_c, ch) = _run_pair(
+        model, params, pc, theta, cfg, prompts)
+    _assert_equal_service(done_b, done_c)
+    # every prompt token was scheduled as chunk work, none at admission
+    assert fleet_c.prefill_chunks >= (8 + 13 + 6 + 17 + 10 + 8) // 5
+    assert fleet_c.ttft_ms_p99 >= fleet_c.ttft_ms_p50 > 0.0
+    assert fleet_c.stall_ms_p99 >= fleet_c.stall_ms_p50 > 0.0
+
+
+def test_scheduler_chunked_matches_unchunked_paged(small_model):
+    """Paged serving with a pool small enough to force WAITING backpressure
+    keeps byte-identical stop decisions under chunked prefill."""
+    model, params = small_model
+    pc, theta = _probe(model.cfg, 1.5)
+    cfg = ServeConfig(tokens_per_step=2, max_new_tokens=12, lam=0.6,
+                      burn_in=1)
+    prompts = _mixed_prompts(model.cfg, [8, 13, 6, 11, 9], seed=11)
+    (done_b, _, base), (done_c, fleet_c, ch) = _run_pair(
+        model, params, pc, theta, cfg, prompts, chunk=4, paged=True,
+        block_size=4)
+    _assert_equal_service(done_b, done_c)
+    assert fleet_c.prefill_chunks > 0
+    # every page returned to the pool
+    assert ch.pool.blocks_in_use == 0 and base.pool.blocks_in_use == 0
+
+
+def test_prefix_sharing_composes_with_chunked_prefill(small_model):
+    """Self-consistency samples of a prompt whose donor prefilled in chunks
+    still share its pages: the donor registers only once its LAST chunk
+    lands, sharers skip prefill entirely, refcounts drain to zero."""
+    model, params = small_model
+    pc, theta = _probe(model.cfg, 1.5)
+    cfg = ServeConfig(tokens_per_step=2, max_new_tokens=8, lam=0.6,
+                      burn_in=1)
+    prompt = jax.random.randint(jax.random.PRNGKey(6), (12,), 0,
+                                model.cfg.vocab_size)
+    reqs = lambda: [make_request(prompt) for _ in range(4)]
+    base = OrcaScheduler(model, params, pc, theta, cfg, n_slots=2,
+                         paged=True, block_size=4)
+    done_b, fleet_b = base.run(reqs())
+    ch = OrcaScheduler(model, params, pc, theta, cfg, n_slots=2,
+                       paged=True, block_size=4, chunk_tokens=5)
+    done_c, fleet_c = ch.run(reqs())
+    _assert_equal_service(done_b, done_c)
+    assert fleet_c.prefill_skips == fleet_b.prefill_skips > 0
+    assert ch.pool.blocks_in_use == 0
+
+
+def test_mid_prefill_slot_never_touches_probe_state(small_model):
+    """While a slot prefills in chunks, its probe row must stay EXACTLY the
+    parked fresh row — the boundary gate keeps the probe kernel off it —
+    and a neighboring decode slot must advance normally."""
+    model, params = small_model
+    mcfg = model.cfg
+    pc, theta = _probe(mcfg, 3.0)
+    cfg = ServeConfig(tokens_per_step=1, max_new_tokens=16, lam=0.9,
+                      burn_in=8)
+    eng = ContinuousServingEngine(model, params, pc, theta, cfg, n_slots=2,
+                                  cache_len=40, chunk_tokens=4)
+    prompts = _mixed_prompts(mcfg, [6, 16], seed=7)
+    eng.admit(0, {"tokens": prompts[0][None]}, 6)       # decoding neighbor
+    eng.begin_prefill(1)
+    # score-relevant probe state must stay the parked fresh row (pooling
+    # accumulators hid_sum/tok_count free-run on parked rows and are zeroed
+    # when the probe is armed — same contract as released slots)
+    fields = ("W", "b", "ring", "n_scores", "smoothed", "stopped",
+              "stop_step")
+    fresh = init_probe_state(pc, theta, 1, mcfg.d_model)
+    parked = {f: np.asarray(getattr(fresh, f)[0]) for f in fields}
+    parked["stopped"] = np.asarray(True)
+    toks = np.asarray(prompts[1])
+    n_before = int(np.asarray(eng.st.n_scores[0]))
+    for start in range(0, 16, 4):
+        eng.step(ChunkWork(slot=1, tokens=toks, start=start, length=4))
+        row = {f: np.asarray(getattr(eng.st, f)[1]) for f in fields}
+        for f, v in parked.items():
+            np.testing.assert_array_equal(row[f], v, err_msg=f)
+    # the neighbor decoded through all 4 chunk steps (no skipped steps)
+    assert int(np.asarray(eng.st.n_scores[0])) == n_before + 4
+    eng.finish_prefill(1, {"tokens": prompts[1][None]}, 16)
+    assert eng.pos[1] == 16 and not bool(np.asarray(eng.st.stopped[1]))
+
+
+# ---------------------------------------------------------------------------
+# bounded compile cache: ONE step executable across prompt lengths
+
+def test_compile_cache_bounded_across_prompt_lengths(small_model):
+    """The satellite fix: with chunked prefill the engine compiles exactly
+    one step executable however many distinct prompt lengths arrive; the
+    legacy admission path compiles a fresh prefill per length."""
+    model, params = small_model
+    pc, theta = _probe(model.cfg, 3.0)
+    cfg = ServeConfig(tokens_per_step=2, max_new_tokens=8, lam=0.6,
+                      burn_in=1)
+    lens = [5, 9, 13, 17, 21]               # >= 4 distinct lengths
+    prompts = _mixed_prompts(model.cfg, lens, seed=9)
+
+    ch = OrcaScheduler(model, params, pc, theta, cfg, n_slots=2,
+                       chunk_tokens=4)
+    ch.run([make_request(p) for p in prompts])
+    counts = ch._engine.compile_counts()
+    assert counts["step"] == 1, counts
+    assert counts["admission_prefill"] == 0, counts
+    # a second mixed-length wave must not add executables
+    ch.run([make_request(p) for p in _mixed_prompts(model.cfg, lens,
+                                                    seed=21)])
+    assert ch._engine.compile_counts() == counts
+
+    legacy = OrcaScheduler(model, params, pc, theta, cfg, n_slots=2)
+    legacy.run([make_request(p) for p in prompts])
+    lcounts = legacy._engine.compile_counts()
+    assert lcounts["admission_prefill"] >= len(lens) - 1, lcounts
+
+
+# ---------------------------------------------------------------------------
+# batch composer sweep: (token budget, chunk size, prompt lengths)
+
+def _replay_setup(seed=0, n=10, t=16, d=16):
+    rs = np.random.RandomState(seed)
+    bank = (rs.randn(n, t, d) * 0.6).astype(np.float32)
+    model, params = replay_model(bank, prompt_len=4), replay_params(bank)
+    pc = ProbeConfig(d_phi=d, smooth_window=2)
+    theta = init_outer(pc, jax.random.PRNGKey(2))
+    theta["b0"] = jnp.asarray(0.4)
+    cfg = ServeConfig(tokens_per_step=1, max_new_tokens=t, lam=0.62,
+                      burn_in=2)
+    return model, params, pc, theta, cfg, bank
+
+
+@settings(max_examples=15, deadline=None)
+@given(budget=st.integers(2, 12), chunk=st.integers(1, 8),
+       lens=st.lists(st.integers(1, 9), min_size=3, max_size=7))
+def test_composer_sweep_decode_never_starves(budget, chunk, lens):
+    """Composer invariants under arbitrary (token budget, chunk size,
+    prompt lengths): decode slots never skip a step while prefill work is
+    pending (every RUNNING request gains exactly one token per engine
+    step), pool pages are never double-owned, and stop decisions equal the
+    unchunked oracle bit-for-bit (replay trajectories are exact)."""
+    model, params, pc, theta, cfg, bank = _replay_setup()
+    n_slots = 3
+    budget = max(budget, n_slots)     # composer contract: decode first
+
+    def reqs(prompt_lens):
+        out = []
+        for i, L in enumerate(prompt_lens):
+            toks = np.full((4,), i, np.int64)     # prompt_len=4, traj id i
+            r = make_request(toks, max_new_tokens=int(bank.shape[1]))
+            out.append(r)
+        return out
+
+    # the replay prompt length is fixed (4) but the COMPOSER sees varying
+    # effective prefill work via the chunk/budget interplay; vary lens by
+    # mapping them onto trajectory ids so queue composition still varies
+    ids = [L % bank.shape[0] for L in lens]
+    oracle = OrcaScheduler(model, params, pc, theta, cfg, n_slots=n_slots,
+                           paged=True, block_size=4)
+    done_o, _ = oracle.run(reqs(ids))
+    sched = OrcaScheduler(model, params, pc, theta, cfg, n_slots=n_slots,
+                          paged=True, block_size=4, chunk_tokens=chunk,
+                          token_budget=budget)
+    done_c, fleet = sched.run(reqs(ids))
+    assert [r.stop_step for r in done_o] == [r.stop_step for r in done_c]
+    for r in done_c:
+        assert r.state in (RequestState.STOPPED, RequestState.FINISHED)
+        # one token per engine step from first token to completion: the
+        # decode slot never skipped a step while prefill was pending
+        assert len(r.tokens) == r.completed_step - r.first_token_step + 1
+        assert r.first_token_step > r.admitted_step >= 0
+    # overlapping residents never co-own a private page
+    live_spans = [(r.admitted_step, r.completed_step, set(r.block_ids),
+                   r.n_shared_blocks) for r in done_c]
+    for i in range(len(live_spans)):
+        for j in range(i + 1, len(live_spans)):
+            a0, a1, ba, sa = live_spans[i]
+            b0, b1, bb, sb = live_spans[j]
+            if a0 < b1 and b0 < a1 and not (sa or sb):
+                assert not (ba & bb), (i, j, ba & bb)
+    sched.pool.check()
+    assert sched.pool.blocks_in_use == 0
+
+
+def test_composer_respects_token_budget(small_model):
+    """With a budget leaving room for less than a full chunk, the composer
+    shrinks the chunk instead of starving decode (decode slots first)."""
+    model, params = small_model
+    pc, theta = _probe(model.cfg, 3.0)
+    cfg = ServeConfig(tokens_per_step=2, max_new_tokens=8, lam=0.6,
+                      burn_in=1)
+    prompts = _mixed_prompts(model.cfg, [12, 12, 12], seed=13)
+    # budget 3 with 2 slots: at most ONE prefill token rides a step when
+    # both slots decode, so a 12-token prompt needs >= 12 chunk launches
+    sched = OrcaScheduler(model, params, pc, theta, cfg, n_slots=2,
+                          chunk_tokens=8, token_budget=3)
+    done, fleet = sched.run([make_request(p) for p in prompts])
+    assert all(r.done for r in done)
+    assert fleet.prefill_chunks >= 12
+    base = OrcaScheduler(model, params, pc, theta, cfg, n_slots=2)
+    done_b, _ = base.run([make_request(p) for p in prompts])
+    _assert_equal_service(done_b, done)

@@ -6,7 +6,8 @@ import numpy as np
 import pytest
 
 from repro.kernels import (flash_attention, flash_decode, make_unroll_kernel,
-                           paged_flash_decode, ttt_probe_scan, wkv_scan)
+                           paged_flash_decode, paged_flash_prefill_chunk,
+                           ttt_probe_scan, wkv_scan)
 from repro.kernels import ref as R
 from repro.core.probe import ProbeConfig
 from repro.core import ttt
@@ -164,6 +165,103 @@ def test_paged_flash_decode_int8_kv():
     ref = R.paged_decode_ref(q, kq, vq, tables, valid, ksc, vsc)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Paged prefill chunk (q-block > 1 extension of the paged kernel)
+
+@pytest.mark.parametrize("b,c,h,kv,d,bs,p,nb", [
+    (2, 4, 8, 8, 64, 16, 24, 6),   # MHA
+    (3, 6, 8, 2, 64, 8, 16, 4),    # GQA, small pages
+    (1, 16, 16, 4, 128, 32, 12, 8),  # chunk wider than a page
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_prefill_chunk_matches_ref(b, c, h, kv, d, bs, p, nb, dtype):
+    """The q-block > 1 kernel's unnormalized partials equal the gathered-
+    pages oracle for every chunk query row."""
+    ks = jax.random.split(jax.random.PRNGKey(11), 4)
+    q = jax.random.normal(ks[0], (b, c, h, d)).astype(dtype)
+    k_pages = jax.random.normal(ks[1], (p, kv, bs, d)).astype(dtype)
+    v_pages = jax.random.normal(ks[2], (p, kv, bs, d)).astype(dtype)
+    tables = jax.random.randint(ks[3], (b, nb), 0, p)
+    # mid-prefill: each request resumed at its own progress (>= 1 so the
+    # kernel/oracle l-garbage-flush corner stays out of the raw partials)
+    pos = jnp.asarray([((i + 1) * nb * bs) // (b + 1) + 1 for i in range(b)])
+    valid = jnp.arange(nb * bs)[None, :] < pos[:, None]
+    o, l, m = paged_flash_prefill_chunk(q, k_pages, v_pages, tables, valid)
+    o_r, l_r, m_r = R.paged_prefill_chunk_ref(q, k_pages, v_pages, tables,
+                                              valid)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    for a, r in ((o, o_r), (l, l_r), (m, m_r)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(r, np.float32),
+                                   rtol=tol, atol=tol)
+
+
+def test_paged_prefill_chunk_int8_kv():
+    from repro.models.attention import quantize_kv
+    b, c, h, kv, d, bs, p, nb = 2, 5, 8, 4, 64, 8, 16, 4
+    ks = jax.random.split(jax.random.PRNGKey(13), 4)
+    q = jax.random.normal(ks[0], (b, c, h, d))
+    kq, ksc = quantize_kv(jax.random.normal(ks[1], (p, kv, bs, d)))
+    vq, vsc = quantize_kv(jax.random.normal(ks[2], (p, kv, bs, d)))
+    tables = jax.random.randint(ks[3], (b, nb), 0, p)
+    valid = jnp.arange(nb * bs)[None, :] < jnp.asarray([[13], [29]])
+    o, l, m = paged_flash_prefill_chunk(q, kq, vq, tables, valid, ksc, vsc)
+    o_r, l_r, m_r = R.paged_prefill_chunk_ref(q, kq, vq, tables, valid,
+                                              ksc, vsc)
+    for a, r in ((o, o_r), (l, l_r), (m, m_r)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(r),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_prefill_chunk_q_block_one_equals_decode_kernel():
+    """A C=1 chunk IS a decode step without the extra_kv column: the
+    q-block > 1 kernel must reproduce paged_flash_decode's partials."""
+    b, h, kv, d, bs, p, nb = 2, 8, 4, 64, 8, 16, 4
+    ks = jax.random.split(jax.random.PRNGKey(15), 4)
+    q = jax.random.normal(ks[0], (b, h, d))
+    k_pages = jax.random.normal(ks[1], (p, kv, bs, d))
+    v_pages = jax.random.normal(ks[2], (p, kv, bs, d))
+    tables = jax.random.randint(ks[3], (b, nb), 0, p)
+    valid = jnp.arange(nb * bs)[None, :] < jnp.asarray([[9], [22]])
+    o_d, l_d, m_d = paged_flash_decode(q, k_pages, v_pages, tables, valid,
+                                       return_partials=True)
+    o_c, l_c, m_c = paged_flash_prefill_chunk(q[:, None], k_pages, v_pages,
+                                              tables, valid)
+    np.testing.assert_allclose(np.asarray(o_c[:, :, :, 0]), np.asarray(o_d),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(l_c[..., 0]), np.asarray(l_d),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(m_c[..., 0]), np.asarray(m_d),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_prefill_attention_pallas_matches_jnp():
+    """End-to-end chunk attention (kernel partials + within-chunk causal
+    merge) equals the jnp concat-softmax path, including the fully-masked
+    first chunk (pos_start=0)."""
+    from repro.models import attention as A
+    b, c, h, kv, d, bs, p, nb = 2, 6, 8, 4, 64, 8, 16, 4
+    ks = jax.random.split(jax.random.PRNGKey(17), 5)
+    q = jax.random.normal(ks[0], (b, c, h, d))
+    k_new = jax.random.normal(ks[1], (b, c, kv, d))
+    v_new = jax.random.normal(ks[2], (b, c, kv, d))
+    cache_l = {"k": jax.random.normal(ks[3], (p, kv, bs, d)),
+               "v": jax.random.normal(ks[4], (p, kv, bs, d))}
+    tables = jax.random.randint(jax.random.PRNGKey(18), (b, nb), 0, p)
+    for pos_start in (0, 7):
+        valid = jnp.broadcast_to(jnp.arange(nb * bs)[None, :] < pos_start,
+                                 (b, nb * bs))
+        o_j = A.attn_prefill_chunk(q, k_new, v_new, cache_l, valid,
+                                   jnp.float32, block_tables=tables,
+                                   impl="jnp")
+        o_p = A.attn_prefill_chunk(q, k_new, v_new, cache_l, valid,
+                                   jnp.float32, block_tables=tables,
+                                   impl="pallas", interpret=True)
+        assert np.isfinite(np.asarray(o_p)).all()
+        np.testing.assert_allclose(np.asarray(o_j), np.asarray(o_p),
+                                   rtol=2e-5, atol=2e-5)
 
 
 def test_paged_matches_dense_flash_decode_when_contiguous():

@@ -44,7 +44,7 @@ def noisy_splits():
             full.subset(idx[260:]))
 
 
-def _serve(calibrator, test, lam):
+def _serve(calibrator, test, lam, chunk_tokens=None):
     pc, theta = calibrator.serving_params()
     cfg = ServeConfig(tokens_per_step=1,
                       max_new_tokens=int(test.lengths.max()),
@@ -56,7 +56,8 @@ def _serve(calibrator, test, lam):
     max_blocks = (int(test.lengths.max()) + 1 + 15) // 16
     sched = OrcaScheduler(replay_model(test.phis), replay_params(test.phis),
                           pc, theta, cfg, n_slots=4, paged=True,
-                          block_size=16, num_blocks=1 + 3 * max_blocks)
+                          block_size=16, num_blocks=1 + 3 * max_blocks,
+                          chunk_tokens=chunk_tokens)
     done, fleet = sched.run(replay_requests(test.lengths))
     assert fleet.peak_blocks_in_use <= 3 * max_blocks
     return served_stop_times(done, test.lengths), fleet
@@ -69,6 +70,11 @@ def _assert_served_validity(calibrator, cal, test):
     # the served procedure IS the calibrated procedure: stop-for-stop equal
     tau_off = S.stop_times(calibrator.scores(test), [lam], test.mask)[:, 0]
     np.testing.assert_array_equal(tau_srv, tau_off)
+    # chunked prefill (prompt scheduled through the unified token-budget
+    # step, mid-prefill admissions riding live decode) must not move a
+    # single stop: same offline equality, bit for bit
+    tau_chunk, _ = _serve(calibrator, test, lam, chunk_tokens=1)
+    np.testing.assert_array_equal(tau_chunk, tau_off)
     # and it respects the calibrated risk level on held-out data
     labels = make_labels(test, calibrator.mode)
     risk = float(S.procedure_risk(tau_srv[:, None], labels, test.mask).mean())
