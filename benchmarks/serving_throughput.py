@@ -21,7 +21,14 @@ be IDENTICAL across paths (asserted):
     unified token-budget step packs resident decode tokens + one prompt
     chunk per iteration, so the per-step decode-stall tail (p99) and TTFT
     collapse — admission prefill stalls every resident decode for a whole
-    batch-1 full-prompt prefill (and compiles per prompt length).
+    batch-1 full-prompt prefill (and compiles per prompt length);
+  * PACKED vs single-request chunks on the same mixed fleet at EQUAL
+    ``token_budget`` and EQUAL KV HBM: the packed composer fuses the tail
+    of one prompt with the head of the next into one block-diagonal chunk,
+    so short prompt tails stop leaving budget on the table — higher
+    requests/s and lower TTFT at byte-identical stop decisions (the
+    ``packed_vs_single_chunk`` gate metric).  Rows carry the per-priority-
+    class TTFT/queue-wait percentiles (c0_* latency class, c1_* batch).
 
 ``--check`` is the CI perf-regression gate: re-run, then compare against the
 committed ``results/serving_throughput.json`` baseline — stop decisions must
@@ -229,8 +236,11 @@ def main(argv=None) -> int:
 
     # --- chunked vs admission prefill on mixed long-prompt/short-decode --
     chunk = args.chunk_tokens or 16
-    mixed_lens = [64, 96, 128, 96, 64, 112, 80, 128,
-                  128, 64, 96, 112]
+    # off-chunk-aligned prompt lengths: every prompt leaves a short tail,
+    # the budget the PACKED composer reclaims by fusing it with the next
+    # prompt's head
+    mixed_lens = [67, 93, 129, 90, 61, 114, 81, 126,
+                  121, 70, 95, 106]
     # a wider resident fleet makes the admission stall story concrete:
     # every batch-1 full-prompt prefill blocks FOUR live decode rows
     m_slots = max(args.slots, 4)
@@ -245,10 +255,16 @@ def main(argv=None) -> int:
                  for i, L in enumerate(mixed_lens)]
 
     def mixed_requests():
-        return [make_request(p) for p in m_prompts]
+        # two priority classes so the per-class TTFT/queue-wait
+        # percentiles (FleetMetrics.per_class) show up in the rows; the
+        # FIFO composer ignores the classes, stop decisions are
+        # class-invariant either way
+        return [make_request(p, priority=(1 if i % 3 == 0 else 0))
+                for i, p in enumerate(m_prompts)]
 
-    # IDENTICAL pool both sides: equal KV HBM, only the prefill schedule
-    # differs (admission-time full prompt vs token-budget chunks)
+    # IDENTICAL pool everywhere: equal KV HBM, only the prefill schedule
+    # differs (admission-time full prompt vs token-budget chunks, one
+    # request per chunk vs packed multi-request chunks)
     adm_sched = OrcaScheduler(model, params, pc, theta, mcfg_serve,
                               n_slots=m_slots, paged=True, block_size=bs,
                               num_blocks=m_blocks)
@@ -256,25 +272,47 @@ def main(argv=None) -> int:
     done_a, fleet_a = best_of(lambda: adm_sched.run(mixed_requests()))
     chk_sched = OrcaScheduler(model, params, pc, theta, mcfg_serve,
                               n_slots=m_slots, paged=True, block_size=bs,
-                              num_blocks=m_blocks, chunk_tokens=chunk)
+                              num_blocks=m_blocks, chunk_tokens=chunk,
+                              pack_chunks=False)
     chk_sched.run(mixed_requests())
     done_k, fleet_k = best_of(lambda: chk_sched.run(mixed_requests()))
+    # --- packed vs single-request chunks at EQUAL token budget ------------
+    pk_sched = OrcaScheduler(model, params, pc, theta, mcfg_serve,
+                             n_slots=m_slots, paged=True, block_size=bs,
+                             num_blocks=m_blocks, chunk_tokens=chunk,
+                             pack_chunks=True)
+    assert pk_sched.token_budget == chk_sched.token_budget
+    pk_sched.run(mixed_requests())
+    done_x, fleet_x = best_of(lambda: pk_sched.run(mixed_requests()))
     stop_a = np.array([r.stop_step for r in done_a])
     stop_k = np.array([r.stop_step for r in done_k])
+    stop_x = np.array([r.stop_step for r in done_x])
     assert (stop_a == stop_k).all(), \
         f"chunked prefill changed stop decisions: {stop_a} vs {stop_k}"
-    assert chk_sched._engine.compile_counts()["step"] == 1
-    assert chk_sched._engine.compile_counts()["admission_prefill"] == 0
+    assert (stop_k == stop_x).all(), \
+        f"packed chunks changed stop decisions: {stop_k} vs {stop_x}"
+    for sched_i in (chk_sched, pk_sched):
+        assert sched_i._engine.compile_counts()["step"] == 1
+        assert sched_i._engine.compile_counts()["admission_prefill"] == 0
     stall_ratio = fleet_a.stall_ms_p99 / max(fleet_k.stall_ms_p99, 1e-9)
     ttft_ratio = fleet_a.ttft_ms_p99 / max(fleet_k.ttft_ms_p99, 1e-9)
-    print(f"[throughput] chunked == admission stop decisions on mixed "
-          f"workload ({stop_k.tolist()}); KV budget {hbm_mixed / 1e6:.2f} "
-          f"MB each, ONE step executable, {fleet_k.prefill_chunks} chunks "
-          f"of {chunk}")
+    packed_ratio = (fleet_x.requests_per_s
+                    / max(fleet_k.requests_per_s, 1e-9))
+    print(f"[throughput] packed == chunked == admission stop decisions on "
+          f"mixed workload ({stop_k.tolist()}); KV budget "
+          f"{hbm_mixed / 1e6:.2f} MB each, ONE step executable, "
+          f"{fleet_k.prefill_chunks} chunks of {chunk} single vs "
+          f"{fleet_x.prefill_chunks} packed ({fleet_x.packed_chunks} "
+          "multi-request)")
     print(f"[throughput] p99 decode stall {fleet_a.stall_ms_p99:.2f} ms -> "
           f"{fleet_k.stall_ms_p99:.2f} ms ({stall_ratio:.2f}x), p99 TTFT "
           f"{fleet_a.ttft_ms_p99:.1f} -> {fleet_k.ttft_ms_p99:.1f} ms "
           f"({ttft_ratio:.2f}x)")
+    print(f"[throughput] packed vs single-chunk (equal budget "
+          f"{pk_sched.token_budget}): {packed_ratio:.2f}x requests/s "
+          f"({fleet_x.requests_per_s:.2f} vs {fleet_k.requests_per_s:.2f}), "
+          f"p99 TTFT {fleet_k.ttft_ms_p99:.1f} -> "
+          f"{fleet_x.ttft_ms_p99:.1f} ms")
 
     util_b = base.active_slot_steps / max(base.total_slot_steps, 1)
     steps_s = fleet.engine_steps / max(fleet.wall_time_s, 1e-9)
@@ -293,14 +331,18 @@ def main(argv=None) -> int:
          "kv_mb": hbm_paged / 1e6, "wall_s": fleet_p.wall_time_s},
         {"mode": "admission-prefill-mixed", **fleet_a.row(),
          "kv_mb": hbm_mixed / 1e6, "wall_s": fleet_a.wall_time_s},
-        {"mode": "chunked-prefill-mixed", **fleet_k.row(),
+        {"mode": "single-chunk-mixed", **fleet_k.row(),
          "kv_mb": hbm_mixed / 1e6, "chunk_tokens": chunk,
          "wall_s": fleet_k.wall_time_s},
+        {"mode": "packed-chunk-mixed", **fleet_x.row(),
+         "kv_mb": hbm_mixed / 1e6, "chunk_tokens": chunk,
+         "wall_s": fleet_x.wall_time_s},
     ]
     print_table("serving throughput (same lambda*, same stop decisions)",
                 rows, ("mode", "engine_steps", "requests_per_s",
                        "slot_utilization", "prefill_skips",
-                       "stall_ms_p99", "ttft_ms_p99", "wall_s"))
+                       "stall_ms_p99", "ttft_ms_p99", "packed_chunks",
+                       "wall_s"))
 
     speedup = rows[1]["requests_per_s"] / max(rows[0]["requests_per_s"], 1e-9)
     probe_ratio = steps_s / max(steps_s_ref, 1e-9)
@@ -316,7 +358,7 @@ def main(argv=None) -> int:
           f"{fleet_d.requests_per_s:.2f})")
 
     report = {
-        "schema": 3,
+        "schema": 4,
         "quick": QUICK,
         "rows": rows,
         # the gate requires these BYTE-IDENTICAL against the baseline: the
@@ -327,6 +369,7 @@ def main(argv=None) -> int:
             "paged_prefix": stop_p.tolist(),
             "mixed_admission": stop_a.tolist(),
             "mixed_chunked": stop_k.tolist(),
+            "mixed_packed": stop_x.tolist(),
         },
         # every metric must stay >= min_frac * baseline value; tolerances
         # live IN the baseline so re-baselining is an explicit commit
@@ -346,6 +389,10 @@ def main(argv=None) -> int:
                     {"value": stall_ratio, "min_frac": 0.4},
                 "chunked_mixed_requests_per_s":
                     {"value": fleet_k.requests_per_s, "min_frac": 0.3},
+                # packed composer: requests/s of packed over single-request
+                # chunks at equal token budget and equal KV HBM
+                "packed_vs_single_chunk":
+                    {"value": packed_ratio, "min_frac": 0.75},
             },
         },
     }

@@ -84,6 +84,8 @@ def engine(model, params, calibrator: Calibrator, *,
            num_blocks: Optional[int] = None,
            chunk_tokens: Optional[int] = None,
            token_budget: Optional[int] = None,
+           policy=None, pack_chunks: bool = True,
+           pack_max: int = 4,
            **serve_kwargs) -> OrcaScheduler:
     """Build a continuous-batching ``OrcaScheduler`` serving the calibrated
     procedure.
@@ -103,10 +105,18 @@ def engine(model, params, calibrator: Calibrator, *,
 
     ``chunk_tokens=N`` enables chunked prefill (stall-free serving): prompt
     prefill becomes schedulable work — each engine iteration packs every
-    resident decode token plus up to N prompt tokens of the head PREFILL
-    request (``token_budget`` tokens per step total), instead of a batch-1
-    full-prompt prefill stalling the fleet at admission.  Stop decisions
-    are unchanged; TTFT/stall tails and per-prompt-length recompiles go
+    resident decode token plus up to N prompt tokens of mid-prefill
+    residents (``token_budget`` tokens per step total), instead of a
+    batch-1 full-prompt prefill stalling the fleet at admission.  With
+    ``pack_chunks`` (the default) one fused chunk carries tokens of up to
+    ``pack_max`` requests — the tail of one prompt piggybacked with the
+    head of the next, block-diagonally isolated — so short prompt tails
+    don't leave budget on the table; ``pack_chunks=False`` restores the
+    one-request-per-chunk composer through the same step executable.
+    ``policy`` picks the scheduling policy ("fifo", "priority", "ttft" or
+    a ``repro.serving.SchedulingPolicy`` instance): admission order and
+    the per-step prefill share.  Stop decisions are unchanged by ANY of
+    these knobs; TTFT/stall tails and per-prompt-length recompiles go
     away.
     """
     pc, theta = calibrator.serving_params()
@@ -124,7 +134,8 @@ def engine(model, params, calibrator: Calibrator, *,
                          n_slots=n_slots, cache_len=cache_len,
                          paged=paged, block_size=block_size,
                          num_blocks=num_blocks, chunk_tokens=chunk_tokens,
-                         token_budget=token_budget)
+                         token_budget=token_budget, policy=policy,
+                         pack_chunks=pack_chunks, pack_max=pack_max)
 
 
 def serve_requests(scheduler: OrcaScheduler, prompts: np.ndarray):

@@ -2,12 +2,14 @@ from repro.kernels.ops import (ProbeStepOut, default_interpret,
                                flash_attention, flash_decode,
                                make_unroll_kernel, on_tpu,
                                paged_flash_decode,
+                               paged_flash_packed_chunk,
                                paged_flash_prefill_chunk,
                                serving_probe_step,
                                ttt_probe_batched, ttt_probe_scan, wkv_scan)
 
 __all__ = ["ProbeStepOut", "default_interpret", "flash_attention",
            "flash_decode", "make_unroll_kernel", "on_tpu",
-           "paged_flash_decode", "paged_flash_prefill_chunk",
+           "paged_flash_decode", "paged_flash_packed_chunk",
+           "paged_flash_prefill_chunk",
            "serving_probe_step", "ttt_probe_batched",
            "ttt_probe_scan", "wkv_scan"]

@@ -21,6 +21,15 @@ head) scales and are dequantized per VMEM block (no HBM-sized temp).
 the C queries of a prefill chunk share each page DMA (Sarathi-style chunked
 prefill — the serving engine's unified token-budget step), emitting
 unnormalized partials the caller merges with the causal within-chunk block.
+
+``paged_flash_packed_chunk`` is the PACKED variant: one fused chunk carries
+tokens of up to R different requests (the tail of one prompt piggybacked
+with the head of the next).  Cross-request isolation is block-diagonal by
+construction — each request's tokens read the pages through their OWN
+block-table row with their own validity prefix, and the within-chunk keys
+are gated by the caller's block-diagonal chunk mask
+(``attention.packed_chunk_mask``), so tokens of different requests never
+attend each other anywhere in the fused chunk.
 """
 from __future__ import annotations
 
@@ -283,3 +292,53 @@ def paged_flash_prefill_chunk(q, k_pages, v_pages, block_tables, valid,
                                interpret=interpret)
     return (o_un.reshape(b, n_kv, g, c, d), l.reshape(b, n_kv, g, c),
             m.reshape(b, n_kv, g, c))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_flash_packed_chunk(q, k_pages, v_pages, seg, seg_tables, seg_valid,
+                             k_scale_pages=None, v_scale_pages=None, *,
+                             interpret: bool = True):
+    """Packed multi-request chunk attention over the pages.
+
+    One fused C-token chunk carries tokens of up to R requests ("segments"
+    — e.g. the tail of one prompt packed with the head of the next).  Each
+    segment r owns block-table row ``seg_tables[r]`` and validity prefix
+    ``seg_valid[r]`` ([0, its prefill progress)); ``seg[i]`` names the
+    segment token i belongs to.  The launch keeps the chunked-prefill
+    kernel's page economics: ONE q-block of all C chunk queries rides each
+    (segment, kv head, page) program, so a page is DMA'd once per chunk,
+    not once per token — then each token keeps only the partials of ITS
+    segment's pass.  Cross-request cache isolation is block-diagonal by
+    construction (a token can only ever see its own request's pages); the
+    within-chunk block (keys not yet in pages) is the caller's merge under
+    the block-diagonal ``attention.packed_chunk_mask``.
+
+    q (C, H, d); seg (C,) int32 in [0, R); seg_tables (R, nb) int32;
+    seg_valid (R, nb * bs) bool; k/v_scale_pages (P, KV, bs, 1) or None.
+
+    -> UNNORMALIZED per-token partials (o (C, KV, G, d), l (C, KV, G),
+    m (C, KV, G)) — same contract as ``paged_flash_decode``'s partials, so
+    the caller folds the within-chunk block exactly like ``extra_kv``.
+    Tokens of a segment with an all-False validity row (a prompt head with
+    no cache yet) come back with m = NEG_INF partials, which the merge
+    flushes to exact zeros.
+    """
+    c, h, d = q.shape
+    n_kv = k_pages.shape[1]
+    assert h % n_kv == 0
+    g = h // n_kv
+    r = seg_tables.shape[0]
+    # every segment's program sees the FULL C-token q-block (page DMA'd
+    # once per segment); (C,H,d) -> (R, KV, G*C, d)
+    qg = q.reshape(c, n_kv, g, d).transpose(1, 2, 0, 3).reshape(n_kv, g * c, d)
+    qg = jnp.broadcast_to(qg[None], (r, n_kv, g * c, d))
+    o_un, l, m = _paged_attend(qg, k_pages, v_pages, seg_tables, seg_valid,
+                               k_scale_pages, v_scale_pages,
+                               interpret=interpret)
+    o_un = o_un.reshape(r, n_kv, g, c, d)
+    l = l.reshape(r, n_kv, g, c)
+    m = m.reshape(r, n_kv, g, c)
+    # token i keeps the partials of its own segment's pass
+    seg = jnp.asarray(seg, jnp.int32)
+    tok = jnp.arange(c)
+    return o_un[seg, :, :, tok], l[seg, :, :, tok], m[seg, :, :, tok]

@@ -18,6 +18,7 @@ from repro.kernels.ttt_probe import (ProbeStepOut, make_unroll_kernel,
                                      ttt_probe_scan)
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.decode_attention import (flash_decode, paged_flash_decode,
+                                             paged_flash_packed_chunk,
                                              paged_flash_prefill_chunk)
 from repro.kernels.rwkv6_scan import wkv_scan
 
@@ -35,5 +36,6 @@ def default_interpret() -> bool:
 
 __all__ = ["ProbeStepOut", "ttt_probe_scan", "ttt_probe_batched",
            "make_unroll_kernel", "serving_probe_step", "flash_attention",
-           "flash_decode", "paged_flash_decode", "paged_flash_prefill_chunk",
-           "wkv_scan", "on_tpu", "default_interpret"]
+           "flash_decode", "paged_flash_decode", "paged_flash_packed_chunk",
+           "paged_flash_prefill_chunk", "wkv_scan", "on_tpu",
+           "default_interpret"]

@@ -139,5 +139,39 @@ def paged_prefill_chunk_ref(q, k_pages, v_pages, block_tables, valid,
             m.reshape(b, n_kv, g, c))
 
 
+def paged_packed_chunk_ref(q, k_pages, v_pages, seg, seg_tables, seg_valid,
+                           k_scale_pages=None, v_scale_pages=None):
+    """Oracle for ``paged_flash_packed_chunk``: gather each SEGMENT's pages
+    into a contiguous virtual cache via its block-table row, run the dense
+    unnormalized online softmax of every chunk token against every
+    segment's cache, then keep — per token — the partials of its own
+    segment (the block-diagonal cross-request isolation the kernel gets
+    from per-segment tables + validity prefixes).
+
+    q (C, H, d); seg (C,); seg_tables (R, nb); seg_valid (R, nb*bs)
+    -> (o (C,KV,G,d), l (C,KV,G), m (C,KV,G))."""
+    from repro.models.attention import _decode_partial
+    c, h, d = q.shape
+    n_kv = k_pages.shape[1]
+    g = h // n_kv
+    k, v = _gather_virtual_cache(k_pages, v_pages, seg_tables,
+                                 k_scale_pages, v_scale_pages)
+    # every token against every segment's cache: (R*C, KV, G, d) queries
+    r = seg_tables.shape[0]
+    qg = q.reshape(c, n_kv, g, d).astype(jnp.float32)
+    qr = jnp.broadcast_to(qg[None], (r, c, n_kv, g, d)).reshape(r * c, n_kv,
+                                                               g, d)
+    kr = jnp.repeat(k, c, axis=0)
+    vr = jnp.repeat(v, c, axis=0)
+    valid = jnp.repeat(seg_valid, c, axis=0)
+    o, l, m = _decode_partial(qr, kr, vr, valid)
+    o = o.reshape(r, c, n_kv, g, d)
+    l = l.reshape(r, c, n_kv, g)
+    m = m.reshape(r, c, n_kv, g)
+    tok = jnp.arange(c)
+    seg = jnp.asarray(seg, jnp.int32)
+    return o[seg, tok], l[seg, tok], m[seg, tok]
+
+
 def wkv_scan_ref(r, k, v, w, u, s0):
     return _rwkv6.wkv_scan(r, k, v, w, u, s0)

@@ -92,6 +92,20 @@ def main(argv=None) -> int:
                          "token-budget step (0 = admission-time prefill)")
     ap.add_argument("--token-budget", type=int, default=0,
                     help="max tokens per unified step (0 -> slots + chunk)")
+    ap.add_argument("--policy", default="fifo",
+                    choices=("fifo", "priority", "ttft"),
+                    help="scheduling policy: admission order + per-step "
+                         "prefill share (priority classes come from "
+                         "--batch-every)")
+    ap.add_argument("--no-pack", action="store_true",
+                    help="disable multi-request chunk packing (one request "
+                         "per prefill chunk, the pre-packing composer)")
+    ap.add_argument("--pack-max", type=int, default=4,
+                    help="max requests fused into one packed chunk")
+    ap.add_argument("--batch-every", type=int, default=0,
+                    help="mark every Nth request as batch-class "
+                         "(priority 1) to exercise the priority policy "
+                         "(0 = all latency-class)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -122,12 +136,16 @@ def main(argv=None) -> int:
                         block_size=args.block_size,
                         num_blocks=args.num_blocks or None,
                         chunk_tokens=args.chunk_tokens or None,
-                        token_budget=args.token_budget or None)
+                        token_budget=args.token_budget or None,
+                        policy=args.policy, pack_chunks=not args.no_pack,
+                        pack_max=args.pack_max)
     batch = model_inputs(cfg, jax.random.PRNGKey(args.seed + 1),
                          args.requests, args.prompt_len)
     extra_keys = [k for k in batch if k != "tokens"]
     reqs = [make_request(batch["tokens"][i],
-                         extra={k: batch[k][i:i + 1] for k in extra_keys})
+                         extra={k: batch[k][i:i + 1] for k in extra_keys},
+                         priority=(1 if args.batch_every
+                                   and i % args.batch_every == 0 else 0))
             for i in range(args.requests)]
     done, fleet = sched.run(reqs)
     for r in done:
@@ -148,8 +166,12 @@ def main(argv=None) -> int:
     print(f"[serve] latency: ttft p50/p99 {fleet.ttft_ms_p50:.1f}/"
           f"{fleet.ttft_ms_p99:.1f} ms, step stall p50/p99 "
           f"{fleet.stall_ms_p50:.1f}/{fleet.stall_ms_p99:.1f} ms"
-          + (f", {fleet.prefill_chunks} prefill chunks"
+          + (f", {fleet.prefill_chunks} prefill chunks "
+             f"({fleet.packed_chunks} packed, peak "
+             f"{fleet.peak_step_tokens} tok/step)"
              if args.chunk_tokens else " (admission-time prefill)"))
+    for key in sorted(fleet.per_class):
+        print(f"[serve]   {key}: {fleet.per_class[key]:.1f}")
 
     if args.static_baseline:
         pc, theta = calib.serving_params()

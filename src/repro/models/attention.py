@@ -411,6 +411,189 @@ def attn_prefill_chunk(q, k_new, v_new, cache_l: Dict[str, jnp.ndarray],
     return out.transpose(0, 3, 1, 2, 4).reshape(b, c, h, d).astype(dtype)
 
 
+def packed_chunk_mask(seg: jnp.ndarray, valid_tok: jnp.ndarray
+                      ) -> jnp.ndarray:
+    """Block-diagonal causal mask for a PACKED chunk's within-chunk keys:
+    token i may attend chunk token j iff both belong to the same segment
+    (request), j precedes i in the chunk (segments are laid out
+    contiguously in request order, so this is exactly per-request
+    causality) and j is a real token (padding never serves as a key).
+    seg (C,), valid_tok (C,) -> (C, C)."""
+    seg = jnp.asarray(seg, jnp.int32)
+    i = jnp.arange(seg.shape[0])
+    return ((seg[:, None] == seg[None, :])
+            & (i[None, :] <= i[:, None])
+            & jnp.asarray(valid_tok, bool)[None, :])
+
+
+def _merge_packed_block(qg, o, l, m, k_new, v_new, mask):
+    """Fold a packed chunk's own keys into per-token unnormalized partials.
+
+    qg (C,KV,G,d) f32; o (C,KV,G,d); l/m (C,KV,G); k_new/v_new (C,KV,d) —
+    the chunk's freshly-projected K/V (not yet in any cache); mask (C,C)
+    the block-diagonal chunk mask.  The packed sibling of
+    ``_merge_kv_block``: every token is its own query row with its own
+    key-visibility row.  Tokens whose cache pass was fully masked (a
+    prompt head with nothing written yet) carry m = NEG_INF partials which
+    ``exp(m - m_f)`` flushes to exact zeros here."""
+    d = qg.shape[-1]
+    kb = k_new.transpose(1, 0, 2).astype(jnp.float32)      # (KV, C, d)
+    vb = v_new.transpose(1, 0, 2).astype(jnp.float32)
+    s = jnp.einsum("ckgd,ktd->ckgt", qg, kb) \
+        / jnp.sqrt(d).astype(jnp.float32)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    m_x = jnp.max(s, axis=-1)
+    m_f = jnp.maximum(m, m_x)
+    w_c = jnp.exp(m - m_f)
+    p = jnp.exp(s - m_f[..., None])
+    p = jnp.where(mask[:, None, None, :], p, 0.0)
+    o = o * w_c[..., None] + jnp.einsum("ckgt,ktd->ckgd", p, vb)
+    l = l * w_c + jnp.sum(p, axis=-1)
+    return o, l
+
+
+def attn_prefill_packed(q, k_new, v_new, cache_l: Dict[str, jnp.ndarray],
+                        seg: jnp.ndarray, seg_starts: jnp.ndarray,
+                        chunk_mask: jnp.ndarray, dtype, *, rows=None,
+                        seg_tables=None, impl: Optional[str] = None,
+                        interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Packed multi-request chunk attention: C chunk tokens belonging to up
+    to R requests ("segments") each attend THEIR OWN request's
+    already-written cache positions plus, under the block-diagonal
+    ``chunk_mask``, the chunk tokens of their own segment that precede
+    them.  Tokens of different requests never attend each other — the
+    cross-request structure is block-diagonal end to end.
+
+    q (C, H, d); k_new/v_new (C, KV, d) — the chunk's own K/V (not yet in
+    the cache); seg (C,) segment id per token; seg_starts (R,) each
+    segment's prefill progress (its readable-cache prefix); cache_l —
+    per-layer dense cache (Bfull, KV, S, dh) read through ``rows`` (C,)
+    per-token batch lanes, or paged pools (P, KV, bs, dh) read through
+    ``seg_tables`` (R, nb) per-segment block-table rows.  Returns
+    (C, H, d).
+
+    The paged path mirrors ``attn_prefill_chunk``: ``jnp`` gathers pages
+    and runs ONE softmax over [cache | chunk] per token (numerically the
+    full-prefill shape), ``pallas`` runs ``paged_flash_packed_chunk``
+    (each page DMA'd once per segment for the whole chunk) and folds the
+    within-chunk block into its unnormalized partials."""
+    c, h, d = q.shape
+    n_kv = k_new.shape[1]
+    g = h // n_kv
+    qg = q.reshape(c, n_kv, g, d).astype(jnp.float32)
+    kb = k_new.transpose(1, 0, 2).astype(jnp.float32)      # (KV, C, d)
+    vb = v_new.transpose(1, 0, 2).astype(jnp.float32)
+    seg = jnp.asarray(seg, jnp.int32)
+    seg_starts = jnp.asarray(seg_starts, jnp.int32)
+    paged = seg_tables is not None
+    impl = impl or (default_paged_impl() if paged else "jnp")
+    if paged and impl == "pallas":
+        from repro.kernels import ops as K           # deferred: no cycle
+        interp = K.default_interpret() if interpret is None else interpret
+        bs = cache_l["k"].shape[2]
+        n_virtual = seg_tables.shape[1] * bs
+        seg_valid = jnp.arange(n_virtual)[None, :] < seg_starts[:, None]
+        o, l, m = K.paged_flash_packed_chunk(
+            q.astype(jnp.float32), cache_l["k"], cache_l["v"], seg,
+            seg_tables, seg_valid, cache_l.get("k_scale"),
+            cache_l.get("v_scale"), interpret=interp)
+        o, l = _merge_packed_block(qg, o, l, m, k_new, v_new, chunk_mask)
+        out = o / jnp.maximum(l, 1e-30)[..., None]
+    else:
+        if paged:
+            k_c, v_c = gather_page_rows(cache_l, seg_tables[seg])
+        else:
+            k_c, v_c = gather_cache_rows(cache_l, rows)
+        valid = jnp.arange(k_c.shape[2])[None, :] < seg_starts[seg][:, None]
+        scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+        sc_c = jnp.einsum("ckgd,cksd->ckgs", qg, k_c) * scale
+        sc_c = jnp.where(valid[:, None, None, :], sc_c, NEG_INF)
+        sc_n = jnp.einsum("ckgd,ktd->ckgt", qg, kb) * scale
+        sc_n = jnp.where(chunk_mask[:, None, None, :], sc_n, NEG_INF)
+        # ONE softmax over [cache | chunk] per token — the same full-row
+        # softmax shape as attn_prefill_chunk, so packed == unpacked ==
+        # full prefill up to reduction order
+        p = jax.nn.softmax(jnp.concatenate([sc_c, sc_n], axis=-1), axis=-1)
+        s_len = k_c.shape[2]
+        out = jnp.einsum("ckgs,cksd->ckgd", p[..., :s_len], v_c) \
+            + jnp.einsum("ckgt,ktd->ckgd", p[..., s_len:], vb)
+    return out.reshape(c, h, d).astype(dtype)
+
+
+def cache_write_packed(cache: Dict[str, jnp.ndarray], ks: jnp.ndarray,
+                       vs: jnp.ndarray, rows: jnp.ndarray,
+                       wpos: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Write a PACKED chunk's K/V for ALL layers into a dense stacked
+    cache: every chunk token targets its own (batch lane, position).
+
+    cache (L,B,KV,S,dh); ks/vs (L,KV,C,dh); rows (C,) per-token batch
+    lanes; wpos (C,) per-token target positions — padding tokens are
+    routed out of range (>= S) and dropped by the scatter."""
+    rows = jnp.asarray(rows, jnp.int32)
+    wpos = jnp.asarray(wpos, jnp.int32)
+
+    def upd(buf, val):
+        # advanced indices (lane, position) at axes 1 and 3 move to the
+        # front: the scattered value is (C, L, KV, dh)
+        return buf.at[:, rows, :, wpos, :].set(
+            val.transpose(2, 0, 1, 3).astype(buf.dtype), mode="drop")
+
+    out = dict(cache)
+    if "k_scale" in cache:
+        kq, ksc = quantize_kv(ks)
+        vq, vsc = quantize_kv(vs)
+        out["k"] = upd(cache["k"], kq)
+        out["v"] = upd(cache["v"], vq)
+        out["k_scale"] = upd(cache["k_scale"], ksc)
+        out["v_scale"] = upd(cache["v_scale"], vsc)
+    else:
+        out["k"] = upd(cache["k"], ks.astype(cache["k"].dtype))
+        out["v"] = upd(cache["v"], vs.astype(cache["v"].dtype))
+    return out
+
+
+def cache_write_packed_paged(cache: Dict[str, jnp.ndarray], ks: jnp.ndarray,
+                             vs: jnp.ndarray, tok_tables: jnp.ndarray,
+                             wpos: jnp.ndarray, valid_tok: jnp.ndarray
+                             ) -> Dict[str, jnp.ndarray]:
+    """Paged variant of :func:`cache_write_packed`: chunk token t lands in
+    page ``tok_tables[t, wpos_t // bs]`` at offset ``wpos_t % bs``;
+    padding tokens are routed to the NULL page (page 0 — scratch by
+    construction, never allocated to a request).
+
+    cache k/v (L,P,KV,bs,dh); ks/vs (L,KV,C,dh); tok_tables (C, nb)
+    per-token block-table rows; wpos (C,) virtual positions; valid_tok
+    (C,) marks real tokens."""
+    bs = cache["k"].shape[3]
+    c = ks.shape[2]
+    tok_tables = jnp.asarray(tok_tables, jnp.int32)
+    nb = tok_tables.shape[1]
+    wpos = jnp.asarray(wpos, jnp.int32)
+    blk = jnp.clip(wpos // bs, 0, nb - 1)
+    off = wpos % bs
+    page = jnp.where(jnp.asarray(valid_tok, bool),
+                     tok_tables[jnp.arange(c), blk], 0)   # 0 = NULL page
+
+    def upd(buf, val):
+        # advanced indices (page, offset) at axes 1 and 3 -> value (C, L,
+        # KV, dh); duplicate NULL targets may race, NULL is scratch
+        return buf.at[:, page, :, off, :].set(
+            val.transpose(2, 0, 1, 3).astype(buf.dtype), mode="drop")
+
+    out = dict(cache)
+    if "k_scale" in cache:
+        kq, ksc = quantize_kv(ks)
+        vq, vsc = quantize_kv(vs)
+        out["k"] = upd(cache["k"], kq)
+        out["v"] = upd(cache["v"], vq)
+        out["k_scale"] = upd(cache["k_scale"], ksc)
+        out["v_scale"] = upd(cache["v_scale"], vsc)
+    else:
+        out["k"] = upd(cache["k"], ks.astype(cache["k"].dtype))
+        out["v"] = upd(cache["v"], vs.astype(cache["v"].dtype))
+    return out
+
+
 def prefill_to_pages(pages: Dict[str, jnp.ndarray],
                      prefill_cache: Dict[str, jnp.ndarray],
                      block_row: jnp.ndarray, n_blocks: int

@@ -46,6 +46,13 @@ class Model:
     # serving engine's unified token-budget step schedules prompt prefill
     # through it in fixed-shape chunks instead of at admission time
     prefill_chunk: Optional[Callable] = None
+    # PACKED chunked prefill (None for families without one): (cfg, params,
+    # tokens (C,), state, seg (C,), slots (R,), starts (R,), lengths (R,),
+    # block_rows=None) -> state — one fused chunk carrying tokens of up to
+    # R requests (tail of one prompt + head of the next), block-diagonal
+    # isolated; the single-segment call IS the unpacked chunk path, so the
+    # unified step serves both through ONE executable
+    prefill_packed: Optional[Callable] = None
 
     @property
     def supports_paged(self) -> bool:
@@ -53,7 +60,7 @@ class Model:
 
     @property
     def supports_chunked(self) -> bool:
-        return self.prefill_chunk is not None
+        return self.prefill_chunk is not None and self.prefill_packed is not None
 
     # ------------------------------------------------------------------
     def init(self, rng) -> Any:
@@ -184,7 +191,8 @@ def _build_dense(cfg: ModelConfig) -> Model:
                  init_decode_state=init_decode_state,
                  decode_geometry=geom,
                  init_paged_state=init_paged_state,
-                 prefill_chunk=transformer.prefill_chunk)
+                 prefill_chunk=transformer.prefill_chunk,
+                 prefill_packed=transformer.prefill_packed_chunk)
 
 
 def _build_rwkv(cfg: ModelConfig) -> Model:

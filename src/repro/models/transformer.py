@@ -233,6 +233,92 @@ def prefill_chunk(cfg, params, tokens, state, rows, pos_start, chunk_len,
     return attn.cache_write_chunk(state, ks, vs, rows, pos_start, chunk_len)
 
 
+def layer_prefill_packed(cfg, p, x, cache_l, rows, seg_tables, positions,
+                         seg, seg_starts, chunk_mask):
+    """One layer of PACKED chunked prefill: x (1, C, d) holds C tokens of
+    up to R requests at per-token absolute ``positions`` (C,); each token
+    attends its own request's readable cache prefix plus its own segment's
+    preceding chunk tokens (``chunk_mask``).  Returns (x', (k, v)) with
+    k/v (KV, C, dh) for the per-token cache write outside the scan."""
+    _, c, d = x.shape
+    h = apply_norm(cfg, p["ln1"], x)
+    q, k, v = _qkv(cfg, p["attn"], h)
+    q = q.reshape(1, c, cfg.n_heads, cfg.d_head)
+    k = k.reshape(1, c, cfg.n_kv_heads, cfg.d_head)
+    v = v.reshape(1, c, cfg.n_kv_heads, cfg.d_head)
+    q = apply_rope(q, positions[None], cfg.rope_theta, cfg.rotary_pct)
+    k = apply_rope(k, positions[None], cfg.rope_theta, cfg.rotary_pct)
+    o = attn.attn_prefill_packed(q[0], k[0], v[0], cache_l, seg, seg_starts,
+                                 chunk_mask, x.dtype, rows=rows,
+                                 seg_tables=seg_tables)
+    o = o.reshape(1, c, cfg.attn_out_dim) @ p["attn"]["wo"].astype(x.dtype)
+    x = x + o
+    h = apply_norm(cfg, p["ln2"], x)
+    if cfg.moe is not None:
+        m, _ = moe_mod.moe_block(p["mlp"], h, cfg)
+    else:
+        m = mlp_apply(cfg, p["mlp"], h)
+    return x + m, (k[0].transpose(1, 0, 2), v[0].transpose(1, 0, 2))
+
+
+def prefill_packed_chunk(cfg, params, tokens, state, seg, slots, starts,
+                         lengths, block_rows=None):
+    """PACKED chunked prefill: run one fused C-token chunk carrying prompt
+    tokens of up to R requests through the stack and scatter each token's
+    K/V into ITS OWN request's resident cache.
+
+    tokens (C,) int32 — the chunk, segments laid out contiguously in
+    request order, zero-padded at the tail; seg (C,) int32 — segment id
+    per token; slots (R,) batch rows; starts (R,) each segment's prefill
+    progress (= its readable cache prefix AND the absolute position of its
+    first chunk token); lengths (R,) tokens each segment contributes (0 =
+    unused segment).  Dense states scatter through per-token (lane,
+    position); a state carrying ``block_tables`` writes through
+    ``block_rows`` (R, nb), each segment's reserved physical pages.  All
+    of seg/slots/starts/lengths are traced data, so ONE compiled
+    executable covers every packing shape of every prompt length — the
+    single-segment call IS the unpacked chunk path.  Returns the updated
+    state."""
+    c = tokens.shape[0]
+    seg = jnp.asarray(seg, jnp.int32)
+    slots = jnp.asarray(slots, jnp.int32)
+    starts = jnp.asarray(starts, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(lengths)[:-1]])
+    off = jnp.arange(c, dtype=jnp.int32) - offsets[seg]
+    valid_tok = (off >= 0) & (off < lengths[seg])
+    positions = starts[seg] + off                        # (C,)
+    rows = slots[seg]                                    # (C,)
+    chunk_mask = attn.packed_chunk_mask(seg, valid_tok)
+    x = embed_tokens(cfg, params, tokens[None])          # (1, C, d)
+    paged = "block_tables" in state
+    if paged:
+        assert block_rows is not None, "paged packed prefill needs block rows"
+        scanned = {k: v for k, v in state.items() if k != "block_tables"}
+        seg_tables = jnp.asarray(block_rows, jnp.int32)        # (R, nb)
+    else:
+        scanned = state
+        n_virtual = state["k"].shape[3]      # dense padding-drop sentinel
+        seg_tables = None
+
+    def body(x, xs):
+        p_l, cache_l = xs
+        x, kv = layer_prefill_packed(cfg, p_l, x, cache_l, rows, seg_tables,
+                                     positions, seg, starts, chunk_mask)
+        return x, kv
+
+    _, (ks, vs) = jax.lax.scan(body, x, (params["layers"], scanned))
+    # ks/vs (L, KV, C, dh): one per-token write for all layers
+    if paged:
+        pages = attn.cache_write_packed_paged(scanned, ks, vs,
+                                              seg_tables[seg],
+                                              positions, valid_tok)
+        return dict(pages, block_tables=state["block_tables"])
+    wpos = jnp.where(valid_tok, positions, n_virtual)    # padding dropped
+    return attn.cache_write_packed(state, ks, vs, rows, wpos)
+
+
 # ---------------------------------------------------------------------------
 # Embedding / logits
 

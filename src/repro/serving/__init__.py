@@ -1,4 +1,5 @@
-from repro.serving.engine import (ChunkWork, ContinuousServingEngine,
+from repro.serving.engine import (ChunkSeg, ChunkWork,
+                                  ContinuousServingEngine,
                                   ProbeState, ServeConfig, ServeResult,
                                   ServingEngine, SlotStepView,
                                   StaticQueueResult, chunk_supported,
@@ -8,19 +9,26 @@ from repro.serving.engine import (ChunkWork, ContinuousServingEngine,
                                   reset_probe_slot, serve_queue_static)
 from repro.serving.kv_pool import (NULL_BLOCK, BlockPool, PrefixEntry,
                                    blocks_needed, prompt_key)
+from repro.serving.policy import (ComposeView, FIFOPolicy, PriorityPolicy,
+                                  SchedulingPolicy, TTFTAwarePolicy,
+                                  make_policy)
 from repro.serving.replay import (replay_model, replay_params,
                                   replay_requests, served_stop_times)
 from repro.serving.request import (FleetMetrics, Request, RequestState,
                                    make_request)
 from repro.serving.scheduler import OrcaScheduler
 
-__all__ = ["BlockPool", "ChunkWork", "ContinuousServingEngine",
+__all__ = ["BlockPool", "ChunkSeg", "ChunkWork", "ComposeView",
+           "ContinuousServingEngine", "FIFOPolicy",
            "FleetMetrics", "NULL_BLOCK", "OrcaScheduler", "PrefixEntry",
-           "ProbeState", "Request", "RequestState", "ServeConfig",
+           "PriorityPolicy", "ProbeState", "Request", "RequestState",
+           "SchedulingPolicy", "ServeConfig",
            "ServeResult", "ServingEngine", "SlotStepView",
-           "StaticQueueResult", "blocks_needed", "chunk_supported",
+           "StaticQueueResult", "TTFTAwarePolicy", "blocks_needed",
+           "chunk_supported",
            "chunked_prefill", "extract_trajectories", "init_probe_state",
-           "inject_prefill", "make_request", "make_serve_step",
+           "inject_prefill", "make_policy", "make_request",
+           "make_serve_step",
            "prefix_len", "probe_update", "prompt_key", "replay_model",
            "replay_params", "replay_requests", "reset_probe_slot",
            "serve_queue_static", "served_stop_times"]

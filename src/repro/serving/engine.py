@@ -126,15 +126,34 @@ def inject_prefill(model: Model, params, state, batch_one: Dict[str, jnp.ndarray
         state, sub)
 
 
-class ChunkWork(NamedTuple):
-    """Host-side descriptor of one prefill chunk for the unified step:
-    process prompt positions [start, start + length) of the request
-    resident in batch row ``slot``."""
+class ChunkSeg(NamedTuple):
+    """One request's contribution to a (possibly packed) prefill chunk:
+    prompt positions [start, start + length) of the request resident in
+    batch row ``slot``."""
     slot: int
     tokens: np.ndarray               # (S,) the FULL prompt token ids
     start: int
     length: int
     row: Optional[np.ndarray] = None  # paged: the request's physical pages
+
+
+class ChunkWork(NamedTuple):
+    """Host-side descriptor of one fused prefill chunk for the unified
+    step: up to ``engine.max_pack`` segments of DIFFERENT requests packed
+    back to back (Sarathi-style piggybacking — the tail of one prompt
+    rides with the head of the next), block-diagonally isolated on device.
+    A single-segment chunk is exactly the unpacked PR-4 chunk."""
+    segs: Tuple[ChunkSeg, ...]
+
+    @classmethod
+    def single(cls, slot: int, tokens: np.ndarray, start: int, length: int,
+               row: Optional[np.ndarray] = None) -> "ChunkWork":
+        """One-request chunk (the unpacked composer shape)."""
+        return cls(segs=(ChunkSeg(slot, tokens, start, length, row),))
+
+    @property
+    def total_tokens(self) -> int:
+        return sum(s.length for s in self.segs)
 
 
 def chunk_supported(model: Model, inputs: Dict[str, jnp.ndarray]) -> bool:
@@ -277,14 +296,18 @@ def make_serve_step(model: Model, pc: ProbeConfig, cfg: ServeConfig,
     With ``chunk_tokens > 0`` the step becomes the UNIFIED token-budget
     step (Sarathi-style chunked prefill): it takes a 7th argument ``chunk``
     — a fixed-shape descriptor of up to ``chunk_tokens`` pending prompt
-    tokens of ONE mid-prefill request — and runs ``model.prefill_chunk``
-    for them before the decode of every slot, all in one executable
-    whatever the prompt length.  Mid-prefill slots ride the decode as
-    parked no-op rows (probe ``stopped=True`` — the boundary gate already
-    keeps the probe kernel off them) and, with ``mask_stopped_writes``,
-    their dense no-op K/V write is dropped so it can never clobber
-    chunk-written prompt K/V (paged parked rows already write the NULL
-    page)."""
+    tokens belonging to up to ``max_pack`` mid-prefill requests (a PACKED
+    chunk: the tail of one prompt piggybacked with the head of the next,
+    block-diagonally isolated) — and runs ``model.prefill_packed`` for
+    them before the decode of every slot, all in one executable whatever
+    the prompt lengths or packing.  A single-segment chunk is the unpacked
+    PR-4 path; segment count, lengths and positions are all traced data,
+    so packed and unpacked serving share ONE executable.  Mid-prefill
+    slots ride the decode as parked no-op rows (probe ``stopped=True`` —
+    the boundary gate already keeps the probe kernel off them) and, with
+    ``mask_stopped_writes``, their dense no-op K/V write is dropped so it
+    can never clobber chunk-written prompt K/V (paged parked rows already
+    write the NULL page)."""
     mcfg = model.cfg
 
     def decode_probe(params, theta, token, cache, pos, st: ProbeState):
@@ -307,16 +330,16 @@ def make_serve_step(model: Model, pc: ProbeConfig, cfg: ServeConfig,
             return decode_probe(params, theta, token, cache, pos, st)
         return serve_step
 
-    assert model.prefill_chunk is not None, \
-        f"{mcfg.name}: no chunked prefill for this family"
+    assert model.prefill_packed is not None, \
+        f"{mcfg.name}: no packed chunked prefill for this family"
 
     def unified_step(params, theta, token, cache, pos, st: ProbeState,
                      chunk: Dict[str, jnp.ndarray]):
         def run_chunk(cache):
-            return model.prefill_chunk(mcfg, params, chunk["tokens"], cache,
-                                       chunk["slot"], chunk["start"],
-                                       chunk["length"],
-                                       chunk.get("row"))
+            return model.prefill_packed(mcfg, params, chunk["tokens"], cache,
+                                        chunk["seg"], chunk["slots"],
+                                        chunk["starts"], chunk["lengths"],
+                                        chunk.get("rows"))
 
         # prefill work first, decode after: order is immaterial (the chunk
         # slot is parked, other slots never read its lane) but keeps the
@@ -539,7 +562,8 @@ class ContinuousServingEngine:
                  window: Optional[int] = None, *, probe_impl: str = "kernel",
                  interpret: Optional[bool] = None, paged: bool = False,
                  block_size: int = 16, num_blocks: Optional[int] = None,
-                 chunk_tokens: Optional[int] = None):
+                 chunk_tokens: Optional[int] = None,
+                 pack_max: int = 4):
         self.model, self.params, self.pc, self.theta, self.cfg = \
             model, params, pc, theta, cfg
         mcfg = model.cfg
@@ -559,9 +583,12 @@ class ContinuousServingEngine:
             self.state = model.init_decode_state(n_slots, cache_len)
         self.n_slots, self.cache_len = n_slots, cache_len
         # chunked prefill: the fused step becomes the unified token-budget
-        # step (decode every slot + up to chunk_tokens of one mid-prefill
-        # request's prompt) — ONE executable regardless of prompt length
+        # step (decode every slot + up to chunk_tokens of prompt work,
+        # PACKED across up to max_pack mid-prefill requests) — ONE
+        # executable regardless of prompt length or packing shape
         self.chunk_tokens = int(chunk_tokens or 0)
+        self.max_pack = max(min(int(pack_max), self.chunk_tokens), 1) \
+            if self.chunk_tokens else 0
         if self.chunk_tokens:
             assert window is None, "chunked prefill has no SWA ring buffer"
             assert model.supports_chunked, \
@@ -577,14 +604,16 @@ class ContinuousServingEngine:
                             mask_stopped_writes=bool(self.chunk_tokens)),
             donate_argnums=_SERVE_STEP_DONATE)
         if self.chunk_tokens:
-            null = {"tokens": jnp.zeros((1, self.chunk_tokens), jnp.int32),
-                    "start": jnp.zeros((), jnp.int32),
-                    "length": jnp.zeros((), jnp.int32),
-                    "slot": jnp.zeros((1,), jnp.int32),
+            r = self.max_pack
+            null = {"tokens": jnp.zeros((self.chunk_tokens,), jnp.int32),
+                    "seg": jnp.zeros((self.chunk_tokens,), jnp.int32),
+                    "slots": jnp.zeros((r,), jnp.int32),
+                    "starts": jnp.zeros((r,), jnp.int32),
+                    "lengths": jnp.zeros((r,), jnp.int32),
                     "active": jnp.zeros((), bool)}
             if self.paged:
-                null["row"] = jnp.full((1, self.max_blocks), NULL_BLOCK,
-                                       jnp.int32)
+                null["rows"] = jnp.full((r, self.max_blocks), NULL_BLOCK,
+                                        jnp.int32)
             self._null_chunk = null
         if self.paged:
             # the page pool is the largest serving buffer: donate it through
@@ -717,20 +746,38 @@ class ContinuousServingEngine:
         self.pos[slot] = prefix_len(self.model.cfg, batch_one, prompt_len)
 
     def _chunk_to_device(self, chunk: ChunkWork) -> Dict[str, jnp.ndarray]:
-        c = self.chunk_tokens
-        toks = np.zeros((1, c), np.int32)
-        toks[0, :chunk.length] = np.asarray(
-            chunk.tokens[chunk.start:chunk.start + chunk.length])
-        out = {"tokens": jnp.asarray(toks),
-               "start": jnp.asarray(chunk.start, jnp.int32),
-               "length": jnp.asarray(chunk.length, jnp.int32),
-               "slot": jnp.asarray([chunk.slot], jnp.int32),
-               "active": jnp.asarray(True)}
-        if self.paged:
-            row = np.full((1, self.max_blocks), NULL_BLOCK, np.int32)
-            if chunk.row is not None:
-                row[0, :len(chunk.row)] = np.asarray(chunk.row, np.int32)
-            out["row"] = jnp.asarray(row)
+        """Lower a (possibly packed) ChunkWork to the fixed-shape device
+        descriptor: segments laid out back to back in ``tokens``/``seg``,
+        per-segment (slot, start, length, pages) arrays padded to
+        ``max_pack`` rows with zero-length segments.  Trailing token
+        padding keeps the LAST segment's id, which places it past that
+        segment's length — invalid by construction, dropped at the
+        write."""
+        c, r = self.chunk_tokens, self.max_pack
+        segs = chunk.segs
+        assert 1 <= len(segs) <= r, (len(segs), r)
+        toks = np.zeros((c,), np.int32)
+        seg = np.full((c,), max(len(segs) - 1, 0), np.int32)
+        slots = np.zeros((r,), np.int32)
+        starts = np.zeros((r,), np.int32)
+        lengths = np.zeros((r,), np.int32)
+        rows = (np.full((r, self.max_blocks), NULL_BLOCK, np.int32)
+                if self.paged else None)
+        off = 0
+        for si, s in enumerate(segs):
+            assert off + s.length <= c, "packed segments exceed the chunk"
+            toks[off:off + s.length] = np.asarray(
+                s.tokens[s.start:s.start + s.length])
+            seg[off:off + s.length] = si
+            slots[si], starts[si], lengths[si] = s.slot, s.start, s.length
+            if rows is not None and s.row is not None:
+                rows[si, :len(s.row)] = np.asarray(s.row, np.int32)
+            off += s.length
+        out = {"tokens": jnp.asarray(toks), "seg": jnp.asarray(seg),
+               "slots": jnp.asarray(slots), "starts": jnp.asarray(starts),
+               "lengths": jnp.asarray(lengths), "active": jnp.asarray(True)}
+        if rows is not None:
+            out["rows"] = jnp.asarray(rows)
         return out
 
     def compile_counts(self) -> Dict[str, int]:
@@ -749,9 +796,10 @@ class ContinuousServingEngine:
     # ------------------------------------------------------------------
     def step(self, chunk: Optional[ChunkWork] = None) -> SlotStepView:
         """One fused step for every slot (vector pos): decode + probe — and,
-        in chunked mode, up to ``chunk_tokens`` prompt tokens of the ONE
-        mid-prefill request described by ``chunk`` (None = decode-only, the
-        same executable runs with an inactive chunk)."""
+        in chunked mode, up to ``chunk_tokens`` prompt tokens of up to
+        ``max_pack`` mid-prefill requests packed into ``chunk`` (None =
+        decode-only, the same executable runs with an inactive chunk);
+        several residents may finish their prefill in one step."""
         pos = jnp.asarray(self.pos, jnp.int32)
         if self.chunk_tokens:
             dev = (self._null_chunk if chunk is None

@@ -1,0 +1,180 @@
+"""Pluggable scheduling policies for the unified token-budget step.
+
+``OrcaScheduler``'s batch composer asks its policy two questions every
+iteration:
+
+* **whom to admit** (``select_admit``) — which WAITING request takes the
+  next free slot.  FIFO takes the queue head; the priority policy serves
+  latency-sensitive requests first with an anti-starvation aging guard for
+  the batch class.
+* **how much prefill** (``prefill_share``) — how many of the step's budget
+  tokens go to mid-prefill residents (the composer then packs them across
+  up to ``max_pack`` requests).  FIFO gives prefill whatever the decode
+  fleet leaves; the TTFT-aware policy widens the share when decode slots
+  are idle and throttles it when the fleet is full, tuning the
+  TTFT-vs-stall trade the committed benchmark measures.
+
+Every policy also carries the **probe-aware chunk sizing** knob
+(``probe_margin``): when at least half the running residents are within
+``probe_margin`` decoded tokens of their next probe boundary (the step
+where a stop decision can fire), the prefill share is halved so the
+boundary step — and the page reclaim an ORCA stop triggers — lands sooner
+in wall-clock.  Policies only ever move WHEN work happens, never what the
+probe sees: per-request stop decisions are schedule-invariant by the
+eviction-invariance argument (asserted across policies in
+``tests/test_packed_chunks.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Union
+
+from repro.serving.request import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class ComposeView:
+    """What a policy may observe when sizing the step's prefill share."""
+    n_running: int        # resident decode rows this step
+    n_slots: int
+    n_prefilling: int     # resident mid-prefill rows
+    n_waiting: int
+    token_budget: int
+    chunk_tokens: int
+    near_boundary: int    # running residents within probe_margin of a boundary
+
+
+class SchedulingPolicy:
+    """Base policy: FIFO admission, greedy prefill share.
+
+    ``probe_margin`` (tokens) enables probe-aware chunk sizing; None
+    disables it."""
+
+    name = "fifo"
+
+    def __init__(self, *, probe_margin: Optional[int] = None):
+        self.probe_margin = probe_margin
+
+    # -- admission -----------------------------------------------------
+    def select_admit(self, waiting: Sequence[Request], step: int) -> int:
+        """Index into ``waiting`` of the request to admit next.  Must be
+        side-effect free: the scheduler may select without admitting (a
+        paged reservation can fail and leave the queue untouched)."""
+        return 0
+
+    def on_admitted(self, waiting: Sequence[Request], idx: int) -> None:
+        """Called AFTER the request at ``idx`` was actually admitted
+        (reservation succeeded, slot assigned) and before it leaves the
+        queue — the place for aging/fairness bookkeeping, so pool-full
+        iterations that admit nobody never advance fairness clocks."""
+
+    # -- composition ---------------------------------------------------
+    def prefill_share(self, view: ComposeView) -> int:
+        """Budget tokens this step's packed prefill chunk may spend."""
+        share = min(view.chunk_tokens, view.token_budget - view.n_running)
+        return self._probe_shrink(share, view)
+
+    def _probe_shrink(self, share: int, view: ComposeView) -> int:
+        """Probe-aware chunk sizing: when at least half the running
+        residents are about to hit a probe boundary, halve the prefill
+        share so their stop decisions (and the page reclaim a stop
+        triggers) land sooner in wall-clock."""
+        if (self.probe_margin is None or view.n_running == 0
+                or share <= 1):
+            return share
+        if 2 * view.near_boundary >= view.n_running:
+            return max(share // 2, 1)
+        return share
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"{type(self).__name__}(probe_margin={self.probe_margin})"
+
+
+class FIFOPolicy(SchedulingPolicy):
+    """Strict arrival order, greedy prefill share — PR-4's composer."""
+
+    name = "fifo"
+
+
+class PriorityPolicy(SchedulingPolicy):
+    """Priority-class admission: latency-sensitive requests (lower
+    ``Request.priority``) are admitted before batch traffic, FIFO within a
+    class.  Anti-starvation aging: the queue head is never skipped more
+    than ``max_head_skips`` times — after that it is admitted regardless
+    of class, so the batch class always makes progress under a sustained
+    latency-class stream (asserted in ``tests/test_packed_chunks.py``)."""
+
+    name = "priority"
+
+    def __init__(self, *, max_head_skips: int = 8,
+                 probe_margin: Optional[int] = None):
+        super().__init__(probe_margin=probe_margin)
+        assert max_head_skips >= 1
+        self.max_head_skips = int(max_head_skips)
+        self._head_skips: Dict[int, int] = {}
+
+    def select_admit(self, waiting: Sequence[Request], step: int) -> int:
+        if self._head_skips.get(waiting[0].req_id, 0) >= self.max_head_skips:
+            return 0
+        return min(range(len(waiting)), key=lambda i: waiting[i].priority)
+
+    def on_admitted(self, waiting: Sequence[Request], idx: int) -> None:
+        # the aging clock counts ACTUAL queue-jumps only: a selection whose
+        # reservation failed admitted nobody and must not age the head
+        head = waiting[0]
+        if idx != 0:
+            self._head_skips[head.req_id] = \
+                self._head_skips.get(head.req_id, 0) + 1
+        else:
+            self._head_skips.pop(head.req_id, None)
+
+
+class TTFTAwarePolicy(SchedulingPolicy):
+    """TTFT-aware prefill sizing: while the fleet has FREE slots the
+    policy widens the prefill share to everything the budget allows (new
+    prompts reach their first token fastest exactly when there is idle
+    capacity to spare); once every slot is occupied it throttles prefill
+    to ``busy_share`` tokens per step, bounding the per-step stall each
+    decoding resident pays.  Admission stays FIFO."""
+
+    name = "ttft"
+
+    def __init__(self, *, busy_share: Optional[int] = None,
+                 probe_margin: Optional[int] = None):
+        super().__init__(probe_margin=probe_margin)
+        self.busy_share = busy_share
+
+    def prefill_share(self, view: ComposeView) -> int:
+        share = min(view.chunk_tokens, view.token_budget - view.n_running)
+        # saturated = no free slots (running and mid-prefill residents
+        # partition the fleet; prefill_share is only consulted while at
+        # least one resident is mid-prefill, so n_running alone can never
+        # reach n_slots here)
+        if view.n_running + view.n_prefilling >= view.n_slots:
+            busy = self.busy_share
+            if busy is None:
+                busy = max(view.chunk_tokens // 2, 1)
+            share = min(share, busy)
+        return self._probe_shrink(share, view)
+
+
+_POLICIES = {
+    "fifo": FIFOPolicy,
+    "priority": PriorityPolicy,
+    "ttft": TTFTAwarePolicy,
+}
+
+
+def make_policy(policy: Union[str, SchedulingPolicy, None]
+                ) -> SchedulingPolicy:
+    """Resolve a policy spec: an instance passes through, a name builds
+    the registered class with defaults, None means FIFO."""
+    if policy is None:
+        return FIFOPolicy()
+    if isinstance(policy, SchedulingPolicy):
+        return policy
+    try:
+        return _POLICIES[policy]()
+    except KeyError:
+        raise ValueError(f"unknown scheduling policy {policy!r} "
+                         f"(expected one of {sorted(_POLICIES)})") from None

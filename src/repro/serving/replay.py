@@ -85,13 +85,33 @@ def replay_model(phis: np.ndarray, *, prompt_len: int = 1,
         new = jnp.where(first, tokens[:, 0].astype(jnp.int32), traj[0, rows])
         return {"traj": traj.at[0, rows].set(new)}
 
+    def prefill_packed(cfg, params, tokens, state, seg, slots, starts,
+                       lengths, block_rows=None):
+        # packed chunk: each SEGMENT whose slice starts at position 0
+        # carries its request's trajectory id in its first chunk token
+        traj = state["traj"]
+        lengths = jnp.asarray(lengths, jnp.int32)
+        starts = jnp.asarray(starts, jnp.int32)
+        slots = jnp.asarray(slots, jnp.int32)
+        offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                   jnp.cumsum(lengths)[:-1]])
+        ids = tokens[jnp.clip(offsets, 0, tokens.shape[0] - 1)] \
+            .astype(jnp.int32)                                # (R,)
+        first = (starts == 0) & (lengths > 0)
+        new = jnp.where(first, ids, traj[0, slots])
+        # unused segments are routed out of range (scatter drops them) so
+        # their placeholder slot 0 can't race a real segment's write
+        slot_w = jnp.where(lengths > 0, slots, traj.shape[1])
+        return {"traj": traj.at[0, slot_w].set(new, mode="drop")}
+
     def init_decode_state(batch: int, cache_len: int, abstract: bool = False):
         return {"traj": jnp.zeros((1, batch), jnp.int32)}
 
     return Model(cfg=cfg, decls=None, forward=None, prefill=prefill,
                  decode_step=decode_step, init_decode_state=init_decode_state,
                  decode_geometry=lambda shape: (shape.seq_len, None),
-                 prefill_chunk=prefill_chunk)
+                 prefill_chunk=prefill_chunk,
+                 prefill_packed=prefill_packed)
 
 
 def replay_params(phis: np.ndarray):

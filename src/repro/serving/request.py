@@ -42,6 +42,10 @@ class Request:
     inputs: Dict[str, jnp.ndarray]        # batch-1 model inputs (prompt)
     prompt_len: int
     max_new_tokens: Optional[int] = None  # None -> engine default
+    # priority class for the scheduling policy: lower = more
+    # latency-sensitive (0 = interactive, 1 = batch by convention); FIFO
+    # policies ignore it, PriorityPolicy admits lower classes first
+    priority: int = 0
     req_id: int = dataclasses.field(default_factory=lambda: next(_req_counter))
 
     # lifecycle (owned by the scheduler)
@@ -56,6 +60,7 @@ class Request:
     prefill_progress: int = 0             # prompt tokens already prefilled
     first_token_step: int = -1            # engine step of the first decode token
     ttft_s: float = -1.0                  # wall-clock time to first token
+    queue_wait_s: float = -1.0            # wall-clock WAITING -> PREFILL
 
     # observations
     tokens: List[int] = dataclasses.field(default_factory=list)
@@ -85,17 +90,19 @@ class Request:
 
 
 def make_request(tokens: np.ndarray, *, extra: Optional[Dict] = None,
-                 max_new_tokens: Optional[int] = None) -> Request:
+                 max_new_tokens: Optional[int] = None,
+                 priority: int = 0) -> Request:
     """Build a Request from a 1-D prompt token array (+ optional extra
     modalities, e.g. ``patch_embeds`` / ``frames`` with a leading batch-1
-    axis)."""
+    axis).  ``priority`` is the scheduling class (lower = more
+    latency-sensitive)."""
     tokens = jnp.asarray(tokens, jnp.int32)
     assert tokens.ndim == 1, "one request = one unbatched prompt"
     inputs: Dict[str, jnp.ndarray] = {"tokens": tokens[None]}
     if extra:
         inputs.update({k: jnp.asarray(v) for k, v in extra.items()})
     return Request(inputs=inputs, prompt_len=int(tokens.shape[0]),
-                   max_new_tokens=max_new_tokens)
+                   max_new_tokens=max_new_tokens, priority=int(priority))
 
 
 @dataclasses.dataclass
@@ -126,9 +133,19 @@ class FleetMetrics:
     stall_ms_p50: float = 0.0    # per-step decode-stall percentiles
     stall_ms_p99: float = 0.0
     prefill_chunks: int = 0      # chunk launches (0 = admission-time prefill)
+    # packed-chunk composer stats (tentpole: multi-request chunks)
+    packed_chunks: int = 0       # chunk launches carrying >= 2 requests
+    peak_step_tokens: int = 0    # max decode+prefill tokens in one step
+    # per-priority-class latency: {"c<priority>_<metric>": value} for
+    # ttft_ms_p50/p99 and queue_wait_ms_p50/p99 (WAITING -> PREFILL wall
+    # time) — the observable the priority/TTFT policies tune
+    per_class: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     def row(self) -> Dict[str, float]:
         return {
+            **self.per_class,
+            "packed_chunks": self.packed_chunks,
+            "peak_step_tokens": self.peak_step_tokens,
             "requests": self.n_requests, "slots": self.n_slots,
             "engine_steps": self.engine_steps,
             "requests_per_s": self.requests_per_s,

@@ -30,13 +30,26 @@ work (the Sarathi shape): admission still reserves pages all-or-nothing,
 but instead of a batch-1 full-prompt prefill stalling the whole fleet, the
 request becomes a resident PREFILL row and the *batch composer* packs each
 engine iteration up to ``token_budget`` tokens — every resident decode
-token first, the remainder filled FIFO with up to one ``chunk_tokens``-wide
-chunk of the head PREFILL request's prompt.  No decode slot ever skips a
-step while prefill work is pending, TTFT and per-step stall tails collapse
-(FleetMetrics p50/p99), and ONE compiled step executable serves every
-prompt length.  Chunking changes *when* prefill work happens, never *what*
-the probe sees: stop decisions are identical to admission-time prefill
-(asserted in ``tests/test_chunked_prefill.py`` and the throughput gate).
+token first, the remainder filled with a PACKED prefill chunk: up to
+``chunk_tokens`` prompt tokens drawn from up to ``pack_max`` mid-prefill
+residents (the tail of one prompt piggybacked with the head of the next,
+block-diagonally isolated on device), so short prompt tails no longer
+leave budget on the table.  ``pack_chunks=False`` restores the PR-4
+one-request-per-chunk composer through the SAME step executable.  No
+decode slot ever skips a step while prefill work is pending, TTFT and
+per-step stall tails collapse (FleetMetrics p50/p99), and ONE compiled
+step executable serves every prompt length and packing shape.
+
+*Who* gets admitted and *how much* prefill rides each step is delegated to
+a pluggable ``SchedulingPolicy`` (``repro.serving.policy``): FIFO (the
+default, PR-4's composer), priority classes with anti-starvation aging
+(``Request.priority``), and a TTFT-aware policy that widens the prefill
+share when decode slots are idle — plus the probe-aware chunk-sizing knob
+that shrinks prefill when residents approach a probe boundary.  Scheduling
+changes *when* work happens, never *what* the probe sees: stop decisions
+are identical to admission-time prefill across every policy and packing
+mode (asserted in ``tests/test_chunked_prefill.py``,
+``tests/test_packed_chunks.py`` and the throughput gate).
 
 Eviction is score-invariant by construction: each slot's probe fast
 weights are reset to (W0, b0) at admission and the per-slot KV view (dense
@@ -50,16 +63,19 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from collections import deque
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core.probe import ProbeConfig
 from repro.models.registry import Model
-from repro.serving.engine import (ChunkWork, ContinuousServingEngine,
-                                  ServeConfig, chunk_supported, prefix_len)
+from repro.serving.engine import (ChunkSeg, ChunkWork,
+                                  ContinuousServingEngine, ServeConfig,
+                                  chunk_supported, prefix_len)
 from repro.serving.kv_pool import BlockPool, blocks_needed, prompt_key
+from repro.serving.policy import (ComposeView, SchedulingPolicy, make_policy)
 from repro.serving.request import FleetMetrics, Request, RequestState
 
 
@@ -85,7 +101,10 @@ class OrcaScheduler:
                  num_blocks: Optional[int] = None,
                  prefix_sharing: bool = True,
                  chunk_tokens: Optional[int] = None,
-                 token_budget: Optional[int] = None):
+                 token_budget: Optional[int] = None,
+                 policy: Union[str, SchedulingPolicy, None] = None,
+                 pack_chunks: bool = True,
+                 pack_max: int = 4):
         self.model, self.params, self.pc, self.theta, self.cfg = \
             model, params, pc, theta, cfg
         self.n_slots = n_slots
@@ -100,15 +119,41 @@ class OrcaScheduler:
         self.prefix_sharing = bool(prefix_sharing)
         # chunked prefill (Sarathi-style): prefill stops being an admission
         # event and becomes schedulable work — each engine iteration packs
-        # every resident decode token plus up to ``chunk_tokens`` of the
-        # FIFO-head PREFILL request's prompt, bounded by ``token_budget``
-        # tokens per step (default: n_slots decode tokens + one full chunk)
+        # every resident decode token plus up to ``chunk_tokens`` prompt
+        # tokens of mid-prefill residents (PACKED across up to ``pack_max``
+        # requests unless ``pack_chunks=False``), bounded by
+        # ``token_budget`` tokens per step (default: n_slots decode tokens
+        # + one full chunk)
         self.chunk_tokens = int(chunk_tokens) if chunk_tokens else None
         if self.chunk_tokens is not None and not model.supports_chunked:
+            warnings.warn(
+                f"chunk_tokens={self.chunk_tokens} ignored: model family "
+                f"{model.cfg.name!r} has no chunked/packed prefill — "
+                "serving falls back to admission-time (one-shot) prefill; "
+                "drop chunk_tokens or use a family with "
+                "supports_chunked=True to silence this",
+                RuntimeWarning, stacklevel=2)
             self.chunk_tokens = None      # family without prefill_chunk
-        self.token_budget = (int(token_budget) if token_budget
+        if token_budget is not None:
+            token_budget = int(token_budget)
+            floor = n_slots if self.chunk_tokens is not None else 1
+            if token_budget < floor:
+                raise ValueError(
+                    f"token_budget={token_budget} < n_slots={n_slots}: "
+                    "every resident decode token rides each unified step, "
+                    "so this budget can never be honored and would "
+                    "silently starve prefill; fix by raising token_budget "
+                    f"to >= n_slots (default n_slots + chunk_tokens = "
+                    f"{n_slots + (self.chunk_tokens or 0)}) or lowering "
+                    "n_slots")
+        self.token_budget = (token_budget if token_budget
                              else n_slots + (self.chunk_tokens or 0))
-        assert self.token_budget >= 1
+        # pluggable composer policy: admission order + per-step prefill
+        # share (repro.serving.policy — "fifo", "priority", "ttft", or an
+        # instance); packing is a composer property, not an executable one
+        self.policy = make_policy(policy)
+        self.pack_chunks = bool(pack_chunks)
+        self.pack_max = int(pack_max)
         self.pool: Optional[BlockPool] = None
         self._engine: Optional[ContinuousServingEngine] = None
 
@@ -145,12 +190,14 @@ class OrcaScheduler:
                     self.n_slots, cache_len, probe_impl=self.probe_impl,
                     interpret=self.interpret, paged=device_paged,
                     block_size=self.block_size, num_blocks=num_blocks,
-                    chunk_tokens=self.chunk_tokens)
+                    chunk_tokens=self.chunk_tokens,
+                    pack_max=self.pack_max)
         elif self._engine is None or self._engine.cache_len < cache_len:
             self._engine = ContinuousServingEngine(
                 self.model, self.params, self.pc, self.theta, self.cfg,
                 self.n_slots, cache_len, probe_impl=self.probe_impl,
-                interpret=self.interpret, chunk_tokens=self.chunk_tokens)
+                interpret=self.interpret, chunk_tokens=self.chunk_tokens,
+                pack_max=self.pack_max)
         return self._engine
 
     # ------------------------------------------------------------------
@@ -228,20 +275,23 @@ class OrcaScheduler:
         plans: Dict[int, _AdmitPlan] = {}         # deferred donor registry
         free = list(range(self.n_slots))
         steps = active_slot_steps = 0
-        total_tokens = n_chunks = 0
-        peak_blocks = prefill_skips = 0
+        total_tokens = n_chunks = n_packed = 0
+        peak_blocks = prefill_skips = peak_step_tokens = 0
         stalls: List[float] = []
         t0 = time.perf_counter()
 
         while waiting or running or prefilling:
             t_iter = time.perf_counter()
-            # admission: refill free slots before the next fused step; in
-            # paged mode a request that doesn't fit the pool keeps FIFO
-            # order and WAITS for an eviction to return pages.  Pages are
-            # still reserved ALL-OR-NOTHING here, whether the prompt then
-            # prefills in one admission shot or in scheduled chunks.
+            # admission: refill free slots before the next fused step; the
+            # POLICY picks whom (FIFO head / best priority class with
+            # aging) — in paged mode a request that doesn't fit the pool
+            # holds its place and WAITS for an eviction to return pages.
+            # Pages are still reserved ALL-OR-NOTHING here, whether the
+            # prompt then prefills in one admission shot or in scheduled
+            # chunks.
             while free and waiting:
-                req = waiting[0]
+                idx = self.policy.select_admit(waiting, steps)
+                req = waiting[idx]
                 plan = None
                 if self.paged:
                     plan = self._reserve(req)
@@ -253,9 +303,11 @@ class OrcaScheduler:
                                 f"pool holds {self.pool.num_usable}; nothing "
                                 "left to evict")
                         break
-                waiting.popleft()
+                self.policy.on_admitted(waiting, idx)
+                del waiting[idx]
                 slot = free.pop()
                 req.slot, req.admitted_step = slot, steps
+                req.queue_wait_s = time.perf_counter() - t0
                 req.state = RequestState.PREFILL
                 skip = plan.skip_prefill if plan is not None else False
                 if plan is not None:
@@ -293,22 +345,40 @@ class OrcaScheduler:
                     running[slot] = req
 
             # batch composer: every resident decode token rides this step;
-            # what's left of the token budget goes to the FIFO-head
-            # PREFILL request, capped at one chunk
+            # the POLICY sizes the prefill share of what's left of the
+            # token budget, and the share is PACKED across mid-prefill
+            # residents in admission order — the tail of one prompt and
+            # the head of the next fuse into one block-diagonal chunk
+            # (pack_chunks=False: one request per chunk, PR-4's composer)
             chunk = None
             if prefilling:
-                room = min(self.token_budget - len(running),
-                           eng.chunk_tokens)
-                if room > 0:
-                    slot, req = next(iter(prefilling.items()))
-                    n = min(room, req.prompt_len - req.prefill_progress)
-                    chunk = ChunkWork(
+                share = self.policy.prefill_share(self._compose_view(
+                    running, prefilling, waiting, eng))
+                share = min(share, eng.chunk_tokens,
+                            self.token_budget - len(running))
+                segs: List[ChunkSeg] = []
+                for slot, req in prefilling.items():
+                    if share <= 0 or len(segs) >= eng.max_pack:
+                        break
+                    n = min(share, req.prompt_len - req.prefill_progress)
+                    if n <= 0:
+                        continue
+                    segs.append(ChunkSeg(
                         slot=slot,
                         tokens=np.asarray(req.inputs["tokens"][0]),
                         start=req.prefill_progress, length=int(n),
                         row=(np.asarray(req.block_ids, np.int32)
-                             if eng.paged and req.block_ids else None))
+                             if eng.paged and req.block_ids else None)))
+                    share -= n
+                    if not self.pack_chunks:
+                        break
+                if segs:
+                    chunk = ChunkWork(segs=tuple(segs))
                     n_chunks += 1
+                    n_packed += int(len(segs) >= 2)
+            peak_step_tokens = max(
+                peak_step_tokens,
+                len(running) + (chunk.total_tokens if chunk else 0))
 
             view = eng.step(chunk) if chunked else eng.step()
             steps += 1
@@ -343,22 +413,25 @@ class OrcaScheduler:
                 free.append(slot)
                 del running[slot]
 
-            # prefill bookkeeping AFTER token collection: a request whose
-            # last chunk just landed decodes its first token NEXT step
+            # prefill bookkeeping AFTER token collection: every segment of
+            # the packed chunk advances; a request whose last chunk just
+            # landed decodes its first token NEXT step
             if chunk is not None:
-                req = prefilling[chunk.slot]
-                req.prefill_progress += chunk.length
-                if req.prefill_progress >= req.prompt_len:
-                    eng.finish_prefill(
-                        chunk.slot, req.inputs, req.prompt_len,
-                        block_row=(req.block_ids
-                                   if eng.paged and req.block_ids else None))
-                    del prefilling[chunk.slot]
-                    plan = plans.pop(chunk.slot, None)
-                    if plan is not None:
-                        self._register_donor(req, plan)
-                    req.state = RequestState.RUNNING
-                    running[chunk.slot] = req
+                for seg in chunk.segs:
+                    req = prefilling[seg.slot]
+                    req.prefill_progress += seg.length
+                    if req.prefill_progress >= req.prompt_len:
+                        eng.finish_prefill(
+                            seg.slot, req.inputs, req.prompt_len,
+                            block_row=(req.block_ids
+                                       if eng.paged and req.block_ids
+                                       else None))
+                        del prefilling[seg.slot]
+                        plan = plans.pop(seg.slot, None)
+                        if plan is not None:
+                            self._register_donor(req, plan)
+                        req.state = RequestState.RUNNING
+                        running[seg.slot] = req
             stalls.append((time.perf_counter() - t_iter) * 1e3)
 
         wall = max(time.perf_counter() - t0, 1e-9)
@@ -366,7 +439,28 @@ class OrcaScheduler:
                                              active_slot_steps,
                                              total_tokens, wall,
                                              peak_blocks, prefill_skips,
-                                             stalls, n_chunks)
+                                             stalls, n_chunks, n_packed,
+                                             peak_step_tokens)
+
+    # ------------------------------------------------------------------
+    def _compose_view(self, running: Dict[int, Request],
+                      prefilling: Dict[int, Request], waiting,
+                      eng: ContinuousServingEngine) -> ComposeView:
+        near = 0
+        margin = self.policy.probe_margin
+        if margin is not None and running:
+            tps = self.cfg.tokens_per_step
+            # tokens still owed before each resident's next probe boundary
+            # (the step a stop decision can fire): len(tokens) counts
+            # decoded tokens, the boundary closes every tokens_per_step
+            near = sum(1 for r in running.values()
+                       if tps - (len(r.tokens) % tps) <= margin)
+        return ComposeView(n_running=len(running), n_slots=self.n_slots,
+                           n_prefilling=len(prefilling),
+                           n_waiting=len(waiting),
+                           token_budget=self.token_budget,
+                           chunk_tokens=eng.chunk_tokens,
+                           near_boundary=near)
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -379,13 +473,29 @@ class OrcaScheduler:
                  wall: float, peak_blocks: int = 0,
                  prefill_skips: int = 0,
                  stalls: Optional[Sequence[float]] = None,
-                 prefill_chunks: int = 0) -> FleetMetrics:
+                 prefill_chunks: int = 0, packed_chunks: int = 0,
+                 peak_step_tokens: int = 0) -> FleetMetrics:
         n = len(requests)
         sav = [r.savings(self.cfg.tokens_per_step, self.cfg.max_new_tokens)
                for r in requests]
         queue = [r.queue_steps for r in requests]
         ttft = np.array([r.ttft_s for r in requests if r.ttft_s >= 0]) * 1e3
         st = np.asarray(stalls if stalls else [0.0])
+        # per-priority-class latency tails: TTFT and queue wait (WAITING ->
+        # PREFILL wall time) p50/p99 — what the priority/TTFT policies tune
+        per_class: Dict[str, float] = {}
+        for cls in sorted({r.priority for r in requests}):
+            in_cls = [r for r in requests if r.priority == cls]
+            c_ttft = np.array([r.ttft_s for r in in_cls
+                               if r.ttft_s >= 0]) * 1e3
+            c_wait = np.array([r.queue_wait_s for r in in_cls
+                               if r.queue_wait_s >= 0]) * 1e3
+            for key, arr in (("ttft_ms", c_ttft), ("queue_wait_ms", c_wait)):
+                if arr.size:
+                    per_class[f"c{cls}_{key}_p50"] = \
+                        float(np.percentile(arr, 50))
+                    per_class[f"c{cls}_{key}_p99"] = \
+                        float(np.percentile(arr, 99))
         return FleetMetrics(
             n_requests=n, n_slots=self.n_slots, engine_steps=steps,
             active_slot_steps=active_slot_steps, wall_time_s=wall,
@@ -400,4 +510,5 @@ class OrcaScheduler:
             ttft_ms_p99=float(np.percentile(ttft, 99)) if ttft.size else 0.0,
             stall_ms_p50=float(np.percentile(st, 50)),
             stall_ms_p99=float(np.percentile(st, 99)),
-            prefill_chunks=prefill_chunks)
+            prefill_chunks=prefill_chunks, packed_chunks=packed_chunks,
+            peak_step_tokens=peak_step_tokens, per_class=per_class)

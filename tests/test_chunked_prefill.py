@@ -236,7 +236,7 @@ def test_mid_prefill_slot_never_touches_probe_state(small_model):
     toks = np.asarray(prompts[1])
     n_before = int(np.asarray(eng.st.n_scores[0]))
     for start in range(0, 16, 4):
-        eng.step(ChunkWork(slot=1, tokens=toks, start=start, length=4))
+        eng.step(ChunkWork.single(slot=1, tokens=toks, start=start, length=4))
         row = {f: np.asarray(getattr(eng.st, f)[1]) for f in fields}
         for f, v in parked.items():
             np.testing.assert_array_equal(row[f], v, err_msg=f)

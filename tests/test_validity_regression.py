@@ -44,7 +44,8 @@ def noisy_splits():
             full.subset(idx[260:]))
 
 
-def _serve(calibrator, test, lam, chunk_tokens=None):
+def _serve(calibrator, test, lam, chunk_tokens=None, policy=None,
+           pack_chunks=False):
     pc, theta = calibrator.serving_params()
     cfg = ServeConfig(tokens_per_step=1,
                       max_new_tokens=int(test.lengths.max()),
@@ -57,8 +58,12 @@ def _serve(calibrator, test, lam, chunk_tokens=None):
     sched = OrcaScheduler(replay_model(test.phis), replay_params(test.phis),
                           pc, theta, cfg, n_slots=4, paged=True,
                           block_size=16, num_blocks=1 + 3 * max_blocks,
-                          chunk_tokens=chunk_tokens)
-    done, fleet = sched.run(replay_requests(test.lengths))
+                          chunk_tokens=chunk_tokens, policy=policy,
+                          pack_chunks=pack_chunks)
+    reqs = replay_requests(test.lengths)
+    for i, r in enumerate(reqs):
+        r.priority = i % 2        # two classes: exercises priority policies
+    done, fleet = sched.run(reqs)
     assert fleet.peak_blocks_in_use <= 3 * max_blocks
     return served_stop_times(done, test.lengths), fleet
 
@@ -72,9 +77,14 @@ def _assert_served_validity(calibrator, cal, test):
     np.testing.assert_array_equal(tau_srv, tau_off)
     # chunked prefill (prompt scheduled through the unified token-budget
     # step, mid-prefill admissions riding live decode) must not move a
-    # single stop: same offline equality, bit for bit
-    tau_chunk, _ = _serve(calibrator, test, lam, chunk_tokens=1)
+    # single stop — served through a PACKED PRIORITY scheduler (multi-
+    # request chunks + class-reordered admission): same offline equality,
+    # bit for bit, because scheduling moves WHEN work happens, never what
+    # the probe sees
+    tau_chunk, fleet_chunk = _serve(calibrator, test, lam, chunk_tokens=3,
+                                    policy="priority", pack_chunks=True)
     np.testing.assert_array_equal(tau_chunk, tau_off)
+    assert fleet_chunk.packed_chunks > 0, "packing never engaged"
     # and it respects the calibrated risk level on held-out data
     labels = make_labels(test, calibrator.mode)
     risk = float(S.procedure_risk(tau_srv[:, None], labels, test.mask).mean())
