@@ -28,7 +28,15 @@ be IDENTICAL across paths (asserted):
     so short prompt tails stop leaving budget on the table — higher
     requests/s and lower TTFT at byte-identical stop decisions (the
     ``packed_vs_single_chunk`` gate metric).  Rows carry the per-priority-
-    class TTFT/queue-wait percentiles (c0_* latency class, c1_* batch).
+    class TTFT/queue-wait percentiles (c0_* latency class, c1_* batch);
+  * GROUPED consensus serving vs N independent samples at EQUAL KV HBM
+    (identical paged pool): each prompt's self-consistency samples are
+    gang-admitted as one ``RequestGroup`` sharing prompt pages, and the
+    consensus stop cancels all still-running siblings the moment the
+    confidence-weighted answer vote clears the threshold — pages freed
+    mid-flight, slots refilled from the queue (the
+    ``group_consensus_vs_independent`` gate metric); gang scheduling with
+    the consensus OFF must not move a single stop decision (asserted).
 
 ``--check`` is the CI perf-regression gate: re-run, then compare against the
 committed ``results/serving_throughput.json`` baseline — stop decisions must
@@ -53,7 +61,7 @@ from repro.core.probe import ProbeConfig
 from repro.launch.serve import model_inputs, trajectories_from_model
 from repro.models import build
 from repro.serving import (OrcaScheduler, ServeConfig, ServingEngine,
-                           make_request, serve_queue_static)
+                           make_group, make_request, serve_queue_static)
 
 from benchmarks.common import QUICK, RESULTS, print_table
 
@@ -103,6 +111,11 @@ def main(argv=None) -> int:
                     help="prefill chunk width for the mixed workload "
                          "(0 -> 8 quick / 16 full)")
     ap.add_argument("--mixed-max-new", type=int, default=16)
+    # self-consistency group workload for the consensus-stop row
+    ap.add_argument("--group-prompts", type=int, default=3)
+    ap.add_argument("--group-size", type=int, default=3,
+                    help="gang-admitted samples per group")
+    ap.add_argument("--group-max-new", type=int, default=24)
     ap.add_argument("--check", action="store_true",
                     help="CI gate: compare against the committed baseline "
                          "instead of overwriting it; nonzero exit on "
@@ -314,6 +327,78 @@ def main(argv=None) -> int:
           f"p99 TTFT {fleet_k.ttft_ms_p99:.1f} -> "
           f"{fleet_x.ttft_ms_p99:.1f} ms")
 
+    # --- grouped consensus stop vs N independent samples at EQUAL KV HBM -
+    g_size = args.group_size
+    g_cache = args.prefix_prompt_len + args.group_max_new
+    assert g_cache % bs == 0, (g_cache, bs)
+    # equal budget again: the pool's TOTAL pages (null included) hold the
+    # dense lanes' bytes; the gang (leader full + siblings sharing the
+    # prompt pages) and the N independent prefix-shared samples get the
+    # exact same physical pages to race in
+    g_blocks = args.slots * g_cache // bs
+    hbm_group = kv_bytes_paged(cfg, g_blocks, bs)
+    g_prompts = jax.random.randint(jax.random.PRNGKey(args.seed + 4),
+                                   (args.group_prompts,
+                                    args.prefix_prompt_len),
+                                   0, cfg.vocab_size)
+    gcfg = ServeConfig(tokens_per_step=args.tokens_per_step,
+                       max_new_tokens=args.group_max_new, lam=float(lam),
+                       burn_in=2)
+
+    def group_reqs():
+        return [r for p in range(args.group_prompts)
+                for r in make_group(g_prompts[p], g_size, group_id=p)]
+
+    def independent_reqs():
+        # the SAME samples with no group ids: N independent requests each
+        # running to its own per-request ORCA stop / budget
+        return [make_request(g_prompts[p])
+                for p in range(args.group_prompts) for _ in range(g_size)]
+
+    # fixed consensus threshold, not LTT-calibrated, for the same reason
+    # lam falls back to 0.99: greedy siblings of a random-weight model emit
+    # identical answer streams, so consensus fires right after burn-in —
+    # this row measures the SERVING win of firing (pages freed, slots
+    # refilled); tests/test_validity_regression.py owns the calibrated
+    # group-risk guarantee
+    grp_sched = OrcaScheduler(model, params, pc, theta, gcfg,
+                              n_slots=args.paged_slots, paged=True,
+                              block_size=bs, num_blocks=g_blocks,
+                              consensus=0.9)
+    grp_sched.run(group_reqs())
+    done_g, fleet_g = best_of(lambda: grp_sched.run(group_reqs()))
+    ind_sched = OrcaScheduler(model, params, pc, theta, gcfg,
+                              n_slots=args.paged_slots, paged=True,
+                              block_size=bs, num_blocks=g_blocks)
+    ind_sched.run(independent_reqs())
+    done_i, fleet_i = best_of(lambda: ind_sched.run(independent_reqs()))
+    # grouping with the consensus OFF must not move any stop decision
+    off_sched = OrcaScheduler(model, params, pc, theta, gcfg,
+                              n_slots=args.paged_slots, paged=True,
+                              block_size=bs, num_blocks=g_blocks)
+    done_o, _ = off_sched.run(group_reqs())
+    stop_i = np.array([r.stop_step for r in done_i])
+    stop_o = np.array([r.stop_step for r in done_o])
+    assert (stop_i == stop_o).all(), \
+        f"gang scheduling changed stop decisions: {stop_i} vs {stop_o}"
+    consensus_idx = [int(g.consensus_index) for g in grp_sched.groups]
+    assert fleet_g.consensus_groups == args.group_prompts, \
+        f"only {fleet_g.consensus_groups}/{args.group_prompts} groups fired"
+    assert fleet_g.cancel_freed_blocks > 0, \
+        "consensus cancellation freed no pages"
+    grp_sched.pool.check()
+    group_ratio = (fleet_g.requests_per_s
+                   / max(fleet_i.requests_per_s, 1e-9))
+    print(f"[throughput] group consensus (size {g_size}, threshold 0.9): "
+          f"all {fleet_g.consensus_groups} groups fired at reasoning steps "
+          f"{consensus_idx}, {fleet_g.samples_cancelled} siblings cancelled "
+          f"mid-flight, {fleet_g.cancel_freed_blocks} pages freed at "
+          f"cancel, group savings {fleet_g.group_savings:.3f}, KV budget "
+          f"{hbm_group / 1e6:.2f} MB each")
+    print(f"[throughput] grouped-consensus vs {g_size}-independent: "
+          f"{group_ratio:.2f}x requests/s ({fleet_g.requests_per_s:.2f} vs "
+          f"{fleet_i.requests_per_s:.2f})")
+
     util_b = base.active_slot_steps / max(base.total_slot_steps, 1)
     steps_s = fleet.engine_steps / max(fleet.wall_time_s, 1e-9)
     steps_s_ref = fleet_ref.engine_steps / max(fleet_ref.wall_time_s, 1e-9)
@@ -337,6 +422,12 @@ def main(argv=None) -> int:
         {"mode": "packed-chunk-mixed", **fleet_x.row(),
          "kv_mb": hbm_mixed / 1e6, "chunk_tokens": chunk,
          "wall_s": fleet_x.wall_time_s},
+        {"mode": "group-consensus", **fleet_g.row(),
+         "kv_mb": hbm_group / 1e6, "group_size": g_size,
+         "wall_s": fleet_g.wall_time_s},
+        {"mode": "group-independent", **fleet_i.row(),
+         "kv_mb": hbm_group / 1e6, "group_size": 1,
+         "wall_s": fleet_i.wall_time_s},
     ]
     print_table("serving throughput (same lambda*, same stop decisions)",
                 rows, ("mode", "engine_steps", "requests_per_s",
@@ -358,7 +449,7 @@ def main(argv=None) -> int:
           f"{fleet_d.requests_per_s:.2f})")
 
     report = {
-        "schema": 4,
+        "schema": 5,
         "quick": QUICK,
         "rows": rows,
         # the gate requires these BYTE-IDENTICAL against the baseline: the
@@ -370,6 +461,11 @@ def main(argv=None) -> int:
             "mixed_admission": stop_a.tolist(),
             "mixed_chunked": stop_k.tolist(),
             "mixed_packed": stop_x.tolist(),
+            # N-independent == gang-scheduled-without-consensus (asserted
+            # above); the grouped run's consensus fire indices are part of
+            # the calibrated procedure too
+            "group_independent": stop_i.tolist(),
+            "group_consensus_index": consensus_idx,
         },
         # every metric must stay >= min_frac * baseline value; tolerances
         # live IN the baseline so re-baselining is an explicit commit
@@ -393,6 +489,13 @@ def main(argv=None) -> int:
                 # chunks at equal token budget and equal KV HBM
                 "packed_vs_single_chunk":
                     {"value": packed_ratio, "min_frac": 0.75},
+                # consensus stop: requests/s of gang-scheduled groups with
+                # mid-flight sibling cancellation over the same samples
+                # served independently, equal KV HBM
+                "group_consensus_requests_per_s":
+                    {"value": fleet_g.requests_per_s, "min_frac": 0.3},
+                "group_consensus_vs_independent":
+                    {"value": group_ratio, "min_frac": 0.6},
             },
         },
     }

@@ -23,16 +23,18 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.core.calibrator import (Calibrator, StaticCalibrator,
-                                   TTTCalibrator, make_calibrator)
+from repro.core.calibrator import (Calibrator, GroupCalibrator, GroupTrace,
+                                   StaticCalibrator, TTTCalibrator,
+                                   groups_from_trajectories, make_calibrator)
 from repro.core.pipeline import ProcedureEval, evaluate_probe
 from repro.serving.engine import ServeConfig
 from repro.serving.scheduler import OrcaScheduler
 from repro.trajectories import TrajectorySet
 
-__all__ = ["Calibrator", "StaticCalibrator", "TTTCalibrator",
+__all__ = ["Calibrator", "GroupCalibrator", "GroupTrace",
+           "StaticCalibrator", "TTTCalibrator",
            "calibrated_lambda", "engine", "evaluate", "fit",
-           "make_calibrator", "serve_requests"]
+           "groups_from_trajectories", "make_calibrator", "serve_requests"]
 
 DELTAS = (0.05, 0.1, 0.15, 0.2)
 
@@ -86,6 +88,9 @@ def engine(model, params, calibrator: Calibrator, *,
            token_budget: Optional[int] = None,
            policy=None, pack_chunks: bool = True,
            pack_max: int = 4,
+           group_size: int = 1,
+           consensus=None,
+           consensus_delta: Optional[float] = None,
            **serve_kwargs) -> OrcaScheduler:
     """Build a continuous-batching ``OrcaScheduler`` serving the calibrated
     procedure.
@@ -118,7 +123,52 @@ def engine(model, params, calibrator: Calibrator, *,
     the per-step prefill share.  Stop decisions are unchanged by ANY of
     these knobs; TTFT/stall tails and per-prompt-length recompiles go
     away.
+
+    ``group_size=N`` serves self-consistency groups: ``serve_requests``
+    expands each prompt into N gang-admitted samples sharing its prompt
+    pages, and ``consensus`` (a calibrated ``GroupCalibrator`` or a raw
+    agreement threshold in (0, 1]) enables the conformal consensus stop —
+    the moment a group's confidence-weighted answer vote clears the
+    threshold, the still-running siblings are CANCELLED mid-flight and
+    their pages/slots return to the fleet.  ``consensus_delta`` documents
+    (and cross-checks) the risk level the GroupCalibrator was calibrated
+    at.  With ``group_size=1`` or ``consensus=None`` the group layer is
+    inert: stop decisions are byte-identical to the classic engine.
     """
+    if isinstance(group_size, bool) or int(group_size) < 1:
+        raise ValueError(
+            f"group_size={group_size!r} must be an int >= 1: the number "
+            "of self-consistency samples per prompt; fix by passing a "
+            "positive count (1 disables grouping)")
+    group_size = int(group_size)
+    if group_size > n_slots:
+        raise ValueError(
+            f"group_size={group_size} > n_slots={n_slots}: gang admission "
+            "needs every sample of a group resident at once; fix by "
+            f"raising n_slots to >= {group_size} or lowering group_size")
+    if consensus is not None and group_size == 1:
+        raise ValueError(
+            "consensus= with group_size=1 can never fire (every request "
+            "is its own singleton and a lone sample never votes); fix by "
+            "passing group_size >= 2 (or grouping requests yourself via "
+            "repro.serving.make_group) or dropping consensus=")
+    if consensus_delta is not None:
+        if consensus is None:
+            raise ValueError(
+                "consensus_delta= without consensus= does nothing; fix by "
+                "passing consensus=<GroupCalibrator calibrated at delta="
+                f"{consensus_delta}> (or a float threshold, and dropping "
+                "consensus_delta)")
+        if isinstance(consensus, GroupCalibrator) \
+                and consensus.delta is not None \
+                and not math.isclose(float(consensus.delta),
+                                     float(consensus_delta)):
+            raise ValueError(
+                f"consensus_delta={consensus_delta} does not match the "
+                f"GroupCalibrator's calibrated delta={consensus.delta}; "
+                "fix by re-running GroupCalibrator.calibrate(..., delta="
+                f"{consensus_delta}) or passing consensus_delta="
+                f"{consensus.delta}")
     pc, theta = calibrator.serving_params()
     if serve is not None:
         if lam is not None or serve_kwargs:
@@ -130,17 +180,33 @@ def engine(model, params, calibrator: Calibrator, *,
         if not math.isfinite(lam):
             lam = 2.0               # sigmoid scores <= 1: never stop early
         serve = ServeConfig(lam=float(lam), **serve_kwargs)
-    return OrcaScheduler(model, params, pc, theta, serve,
-                         n_slots=n_slots, cache_len=cache_len,
-                         paged=paged, block_size=block_size,
-                         num_blocks=num_blocks, chunk_tokens=chunk_tokens,
-                         token_budget=token_budget, policy=policy,
-                         pack_chunks=pack_chunks, pack_max=pack_max)
+    sched = OrcaScheduler(model, params, pc, theta, serve,
+                          n_slots=n_slots, cache_len=cache_len,
+                          paged=paged, block_size=block_size,
+                          num_blocks=num_blocks, chunk_tokens=chunk_tokens,
+                          token_budget=token_budget, policy=policy,
+                          pack_chunks=pack_chunks, pack_max=pack_max,
+                          consensus=consensus)
+    sched.group_size = group_size       # serve_requests' expansion default
+    return sched
 
 
-def serve_requests(scheduler: OrcaScheduler, prompts: np.ndarray):
+def serve_requests(scheduler: OrcaScheduler, prompts: np.ndarray,
+                   group_size: Optional[int] = None):
     """Convenience: one Request per row of ``prompts`` (N, prompt_len),
-    driven through the scheduler.  Returns (requests, FleetMetrics)."""
+    driven through the scheduler.  ``group_size`` (default: the value the
+    scheduler was built with via ``engine(group_size=...)``) expands each
+    prompt into a gang-admitted self-consistency group.  Returns
+    (requests, FleetMetrics)."""
+    from repro.serving.groups import make_group
     from repro.serving.request import make_request
-    reqs = [make_request(np.asarray(prompts[i])) for i in range(len(prompts))]
+    if group_size is None:
+        group_size = getattr(scheduler, "group_size", 1)
+    if group_size > 1:
+        reqs = [r for i in range(len(prompts))
+                for r in make_group(np.asarray(prompts[i]), group_size,
+                                    group_id=i)]
+    else:
+        reqs = [make_request(np.asarray(prompts[i]))
+                for i in range(len(prompts))]
     return scheduler.run(reqs)

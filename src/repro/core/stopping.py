@@ -143,3 +143,102 @@ def sweep_deltas(cal, test, deltas: Sequence[float], eps: float = 0.05,
     """cal/test: (scores, labels, mask) triples. Returns list of EvalResult."""
     return [calibrate_and_evaluate(*cal, *test, delta=d, eps=eps, grid=grid)
             for d in deltas]
+
+
+# ---------------------------------------------------------------------------
+# self-consistency group consensus (group-serving subsystem)
+#
+# A group of N samples of one prompt votes at every reasoning step: each
+# sample's vote is its latest answer hash weighted by its latest smoothed
+# probe score (the probe's confidence IS the weight — no extra model).  The
+# consensus procedure A^g_lambda stops the whole group the first time the
+# top answer's weight share crosses lambda.  Like the per-sample procedure,
+# the vote trajectory does not depend on the threshold, so one pass
+# evaluates the entire LTT grid.
+
+
+def weighted_vote(scores: np.ndarray, answers: np.ndarray,
+                  active: np.ndarray):
+    """Confidence-weighted majority vote over a group's current answers.
+
+    scores/answers/active: (n,) per-sample latest smoothed probe score,
+    latest answer hash, and liveness (a sample with no recorded score yet
+    does not vote).  Returns ``(answer, agreement)`` where agreement is the
+    top answer's weight share in [0, 1].  Ties break toward the SMALLER
+    answer hash so the served and offline procedures agree bit-for-bit.
+    """
+    scores = np.asarray(scores, np.float64)
+    answers = np.asarray(answers, np.int64)
+    active = np.asarray(active, bool)
+    w = np.clip(scores, 0.0, None) * active
+    total = float(w.sum())
+    if total <= 0.0:
+        return -1, 0.0
+    uniq = np.unique(answers[active])            # sorted: first max wins tie
+    weight = np.array([float(w[(answers == a) & active].sum())
+                       for a in uniq])
+    best = int(np.argmax(weight))
+    return int(uniq[best]), float(weight[best] / total)
+
+
+def consensus_trace(scores: np.ndarray, answers: np.ndarray,
+                    lengths: np.ndarray,
+                    per_sample_tau: Optional[np.ndarray] = None):
+    """Per-step (answer_t, agreement_t) of one group's weighted vote.
+
+    scores/answers: (n, T) per-sample trajectories; lengths: (n,).  Sample
+    i's vote at step t is FROZEN at index ``min(t, freeze_i)``: after its
+    own ORCA stop (``per_sample_tau``) or budget end the sample keeps voting
+    its final answer with its final confidence — exactly what the scheduler
+    sees from an evicted sibling's recorded history.  Returns
+    ``(answer (Tg,), agreement (Tg,))`` with Tg = max(lengths).
+    """
+    scores = np.asarray(scores, np.float64)
+    answers = np.asarray(answers, np.int64)
+    lengths = np.asarray(lengths, np.int64)
+    n = scores.shape[0]
+    freeze = lengths - 1
+    if per_sample_tau is not None:
+        freeze = np.minimum(np.asarray(per_sample_tau, np.int64), freeze)
+    t_grp = int(lengths.max())
+    ans = np.full((t_grp,), -1, np.int64)
+    agr = np.zeros((t_grp,), np.float64)
+    rows = np.arange(n)
+    active = lengths > 0
+    for t in range(t_grp):
+        idx = np.minimum(t, freeze)
+        ans[t], agr[t] = weighted_vote(scores[rows, idx],
+                                       answers[rows, idx], active)
+    return ans, agr
+
+
+def consensus_stop_times(agreement: np.ndarray, grid: Sequence[float],
+                         burn_in: int = 10) -> np.ndarray:
+    """First consensus crossing per threshold: min{t >= burn_in :
+    agreement_t >= g}, or Tg (= len(agreement), never fired) per threshold.
+    Same first-crossing/burn-in semantics as the per-sample ``stop_times``.
+    """
+    agreement = np.asarray(agreement, np.float64)
+    t_grp = agreement.shape[0]
+    valid = np.ones((t_grp,), bool)
+    valid[:burn_in] = False
+    grid = np.asarray(list(grid), np.float64)
+    crossed = (agreement[:, None] >= grid[None, :]) & valid[:, None]
+    first = np.argmax(crossed, axis=0)
+    return np.where(crossed.any(axis=0), first, t_grp)
+
+
+def consensus_risk(tau_g: np.ndarray, answer_trace: np.ndarray,
+                   truth: int) -> np.ndarray:
+    """Group-level binary loss: 1{consensus fired AND its answer is wrong}.
+
+    Conservative relative to the per-sample loss: a wrong consensus is
+    charged even when it fires at the final step (the group COMMITS to the
+    vote; there is no "ran to budget" escape once it fires).  Never firing
+    is never charged — the fleet then falls back to per-sample stops.
+    """
+    tau_g = np.asarray(tau_g, np.int64)
+    t_grp = answer_trace.shape[0]
+    fired = tau_g < t_grp
+    ans = answer_trace[np.minimum(tau_g, t_grp - 1)]
+    return (fired & (ans != truth)).astype(np.float64)

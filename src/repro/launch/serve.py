@@ -106,6 +106,16 @@ def main(argv=None) -> int:
                     help="mark every Nth request as batch-class "
                          "(priority 1) to exercise the priority policy "
                          "(0 = all latency-class)")
+    ap.add_argument("--group-size", type=int, default=1,
+                    help="self-consistency samples per prompt: each request "
+                         "becomes a gang-admitted group of N samples "
+                         "sharing its prompt pages (1 = classic serving)")
+    ap.add_argument("--no-consensus", action="store_true",
+                    help="serve groups WITHOUT the consensus stop (every "
+                         "sample runs to its own per-request ORCA stop)")
+    ap.add_argument("--consensus-delta", type=float, default=0.0,
+                    help="risk level for the group-consensus LTT "
+                         "calibration (0 -> reuse --delta)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -129,6 +139,26 @@ def main(argv=None) -> int:
     lam = orca.calibrated_lambda(calib, cal, args.delta, fallback=0.99)
     print(f"[serve] LTT-calibrated lambda* = {lam:.3f}")
 
+    # group consensus: LTT-calibrate the agreement threshold over groups
+    # formed from the calibration split (group-level exchangeability),
+    # with per-sample votes frozen at the deployed per-sample stop
+    consensus = None
+    if args.group_size > 1 and not args.no_consensus:
+        c_delta = args.consensus_delta or args.delta
+        g_cal = orca.GroupCalibrator(min_votes=2, burn_in=args.burn_in)
+        traces = orca.groups_from_trajectories(cal, calib.scores(cal),
+                                               args.group_size,
+                                               seed=args.seed)
+        g_cal.calibrate(traces, c_delta, per_sample_lam=lam,
+                        per_sample_burn_in=args.burn_in)
+        if not np.isfinite(g_cal.lam):
+            # same demo fallback policy as calibrated_lambda: keep the
+            # consensus observable on tiny random-weight models
+            g_cal.lam = 0.95
+        consensus = g_cal
+        print(f"[serve] consensus threshold g* = {g_cal.lam:.3f} "
+              f"(delta={c_delta}, {len(traces)} calibration groups)")
+
     sched = orca.engine(model, params, calib, n_slots=args.slots, lam=lam,
                         tokens_per_step=args.tokens_per_step,
                         max_new_tokens=args.max_new_tokens,
@@ -138,15 +168,28 @@ def main(argv=None) -> int:
                         chunk_tokens=args.chunk_tokens or None,
                         token_budget=args.token_budget or None,
                         policy=args.policy, pack_chunks=not args.no_pack,
-                        pack_max=args.pack_max)
+                        pack_max=args.pack_max,
+                        group_size=args.group_size, consensus=consensus,
+                        consensus_delta=(args.consensus_delta or None
+                                         if consensus is not None
+                                         else None))
     batch = model_inputs(cfg, jax.random.PRNGKey(args.seed + 1),
                          args.requests, args.prompt_len)
     extra_keys = [k for k in batch if k != "tokens"]
-    reqs = [make_request(batch["tokens"][i],
-                         extra={k: batch[k][i:i + 1] for k in extra_keys},
-                         priority=(1 if args.batch_every
-                                   and i % args.batch_every == 0 else 0))
-            for i in range(args.requests)]
+    if args.group_size > 1:
+        from repro.serving import make_group
+        reqs = [r for i in range(args.requests)
+                for r in make_group(
+                    batch["tokens"][i], args.group_size, group_id=i,
+                    extra={k: batch[k][i:i + 1] for k in extra_keys},
+                    priority=(1 if args.batch_every
+                              and i % args.batch_every == 0 else 0))]
+    else:
+        reqs = [make_request(batch["tokens"][i],
+                             extra={k: batch[k][i:i + 1] for k in extra_keys},
+                             priority=(1 if args.batch_every
+                                       and i % args.batch_every == 0 else 0))
+                for i in range(args.requests)]
     done, fleet = sched.run(reqs)
     for r in done:
         print(f"[serve]   req {r.req_id}: {r.state.value:8s} "
@@ -163,6 +206,12 @@ def main(argv=None) -> int:
               f"(x{args.block_size} tokens), peak in use "
               f"{fleet.peak_blocks_in_use}, prefill skips "
               f"{fleet.prefill_skips}")
+    if args.group_size > 1:
+        print(f"[serve] groups: {fleet.consensus_groups} consensus stops "
+              f"(mean step {fleet.consensus_steps:.1f}), "
+              f"{fleet.samples_cancelled} siblings cancelled, group savings "
+              f"{fleet.group_savings:.3f}, {fleet.cancel_freed_blocks} pages "
+              "freed at cancel")
     print(f"[serve] latency: ttft p50/p99 {fleet.ttft_ms_p50:.1f}/"
           f"{fleet.ttft_ms_p99:.1f} ms, step stall p50/p99 "
           f"{fleet.stall_ms_p50:.1f}/{fleet.stall_ms_p99:.1f} ms"

@@ -7,12 +7,14 @@ from repro.serving.engine import (ChunkSeg, ChunkWork,
                                   init_probe_state, inject_prefill,
                                   make_serve_step, prefix_len, probe_update,
                                   reset_probe_slot, serve_queue_static)
+from repro.serving.groups import (RequestGroup, group_requests, make_group)
 from repro.serving.kv_pool import (NULL_BLOCK, BlockPool, PrefixEntry,
                                    blocks_needed, prompt_key)
 from repro.serving.policy import (ComposeView, FIFOPolicy, PriorityPolicy,
                                   SchedulingPolicy, TTFTAwarePolicy,
                                   make_policy)
-from repro.serving.replay import (replay_model, replay_params,
+from repro.serving.replay import (GroupFleet, make_group_fleet,
+                                  replay_model, replay_params,
                                   replay_requests, served_stop_times)
 from repro.serving.request import (FleetMetrics, Request, RequestState,
                                    make_request)
@@ -20,14 +22,18 @@ from repro.serving.scheduler import OrcaScheduler
 
 __all__ = ["BlockPool", "ChunkSeg", "ChunkWork", "ComposeView",
            "ContinuousServingEngine", "FIFOPolicy",
-           "FleetMetrics", "NULL_BLOCK", "OrcaScheduler", "PrefixEntry",
-           "PriorityPolicy", "ProbeState", "Request", "RequestState",
+           "FleetMetrics", "GroupFleet", "NULL_BLOCK", "OrcaScheduler",
+           "PrefixEntry",
+           "PriorityPolicy", "ProbeState", "Request", "RequestGroup",
+           "RequestState",
            "SchedulingPolicy", "ServeConfig",
            "ServeResult", "ServingEngine", "SlotStepView",
            "StaticQueueResult", "TTFTAwarePolicy", "blocks_needed",
            "chunk_supported",
-           "chunked_prefill", "extract_trajectories", "init_probe_state",
-           "inject_prefill", "make_policy", "make_request",
+           "chunked_prefill", "extract_trajectories", "group_requests",
+           "init_probe_state",
+           "inject_prefill", "make_group", "make_group_fleet",
+           "make_policy", "make_request",
            "make_serve_step",
            "prefix_len", "probe_update", "prompt_key", "replay_model",
            "replay_params", "replay_requests", "reset_probe_slot",

@@ -706,6 +706,18 @@ class ContinuousServingEngine:
                                        jnp.asarray(slot, jnp.int32), null_row)
         self.pos[slot] = 0
 
+    def cancel(self, slot: int) -> None:
+        """Voluntary mid-flight release (group-consensus sibling
+        cancellation).  Distinct from an ORCA stop (no stop decision fired
+        for this request) and from FINISHED (budget not exhausted), but the
+        device-side mechanics are the release path: park the probe row,
+        NULL the table row, zero the position.  Safe MID-PREFILL too: a
+        resident PREFILL row already sits parked at the NULL page for the
+        whole prefill (``begin_prefill``), so cancelling it simply never
+        arms the row — the reserved pages are the scheduler/pool's to
+        reclaim."""
+        self.release(slot)
+
     # ------------------------------------------------------------------
     # chunked prefill: PREFILL is a resident phase, not an admission event
     def begin_prefill(self, slot: int) -> None:

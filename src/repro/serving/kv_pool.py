@@ -123,9 +123,12 @@ class BlockPool:
             self._refcount[b] += 1
         return list(blocks)
 
-    def free(self, blocks: Sequence[int]) -> None:
+    def free(self, blocks: Sequence[int]) -> int:
         """Drop one reference per block; blocks reaching refcount 0 return
-        to the free list and invalidate any prefix entry that names them."""
+        to the free list and invalidate any prefix entry that names them.
+        Returns how many blocks DIED (refcount hit 0) — shared prefix pages
+        survive their sharers, so the count is what actually returned to
+        the pool (the observable group-cancellation reclaims)."""
         died = []
         for b in blocks:
             assert b != NULL_BLOCK, "freeing the null block"
@@ -140,6 +143,7 @@ class BlockPool:
                 k: e for k, e in self._prefixes.items()
                 if not (dead.intersection(e.full_blocks)
                         or e.tail_block in dead)}
+        return len(died)
 
     # ------------------------------------------------------------------
     # prefix sharing

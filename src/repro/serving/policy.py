@@ -68,6 +68,22 @@ class SchedulingPolicy:
         queue — the place for aging/fairness bookkeeping, so pool-full
         iterations that admit nobody never advance fairness clocks."""
 
+    # -- gang admission (self-consistency groups) ----------------------
+    def select_admit_unit(self, units: Sequence[Sequence[Request]],
+                          step: int) -> int:
+        """Index of the WAITING unit to gang-admit next.  A unit is a
+        whole self-consistency group (admitted atomically: all samples or
+        none) or a singleton for an ungrouped request.  Default: delegate
+        to ``select_admit`` over the unit heads, so FIFO/priority/TTFT
+        semantics lift to groups unchanged — and an all-singleton queue
+        behaves exactly like the classic per-request path."""
+        return self.select_admit([u[0] for u in units], step)
+
+    def on_admitted_unit(self, units: Sequence[Sequence[Request]],
+                         idx: int) -> None:
+        """Unit-level ``on_admitted`` (same delegation contract)."""
+        self.on_admitted([u[0] for u in units], idx)
+
     # -- composition ---------------------------------------------------
     def prefill_share(self, view: ComposeView) -> int:
         """Budget tokens this step's packed prefill chunk may spend."""

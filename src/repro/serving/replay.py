@@ -22,8 +22,9 @@ server) and the parity suite's engine-level fixtures.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -42,17 +43,28 @@ class ReplayConfig:
 
 
 def replay_model(phis: np.ndarray, *, prompt_len: int = 1,
-                 tokens_per_step: int = 1) -> Model:
+                 tokens_per_step: int = 1,
+                 answers: Optional[np.ndarray] = None) -> Model:
     """Model whose decode-step hidden states replay ``phis`` (N, T, d).
 
     The decode state is {"traj": (1, B) int32} — batch axis 1 like every
     real family, so ``inject_prefill``'s per-slot dynamic-update-slice and
     the scheduler's slot machinery work unchanged.
+
+    ``answers`` (N,) makes the greedy decode DETERMINISTICALLY emit each
+    trajectory's answer hash (one-hot logits) instead of the default token
+    0 — the scheduler's per-boundary answer recording then sees exactly
+    the per-sample answer the group consensus should aggregate, driving
+    consensus end-to-end without a real model.  Pass the same array to
+    ``replay_params``.
     """
     phis = np.asarray(phis, np.float32)
     n, t, d = phis.shape
+    vocab = max(8, n)
+    if answers is not None:
+        vocab = max(vocab, int(np.asarray(answers).max()) + 1)
     cfg = ReplayConfig(name=f"replay-{n}x{t}", d_model=d,
-                       vocab_size=max(8, n), prompt_len=prompt_len,
+                       vocab_size=vocab, prompt_len=prompt_len,
                        tokens_per_step=tokens_per_step)
 
     def prefill(cfg, params, batch, cache_len):
@@ -71,7 +83,12 @@ def replay_model(phis: np.ndarray, *, prompt_len: int = 1,
             // cfg.tokens_per_step
         idx = jnp.clip(step, 0, bank.shape[1] - 1)
         hidden = bank[traj, idx]                          # (B, d)
-        logits = jnp.zeros((hidden.shape[0], cfg.vocab_size), jnp.float32)
+        if "answers" in params:        # trace-time: baked into the step
+            logits = jax.nn.one_hot(params["answers"][traj],
+                                    cfg.vocab_size, dtype=jnp.float32)
+        else:
+            logits = jnp.zeros((hidden.shape[0], cfg.vocab_size),
+                               jnp.float32)
         return logits, hidden, state
 
     def prefill_chunk(cfg, params, tokens, state, rows, pos_start, chunk_len,
@@ -114,9 +131,13 @@ def replay_model(phis: np.ndarray, *, prompt_len: int = 1,
                  prefill_packed=prefill_packed)
 
 
-def replay_params(phis: np.ndarray):
-    """The replay model's "weights": the trajectory bank itself."""
-    return {"phis": jnp.asarray(phis, jnp.float32)}
+def replay_params(phis: np.ndarray, answers: Optional[np.ndarray] = None):
+    """The replay model's "weights": the trajectory bank itself (+ the
+    optional per-trajectory answer hashes the decode emits)."""
+    params = {"phis": jnp.asarray(phis, jnp.float32)}
+    if answers is not None:
+        params["answers"] = jnp.asarray(answers, jnp.int32)
+    return params
 
 
 def replay_requests(lengths: Sequence[int], *, prompt_len: int = 1,
@@ -133,3 +154,55 @@ def served_stop_times(requests: Sequence[Request],
     0-based stop index, or T_i when the budget ran out (never charged)."""
     return np.array([r.stop_step - 1 if r.stop_step > 0 else int(T)
                      for r, T in zip(requests, lengths)], np.int64)
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupFleet:
+    """A replay fleet of self-consistency groups (``make_group_fleet``)."""
+    model: Model
+    params: dict
+    requests: List[Request]
+    members: np.ndarray      # (G, group_size) trajectory index per sample
+    truth: np.ndarray        # (G,) reference answer hash (-1: none solves)
+    answer_hash: np.ndarray  # (N,) per-trajectory answer the decode emits
+
+
+def make_group_fleet(ts, group_size: int, *, seed: int = 0,
+                     tokens_per_step: int = 1) -> GroupFleet:
+    """Self-consistency groups over a TrajectorySet, served by replay.
+
+    A seeded permutation is cut into consecutive groups of ``group_size``
+    trajectories (distinct phis per sample — the probe diversity real
+    sampling would give; remainder dropped).  Each sample's answer hash is
+    derived from its trajectory id: a SOLVED sample (``correct.any()``)
+    votes its group's id, an unsolved one votes a unique wrong hash
+    (``n_groups + trajectory_id``) — so the group truth is the group id
+    when any sample solves, else -1 (unmatchable).  The replay decode
+    emits these hashes as its greedy tokens (one-hot logits), so the
+    scheduler's per-boundary answer recording drives the consensus stop
+    end-to-end without a real model.
+    """
+    if group_size < 1:
+        raise ValueError(f"group_size must be >= 1, got {group_size}")
+    n = len(ts)
+    order = np.random.RandomState(seed).permutation(n)
+    n_groups = n // group_size
+    members = order[:n_groups * group_size].reshape(n_groups, group_size)
+    answer_hash = np.arange(n, dtype=np.int64) + n_groups  # default: wrong
+    truth = np.full((n_groups,), -1, np.int64)
+    requests: List[Request] = []
+    for g in range(n_groups):
+        for j, i in enumerate(members[g]):
+            if bool(ts.correct[i].any()):
+                answer_hash[i] = g
+                truth[g] = g
+            requests.append(make_request(
+                np.full((1,), i, np.int64),
+                max_new_tokens=int(ts.lengths[i]) * tokens_per_step,
+                group_id=int(g), sample_idx=j))
+    model = replay_model(ts.phis, tokens_per_step=tokens_per_step,
+                         answers=answer_hash)
+    params = replay_params(ts.phis, answers=answer_hash)
+    return GroupFleet(model=model, params=params, requests=requests,
+                      members=members, truth=truth,
+                      answer_hash=answer_hash)

@@ -2,14 +2,20 @@
 
 A ``Request`` is one user sequence moving through the ORCA server:
 
-    WAITING -> PREFILL -> RUNNING -> STOPPED | FINISHED
+    WAITING -> PREFILL -> RUNNING -> STOPPED | FINISHED | CANCELLED
 
 ``STOPPED`` means the calibrated ORCA threshold test fired (the paper's
 early stop — the request's remaining step budget is *returned to the
 fleet* by evicting its slot); ``FINISHED`` means the token budget ran out
-without a stop.  Metrics use the shared savings helper
+without a stop; ``CANCELLED`` means a *voluntary* mid-flight release — the
+request's self-consistency group reached its calibrated consensus and the
+scheduler evicted the still-running sibling (no per-request stop fired:
+``stop_step`` stays -1).  Metrics use the shared savings helper
 (``repro.core.stopping.step_savings``) so served savings are directly
-comparable with offline-evaluated savings.
+comparable with offline-evaluated savings; a cancelled sample's *unspent*
+budget is counted as group savings (``FleetMetrics.group_savings``), and
+CANCELLED requests are excluded from the TTFT / queue-wait percentiles so
+by-design cancellations don't pollute the latency tails.
 """
 from __future__ import annotations
 
@@ -31,6 +37,9 @@ class RequestState(enum.Enum):
     RUNNING = "running"
     STOPPED = "stopped"      # ORCA threshold fired -> slot evicted
     FINISHED = "finished"    # token budget exhausted without a stop
+    CANCELLED = "cancelled"  # voluntary release: group consensus fired and
+    #                          the scheduler evicted this still-running
+    #                          sibling mid-flight (stop_step stays -1)
 
 
 _req_counter = itertools.count()
@@ -46,6 +55,11 @@ class Request:
     # latency-sensitive (0 = interactive, 1 = batch by convention); FIFO
     # policies ignore it, PriorityPolicy admits lower classes first
     priority: int = 0
+    # self-consistency group membership: samples sharing a group_id are
+    # gang-admitted atomically and consensus-stopped together (None = the
+    # classic independent request; group code is then completely inert)
+    group_id: Optional[int] = None
+    sample_idx: int = 0                   # position within the group
     req_id: int = dataclasses.field(default_factory=lambda: next(_req_counter))
 
     # lifecycle (owned by the scheduler)
@@ -65,6 +79,9 @@ class Request:
     # observations
     tokens: List[int] = dataclasses.field(default_factory=list)
     scores: List[float] = dataclasses.field(default_factory=list)
+    # per-reasoning-step answer hash (the token decoded at each probe
+    # boundary) — the vote the group consensus aggregates
+    answers: List[int] = dataclasses.field(default_factory=list)
     stop_step: int = -1                   # reasoning step at ORCA stop (-1 budget)
     steps_run: int = 0                    # reasoning steps actually executed
 
@@ -75,7 +92,8 @@ class Request:
 
     @property
     def done(self) -> bool:
-        return self.state in (RequestState.STOPPED, RequestState.FINISHED)
+        return self.state in (RequestState.STOPPED, RequestState.FINISHED,
+                              RequestState.CANCELLED)
 
     @property
     def queue_steps(self) -> int:
@@ -91,18 +109,21 @@ class Request:
 
 def make_request(tokens: np.ndarray, *, extra: Optional[Dict] = None,
                  max_new_tokens: Optional[int] = None,
-                 priority: int = 0) -> Request:
+                 priority: int = 0, group_id: Optional[int] = None,
+                 sample_idx: int = 0) -> Request:
     """Build a Request from a 1-D prompt token array (+ optional extra
     modalities, e.g. ``patch_embeds`` / ``frames`` with a leading batch-1
     axis).  ``priority`` is the scheduling class (lower = more
-    latency-sensitive)."""
+    latency-sensitive); ``group_id``/``sample_idx`` mark a self-consistency
+    sample (see ``repro.serving.groups.make_group``)."""
     tokens = jnp.asarray(tokens, jnp.int32)
     assert tokens.ndim == 1, "one request = one unbatched prompt"
     inputs: Dict[str, jnp.ndarray] = {"tokens": tokens[None]}
     if extra:
         inputs.update({k: jnp.asarray(v) for k, v in extra.items()})
     return Request(inputs=inputs, prompt_len=int(tokens.shape[0]),
-                   max_new_tokens=max_new_tokens, priority=int(priority))
+                   max_new_tokens=max_new_tokens, priority=int(priority),
+                   group_id=group_id, sample_idx=int(sample_idx))
 
 
 @dataclasses.dataclass
@@ -140,10 +161,22 @@ class FleetMetrics:
     # ttft_ms_p50/p99 and queue_wait_ms_p50/p99 (WAITING -> PREFILL wall
     # time) — the observable the priority/TTFT policies tune
     per_class: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # group serving (self-consistency tentpole): consensus + cancellation
+    samples_cancelled: int = 0   # siblings evicted by consensus
+    consensus_groups: int = 0    # groups whose consensus fired
+    consensus_steps: float = 0.0  # mean reasoning-step index of consensus
+    group_savings: float = 0.0   # mean over groups of 1 - spent/budget,
+    #                              counting cancelled samples' UNSPENT budget
+    cancel_freed_blocks: int = 0  # KV pages that died at cancellation
 
     def row(self) -> Dict[str, float]:
         return {
             **self.per_class,
+            "samples_cancelled": self.samples_cancelled,
+            "consensus_groups": self.consensus_groups,
+            "consensus_steps": self.consensus_steps,
+            "group_savings": self.group_savings,
+            "cancel_freed_blocks": self.cancel_freed_blocks,
             "packed_chunks": self.packed_chunks,
             "peak_step_tokens": self.peak_step_tokens,
             "requests": self.n_requests, "slots": self.n_slots,

@@ -69,11 +69,13 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.core.calibrator import GroupCalibrator
 from repro.core.probe import ProbeConfig
 from repro.models.registry import Model
 from repro.serving.engine import (ChunkSeg, ChunkWork,
                                   ContinuousServingEngine, ServeConfig,
                                   chunk_supported, prefix_len)
+from repro.serving.groups import RequestGroup, group_requests
 from repro.serving.kv_pool import BlockPool, blocks_needed, prompt_key
 from repro.serving.policy import (ComposeView, SchedulingPolicy, make_policy)
 from repro.serving.request import FleetMetrics, Request, RequestState
@@ -104,7 +106,8 @@ class OrcaScheduler:
                  token_budget: Optional[int] = None,
                  policy: Union[str, SchedulingPolicy, None] = None,
                  pack_chunks: bool = True,
-                 pack_max: int = 4):
+                 pack_max: int = 4,
+                 consensus: Union[GroupCalibrator, float, None] = None):
         self.model, self.params, self.pc, self.theta, self.cfg = \
             model, params, pc, theta, cfg
         self.n_slots = n_slots
@@ -154,6 +157,35 @@ class OrcaScheduler:
         self.policy = make_policy(policy)
         self.pack_chunks = bool(pack_chunks)
         self.pack_max = int(pack_max)
+        # group consensus stop (self-consistency tentpole): a calibrated
+        # GroupCalibrator, a raw agreement threshold in (0, 1], or None
+        # (groups still gang-schedule and share prompt pages, but every
+        # sample runs to its own per-request stop)
+        if isinstance(consensus, bool):
+            raise ValueError(
+                f"consensus={consensus!r} is not a threshold: pass a float "
+                "agreement threshold in (0, 1], a calibrated "
+                "GroupCalibrator, or None to disable the consensus stop")
+        if isinstance(consensus, (int, float)):
+            thr = float(consensus)
+            if not 0.0 < thr <= 1.0:
+                raise ValueError(
+                    f"consensus={thr} is outside (0, 1]: the threshold is "
+                    "the weight share the top answer must reach; fix by "
+                    "passing a float in (0, 1] or a calibrated "
+                    "GroupCalibrator")
+            consensus = GroupCalibrator(lam=thr, burn_in=cfg.burn_in)
+        elif consensus is not None:
+            if not isinstance(consensus, GroupCalibrator):
+                raise ValueError(
+                    f"consensus must be a GroupCalibrator, a float in "
+                    f"(0, 1] or None, got {type(consensus).__name__}")
+            if consensus.lam is None:
+                raise ValueError(
+                    "consensus GroupCalibrator has no threshold — run "
+                    "GroupCalibrator.calibrate(...) first or pass "
+                    "consensus=<float threshold>")
+        self.consensus = consensus
         self.pool: Optional[BlockPool] = None
         self._engine: Optional[ContinuousServingEngine] = None
 
@@ -263,13 +295,93 @@ class OrcaScheduler:
         self.pool.register_prefix(plan.register_key, plan.row[:n_full],
                                   tail, req.prompt_len)
 
+    def _chunks_prefill(self, req: Request) -> bool:
+        """Will this request's prompt prefill in scheduled chunks (its
+        pages only hold the prompt K/V once the LAST chunk lands)?"""
+        return bool(self._engine is not None and self._engine.chunk_tokens
+                    and chunk_supported(self.model, req.inputs))
+
+    def _share_from_donor(self, donor, req: Request) -> Optional[_AdmitPlan]:
+        """Intra-gang prefix sharing: build a sibling's plan off the unit
+        leader's freshly-reserved prompt pages (refcount bump on the full
+        pages + private pages for the tail/decode), without waiting for
+        the leader to populate the prefix registry.  Same page shape as a
+        registry hit."""
+        key, row, d_prompt = donor
+        n_total = self._request_blocks(req)
+        n_full = req.prompt_len // self.block_size
+        if d_prompt != req.prompt_len or n_full > len(row) \
+                or n_total < n_full:
+            return None
+        private = self.pool.allocate(n_total - n_full)
+        if private is None:
+            return None
+        shared = self.pool.share(row[:n_full])
+        copy_tail = None
+        if req.prompt_len % self.block_size and n_full < len(row) \
+                and private:
+            copy_tail = (row[n_full], private[0])
+        return _AdmitPlan(row=shared + private, n_shared=n_full,
+                          skip_prefill=True, copy_tail=copy_tail,
+                          register_key=None)
+
+    def _reserve_unit(self, members: Sequence[Request]
+                      ) -> Optional[List[Optional[_AdmitPlan]]]:
+        """ALL-OR-NOTHING page reservation for a gang-admission unit.
+
+        The first sample reserves (or prefix-hits) the prompt pages; the
+        siblings share its full prompt pages by refcount — the group is
+        its own prefix donor, so N samples of one prompt store the prompt
+        K/V once even on a cold registry.  Intra-gang sharing only
+        engages when the leader's prompt lands in one admission shot
+        (chunked prefill defers the donor until the last chunk, so
+        siblings then take full private reservations).  Any member
+        failing rolls the whole unit back: a group is never
+        half-reserved."""
+        plans: List[_AdmitPlan] = []
+        donor = None
+        for req in members:
+            plan = None
+            key = self._sharing_key(req)
+            if donor is not None and key is not None and key == donor[0]:
+                plan = self._share_from_donor(donor, req)
+            if plan is None:
+                plan = self._reserve(req)
+                if plan is not None and plan.register_key is not None \
+                        and donor is None and not self._chunks_prefill(req):
+                    plan_key: str = plan.register_key
+                    donor = (plan_key, plan.row, req.prompt_len)
+            if plan is None:
+                for p in plans:
+                    self.pool.free(p.row)
+                return None
+            plans.append(plan)
+        return plans
+
     # ------------------------------------------------------------------
     def run(self, requests: Sequence[Request]
             ) -> Tuple[List[Request], FleetMetrics]:
-        """Drive every request to STOPPED/FINISHED; return them + metrics."""
+        """Drive every request to STOPPED/FINISHED/CANCELLED; return them
+        + metrics."""
         eng = self._ensure_engine(requests)
         chunked = bool(eng.chunk_tokens)
-        waiting = deque(requests)
+        # gang-admission units: a whole self-consistency group (atomic:
+        # all samples or none) or a singleton; with no grouped requests
+        # this is exactly the classic per-request queue
+        units, groups = group_requests(requests)
+        self.groups = groups          # exposed: consensus outcomes per group
+        for grp in groups:
+            if grp.size > self.n_slots:
+                raise ValueError(
+                    f"group {grp.group_id} has {grp.size} samples but the "
+                    f"fleet has {self.n_slots} slots: gang admission needs "
+                    "every sample resident at once; fix by raising n_slots "
+                    f"to >= {grp.size} or lowering the group size")
+        # groups whose consensus may still fire (checked every step a
+        # member could have emitted a score; a lone sample never votes)
+        open_groups: List[RequestGroup] = \
+            [g for g in groups if g.size >= 2] if self.consensus else []
+        waiting = deque(units)
         running: Dict[int, Request] = {}          # slot -> request
         prefilling: Dict[int, Request] = {}       # slot -> mid-prefill req
         plans: Dict[int, _AdmitPlan] = {}         # deferred donor registry
@@ -277,72 +389,91 @@ class OrcaScheduler:
         steps = active_slot_steps = 0
         total_tokens = n_chunks = n_packed = 0
         peak_blocks = prefill_skips = peak_step_tokens = 0
+        n_cancelled = cancel_freed = 0
         stalls: List[float] = []
         t0 = time.perf_counter()
 
         while waiting or running or prefilling:
             t_iter = time.perf_counter()
             # admission: refill free slots before the next fused step; the
-            # POLICY picks whom (FIFO head / best priority class with
-            # aging) — in paged mode a request that doesn't fit the pool
-            # holds its place and WAITS for an eviction to return pages.
-            # Pages are still reserved ALL-OR-NOTHING here, whether the
-            # prompt then prefills in one admission shot or in scheduled
-            # chunks.
+            # POLICY picks which UNIT (a whole group, or a singleton for
+            # the classic request) — in paged mode a unit that doesn't fit
+            # the pool holds its place and WAITS for an eviction to return
+            # pages, and a group additionally waits for enough free SLOTS:
+            # gang admission is all-or-nothing on both resources, so a
+            # group is never half-resident.  Pages are still reserved
+            # ALL-OR-NOTHING, whether the prompt then prefills in one
+            # admission shot or in scheduled chunks.
             while free and waiting:
-                idx = self.policy.select_admit(waiting, steps)
-                req = waiting[idx]
-                plan = None
+                idx = self.policy.select_admit_unit(waiting, steps)
+                unit = waiting[idx]
+                members = [r for r in unit
+                           if r.state is RequestState.WAITING]
+                if not members:          # fully cancelled before admission
+                    del waiting[idx]
+                    continue
+                if len(members) > len(free):
+                    break                # gang needs more slots: wait
                 if self.paged:
-                    plan = self._reserve(req)
-                    if plan is None:
+                    mplans = self._reserve_unit(members)
+                    if mplans is None:
                         if not (running or prefilling):
+                            need = sum(self._request_blocks(r)
+                                       for r in members)
+                            what = (f"group {members[0].group_id}"
+                                    if members[0].group_id is not None
+                                    else f"request {members[0].req_id}")
                             raise RuntimeError(
-                                f"request {req.req_id} needs "
-                                f"{self._request_blocks(req)} pages but the "
-                                f"pool holds {self.pool.num_usable}; nothing "
-                                "left to evict")
+                                f"{what} needs {need} pages but the "
+                                f"pool holds {self.pool.num_usable}; "
+                                "nothing left to evict")
                         break
-                self.policy.on_admitted(waiting, idx)
-                del waiting[idx]
-                slot = free.pop()
-                req.slot, req.admitted_step = slot, steps
-                req.queue_wait_s = time.perf_counter() - t0
-                req.state = RequestState.PREFILL
-                skip = plan.skip_prefill if plan is not None else False
-                if plan is not None:
-                    req.block_ids = list(plan.row)
-                    req.n_shared_blocks = plan.n_shared
-                    req.prefill_skipped = skip
-                    prefill_skips += int(skip)
-                    peak_blocks = max(peak_blocks, self.pool.blocks_in_use)
-                if chunked and not skip \
-                        and chunk_supported(self.model, req.inputs):
-                    # prefill is schedulable work, not an admission event:
-                    # the slot becomes a resident PREFILL row and the
-                    # prompt rides the unified step in token-budget chunks
-                    eng.begin_prefill(slot)
-                    req.prefill_progress = 0
-                    prefilling[slot] = req
-                    if plan is not None:
-                        # donor registration deferred: the pages only hold
-                        # the prompt K/V once the last chunk lands
-                        plans[slot] = plan
                 else:
-                    if plan is not None and eng.paged:
-                        eng.admit(slot, req.inputs, req.prompt_len,
-                                  block_row=plan.row,
-                                  skip_prefill=skip,
-                                  copy_tail=plan.copy_tail)
-                    else:
-                        # family without a page layout / non-text prompt:
-                        # the pool still admission-controls, the device
-                        # cache stays dense and prefill stays one shot
-                        eng.admit(slot, req.inputs, req.prompt_len)
+                    mplans = [None] * len(members)
+                self.policy.on_admitted_unit(waiting, idx)
+                del waiting[idx]
+                for req, plan in zip(members, mplans):
+                    slot = free.pop()
+                    req.slot, req.admitted_step = slot, steps
+                    req.queue_wait_s = time.perf_counter() - t0
+                    req.state = RequestState.PREFILL
+                    skip = plan.skip_prefill if plan is not None else False
                     if plan is not None:
-                        self._register_donor(req, plan)
-                    req.state = RequestState.RUNNING
-                    running[slot] = req
+                        req.block_ids = list(plan.row)
+                        req.n_shared_blocks = plan.n_shared
+                        req.prefill_skipped = skip
+                        prefill_skips += int(skip)
+                        peak_blocks = max(peak_blocks,
+                                          self.pool.blocks_in_use)
+                    if chunked and not skip \
+                            and chunk_supported(self.model, req.inputs):
+                        # prefill is schedulable work, not an admission
+                        # event: the slot becomes a resident PREFILL row
+                        # and the prompt rides the unified step in
+                        # token-budget chunks
+                        eng.begin_prefill(slot)
+                        req.prefill_progress = 0
+                        prefilling[slot] = req
+                        if plan is not None:
+                            # donor registration deferred: the pages only
+                            # hold the prompt K/V once the last chunk lands
+                            plans[slot] = plan
+                    else:
+                        if plan is not None and eng.paged:
+                            eng.admit(slot, req.inputs, req.prompt_len,
+                                      block_row=plan.row,
+                                      skip_prefill=skip,
+                                      copy_tail=plan.copy_tail)
+                        else:
+                            # family without a page layout / non-text
+                            # prompt: the pool still admission-controls,
+                            # the device cache stays dense and prefill
+                            # stays one shot
+                            eng.admit(slot, req.inputs, req.prompt_len)
+                        if plan is not None:
+                            self._register_donor(req, plan)
+                        req.state = RequestState.RUNNING
+                        running[slot] = req
 
             # batch composer: every resident decode token rides this step;
             # the POLICY sizes the prefill share of what's left of the
@@ -357,7 +488,19 @@ class OrcaScheduler:
                 share = min(share, eng.chunk_tokens,
                             self.token_budget - len(running))
                 segs: List[ChunkSeg] = []
-                for slot, req in prefilling.items():
+                residents = list(prefilling.items())
+                if any(r.group_id is not None
+                       for r in prefilling.values()):
+                    # sample spreading: order mid-prefill residents by
+                    # sample_idx first, so one packed chunk carries sample
+                    # k of SEVERAL groups rather than all samples of one —
+                    # siblings finish prefill on different steps and their
+                    # probe boundaries (hence votes) de-phase.  Ungrouped
+                    # fleets keep admission order byte-for-byte.
+                    residents.sort(key=lambda kv: (kv[1].sample_idx,
+                                                   kv[1].admitted_step,
+                                                   kv[1].req_id))
+                for slot, req in residents:
                     if share <= 0 or len(segs) >= eng.max_pack:
                         break
                     n = min(share, req.prompt_len - req.prefill_progress)
@@ -394,6 +537,13 @@ class OrcaScheduler:
                 n_scores = int(view.n_scores[slot])
                 if n_scores > len(req.scores):
                     req.scores.append(float(view.smoothed[slot]))
+                    # the vote at this probe boundary: the answer hash is
+                    # the token just decoded (the step's answer proxy,
+                    # same convention as launch.serve's trajectory
+                    # extraction) — recorded alongside the score so a
+                    # group's consensus sees matched (confidence, answer)
+                    # pairs
+                    req.answers.append(int(view.tokens[slot]))
                 max_new = req.max_new_tokens or self.cfg.max_new_tokens
                 if bool(view.stopped[slot]):
                     # ORCA stop: evict NOW — the slot is free next step
@@ -432,6 +582,51 @@ class OrcaScheduler:
                             self._register_donor(req, plan)
                         req.state = RequestState.RUNNING
                         running[seg.slot] = req
+
+            # consensus stop: after this step's scores landed (and ORCA
+            # evictions ran — a sample stopping at this very boundary
+            # still votes its final frozen score), each open group's
+            # calibrated vote is re-checked; the first crossing CANCELS
+            # every still-running sibling mid-flight — slot, pages and
+            # probe state return to the fleet, the unspent budget becomes
+            # group savings
+            if open_groups:
+                still_open: List[RequestGroup] = []
+                for grp in open_groups:
+                    fire, ans, agr = self.consensus.decide(
+                        [r.scores for r in grp.requests],
+                        [r.answers for r in grp.requests])
+                    if fire:
+                        grp.consensus_step = steps
+                        grp.consensus_index = max(
+                            len(r.scores) for r in grp.requests) - 1
+                        grp.consensus_answer = int(ans)
+                        grp.consensus_agreement = float(agr)
+                        for sib in grp.requests:
+                            if sib.done:
+                                continue
+                            slot = sib.slot
+                            eng.cancel(slot)
+                            if self.paged and sib.block_ids:
+                                cancel_freed += \
+                                    self.pool.free(sib.block_ids)
+                            free.append(slot)
+                            running.pop(slot, None)
+                            if slot in prefilling:
+                                # cancel-mid-prefill: the row sat parked
+                                # at NULL the whole prefill, so it was
+                                # never armed; drop the deferred donor
+                                # plan with it
+                                del prefilling[slot]
+                                plans.pop(slot, None)
+                            sib.steps_run = len(sib.scores)
+                            sib.stop_step = -1
+                            self._complete(sib, RequestState.CANCELLED,
+                                           steps)
+                            n_cancelled += 1
+                    elif not grp.done:
+                        still_open.append(grp)
+                open_groups = still_open
             stalls.append((time.perf_counter() - t_iter) * 1e3)
 
         wall = max(time.perf_counter() - t0, 1e-9)
@@ -440,7 +635,8 @@ class OrcaScheduler:
                                              total_tokens, wall,
                                              peak_blocks, prefill_skips,
                                              stalls, n_chunks, n_packed,
-                                             peak_step_tokens)
+                                             peak_step_tokens, groups,
+                                             n_cancelled, cancel_freed)
 
     # ------------------------------------------------------------------
     def _compose_view(self, running: Dict[int, Request],
@@ -474,18 +670,26 @@ class OrcaScheduler:
                  prefill_skips: int = 0,
                  stalls: Optional[Sequence[float]] = None,
                  prefill_chunks: int = 0, packed_chunks: int = 0,
-                 peak_step_tokens: int = 0) -> FleetMetrics:
+                 peak_step_tokens: int = 0,
+                 groups: Optional[Sequence[RequestGroup]] = None,
+                 n_cancelled: int = 0,
+                 cancel_freed: int = 0) -> FleetMetrics:
         n = len(requests)
         sav = [r.savings(self.cfg.tokens_per_step, self.cfg.max_new_tokens)
                for r in requests]
         queue = [r.queue_steps for r in requests]
-        ttft = np.array([r.ttft_s for r in requests if r.ttft_s >= 0]) * 1e3
+        # CANCELLED samples are excluded from the latency percentiles: a
+        # consensus cancellation is a by-design eviction, not a latency
+        # event, and would otherwise pollute the tails the policies tune
+        kept = [r for r in requests
+                if r.state is not RequestState.CANCELLED]
+        ttft = np.array([r.ttft_s for r in kept if r.ttft_s >= 0]) * 1e3
         st = np.asarray(stalls if stalls else [0.0])
         # per-priority-class latency tails: TTFT and queue wait (WAITING ->
         # PREFILL wall time) p50/p99 — what the priority/TTFT policies tune
         per_class: Dict[str, float] = {}
-        for cls in sorted({r.priority for r in requests}):
-            in_cls = [r for r in requests if r.priority == cls]
+        for cls in sorted({r.priority for r in kept}):
+            in_cls = [r for r in kept if r.priority == cls]
             c_ttft = np.array([r.ttft_s for r in in_cls
                                if r.ttft_s >= 0]) * 1e3
             c_wait = np.array([r.queue_wait_s for r in in_cls
@@ -496,7 +700,20 @@ class OrcaScheduler:
                         float(np.percentile(arr, 50))
                     per_class[f"c{cls}_{key}_p99"] = \
                         float(np.percentile(arr, 99))
+        # group-level accounting: savings COUNT a cancelled sample's
+        # unspent budget (the whole point of consensus cancellation)
+        tps, dmn = self.cfg.tokens_per_step, self.cfg.max_new_tokens
+        real_groups = [g for g in (groups or []) if g.size >= 2]
+        g_sav = [g.savings(tps, dmn) for g in real_groups]
+        fired = [g for g in real_groups if g.decided]
         return FleetMetrics(
+            samples_cancelled=n_cancelled,
+            consensus_groups=len(fired),
+            consensus_steps=(float(np.mean([g.consensus_index
+                                            for g in fired]))
+                             if fired else 0.0),
+            group_savings=float(np.mean(g_sav)) if g_sav else 0.0,
+            cancel_freed_blocks=cancel_freed,
             n_requests=n, n_slots=self.n_slots, engine_steps=steps,
             active_slot_steps=active_slot_steps, wall_time_s=wall,
             requests_per_s=n / wall, tokens_per_s=total_tokens / wall,

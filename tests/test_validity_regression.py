@@ -16,10 +16,12 @@ import jax
 
 from repro import api as orca
 from repro.core import stopping as S
+from repro.core.calibrator import GroupCalibrator, groups_from_trajectories
 from repro.core.pipeline import make_labels
 from repro.core.probe import ProbeConfig
-from repro.serving import (OrcaScheduler, ServeConfig, replay_model,
-                           replay_params, replay_requests, served_stop_times)
+from repro.serving import (OrcaScheduler, ServeConfig, make_group_fleet,
+                           replay_model, replay_params, replay_requests,
+                           served_stop_times)
 from repro.trajectories.synthetic import TrajectoryDistribution, generate
 
 DELTA, EPS = 0.25, 0.1
@@ -96,6 +98,54 @@ def _assert_served_validity(calibrator, cal, test):
     return risk, sav
 
 
+def _assert_group_validity(calibrator, cal, test, group_size=3):
+    """Group-level conformal validity, served end-to-end: the consensus
+    threshold is LTT-calibrated over calibration GROUPS (same per-sample
+    answer-hash convention ``make_group_fleet`` serves), deployed through
+    the gang-scheduling consensus scheduler, and the served group risk
+    (consensus fired AND voted wrong) must respect delta + slack."""
+    lam = calibrator.calibrate(cal, DELTA, EPS)
+    assert np.isfinite(lam)
+    # calibration groups: same seeded permutation + chunking as the fleet,
+    # with each sample's per-step vote broadcast from its fleet answer hash
+    cal_fleet = make_group_fleet(cal, group_size, seed=21)
+    a_cal = np.repeat(cal_fleet.answer_hash[:, None], cal.phis.shape[1],
+                      axis=1)
+    traces = groups_from_trajectories(cal, calibrator.scores(cal),
+                                      group_size, seed=21, answers=a_cal)
+    assert [int(t.truth) for t in traces] == cal_fleet.truth.tolist()
+    gc = GroupCalibrator(min_votes=2, burn_in=10)
+    g_lam = gc.calibrate(traces, DELTA, EPS, per_sample_lam=lam,
+                         per_sample_burn_in=10)
+    assert np.isfinite(g_lam), "group LTT selected nothing"
+
+    fleet_ts = make_group_fleet(test, group_size, seed=22)
+    pc, theta = calibrator.serving_params()
+    cfg = ServeConfig(tokens_per_step=1,
+                      max_new_tokens=int(test.lengths.max()),
+                      lam=float(lam), burn_in=10)
+    max_blocks = (int(test.lengths.max()) + 1 + 15) // 16
+    sched = OrcaScheduler(fleet_ts.model, fleet_ts.params, pc, theta, cfg,
+                          n_slots=4, paged=True, block_size=16,
+                          num_blocks=1 + (group_size + 1) * max_blocks,
+                          consensus=gc)
+    done, fleet = sched.run(fleet_ts.requests)
+    assert all(r.done for r in done)
+    assert sched.pool.num_free == sched.pool.num_usable
+    # served group risk: a fired consensus is charged iff its answer is
+    # wrong; a never-firing group is never charged (same loss LTT bounded)
+    risks = [float(g.decided and g.consensus_answer
+                   != int(fleet_ts.truth[g.group_id]))
+             for g in sched.groups]
+    risk = float(np.mean(risks))
+    assert risk <= DELTA + SLACK, \
+        f"served group risk {risk:.3f} > {DELTA}+{SLACK}"
+    # non-vacuous: the consensus actually fires and cancels siblings
+    assert fleet.consensus_groups > 0, "consensus never fired"
+    assert fleet.samples_cancelled > 0 and fleet.group_savings > 0.0
+    return risk
+
+
 def test_ttt_calibrator_validity_through_engine(noisy_splits):
     train, cal, test = noisy_splits
     calib = orca.fit(train, mode="supervised", method="ttt",
@@ -114,6 +164,21 @@ def test_static_calibrator_validity_through_engine(noisy_splits):
     calib = orca.fit(train, mode="supervised", method="static",
                      n_components=16, smooth_window=5, epochs=150)
     _assert_served_validity(calib, cal, test)
+
+
+def test_ttt_group_consensus_validity_through_engine(noisy_splits):
+    train, cal, test = noisy_splits
+    calib = orca.fit(train, mode="supervised", method="ttt",
+                     pc=ProbeConfig(d_phi=D_PHI, smooth_window=5),
+                     epochs=6, batch_size=32, epoch_select=False, seed=0)
+    _assert_group_validity(calib, cal, test)
+
+
+def test_static_group_consensus_validity_through_engine(noisy_splits):
+    train, cal, test = noisy_splits
+    calib = orca.fit(train, mode="supervised", method="static",
+                     n_components=16, smooth_window=5, epochs=150)
+    _assert_group_validity(calib, cal, test)
 
 
 def test_static_serving_params_round_trip(noisy_splits):
