@@ -36,7 +36,17 @@ be IDENTICAL across paths (asserted):
     confidence-weighted answer vote clears the threshold — pages freed
     mid-flight, slots refilled from the queue (the
     ``group_consensus_vs_independent`` gate metric); gang scheduling with
-    the consensus OFF must not move a single stop decision (asserted).
+    the consensus OFF must not move a single stop decision (asserted);
+  * OVERLOAD with involuntary preemption vs waiting, on an undersized pool
+    (pages for exactly ``--slots`` residents): batch-class requests fill
+    the fleet, then urgent class-0 requests arrive — with preemption the
+    scheduler spills a lower-class resident's KV pages AND probe state to
+    host RAM and admits the urgent request immediately; without it the
+    urgent request queues behind a full house.  Class-0 p99 TTFT improves
+    (the ``preemption_ttft_p99_class0`` gate metric is the no-preempt /
+    preempt ratio), every spill is restored, and the stop decisions are
+    byte-identical across both runs (asserted — the spill/restore round
+    trip is exact, so the calibrated procedure is preemption-invariant).
 
 ``--check`` is the CI perf-regression gate: re-run, then compare against the
 committed ``results/serving_throughput.json`` baseline — stop decisions must
@@ -393,11 +403,66 @@ def main(argv=None) -> int:
           f"all {fleet_g.consensus_groups} groups fired at reasoning steps "
           f"{consensus_idx}, {fleet_g.samples_cancelled} siblings cancelled "
           f"mid-flight, {fleet_g.cancel_freed_blocks} pages freed at "
-          f"cancel, group savings {fleet_g.group_savings:.3f}, KV budget "
+          f"cancel, group savings {fleet_g.group_savings:.0f} steps "
+          f"(mean {fleet_g.group_savings_mean:.3f}), KV budget "
           f"{hbm_group / 1e6:.2f} MB each")
     print(f"[throughput] grouped-consensus vs {g_size}-independent: "
           f"{group_ratio:.2f}x requests/s ({fleet_g.requests_per_s:.2f} vs "
           f"{fleet_i.requests_per_s:.2f})")
+
+    # --- overload: involuntary preemption vs waiting, undersized pool ----
+    o_slots = args.slots
+    o_cache = args.prompt_len + args.max_new_tokens
+    # pool sized so exactly `o_slots` requests can hold pages at once: an
+    # urgent class-0 arrival at a full house must either preempt a lower-
+    # class resident (spill KV + probe state to host RAM) or wait
+    o_blocks = 1 + o_slots * ((o_cache + bs - 1) // bs)
+    hbm_over = kv_bytes_paged(cfg, o_blocks, bs)
+
+    def overload_requests():
+        # burst arrival: batch traffic (class 1) lands first and fills the
+        # fleet, two urgent class-0 requests hit the full house, background
+        # class 2 trails — FIFO admission order preserves the burst shape
+        reqs = queue_requests()
+        for i, r in enumerate(reqs):
+            r.priority = 1 if i < o_slots else \
+                (0 if i < o_slots + 2 else 2)
+        return reqs
+
+    pre_sched = OrcaScheduler(model, params, pc, theta, scfg,
+                              n_slots=o_slots, paged=True, block_size=bs,
+                              num_blocks=o_blocks)
+    pre_sched.run(overload_requests())
+    done_v, fleet_v = best_of(lambda: pre_sched.run(overload_requests()))
+    nop_sched = OrcaScheduler(model, params, pc, theta, scfg,
+                              n_slots=o_slots, paged=True, block_size=bs,
+                              num_blocks=o_blocks, preemption=False)
+    nop_sched.run(overload_requests())
+    done_n, fleet_n = best_of(lambda: nop_sched.run(overload_requests()))
+    stop_v = np.array([r.stop_step for r in done_v])
+    stop_n = np.array([r.stop_step for r in done_n])
+    # the whole point: spilling a live request's KV and probe state to host
+    # RAM and restoring it later must not move a single stop decision
+    assert (stop_v == stop_n).all(), \
+        f"preemption changed stop decisions: {stop_v} vs {stop_n}"
+    assert fleet_v.preemptions >= 1, "overload never forced a spill"
+    assert fleet_v.restores == fleet_v.preemptions, \
+        "a spilled request was never restored"
+    assert fleet_n.preemptions == 0
+    pre_sched.pool.check()
+    c0_pre = fleet_v.per_class["c0_ttft_ms_p99"]
+    c0_wait = fleet_n.per_class["c0_ttft_ms_p99"]
+    preempt_ratio = c0_wait / max(c0_pre, 1e-9)
+    assert preempt_ratio > 1.0, \
+        f"preemption did not improve class-0 TTFT ({c0_wait:.1f} ms vs " \
+        f"{c0_pre:.1f} ms)"
+    print(f"[throughput] overload preemption == wait-only stop decisions "
+          f"({stop_v.tolist()}); {fleet_v.preemptions} spills / "
+          f"{fleet_v.restores} restores, {fleet_v.spilled_blocks} pages "
+          f"through host RAM, KV budget {hbm_over / 1e6:.2f} MB")
+    print(f"[throughput] class-0 p99 TTFT under overload: "
+          f"{c0_wait:.1f} ms (wait) -> {c0_pre:.1f} ms (preempt), "
+          f"{preempt_ratio:.2f}x")
 
     util_b = base.active_slot_steps / max(base.total_slot_steps, 1)
     steps_s = fleet.engine_steps / max(fleet.wall_time_s, 1e-9)
@@ -428,6 +493,10 @@ def main(argv=None) -> int:
         {"mode": "group-independent", **fleet_i.row(),
          "kv_mb": hbm_group / 1e6, "group_size": 1,
          "wall_s": fleet_i.wall_time_s},
+        {"mode": "overload-preempt", **fleet_v.row(),
+         "kv_mb": hbm_over / 1e6, "wall_s": fleet_v.wall_time_s},
+        {"mode": "overload-wait", **fleet_n.row(),
+         "kv_mb": hbm_over / 1e6, "wall_s": fleet_n.wall_time_s},
     ]
     print_table("serving throughput (same lambda*, same stop decisions)",
                 rows, ("mode", "engine_steps", "requests_per_s",
@@ -449,7 +518,7 @@ def main(argv=None) -> int:
           f"{fleet_d.requests_per_s:.2f})")
 
     report = {
-        "schema": 5,
+        "schema": 6,
         "quick": QUICK,
         "rows": rows,
         # the gate requires these BYTE-IDENTICAL against the baseline: the
@@ -466,6 +535,8 @@ def main(argv=None) -> int:
             # the calibrated procedure too
             "group_independent": stop_i.tolist(),
             "group_consensus_index": consensus_idx,
+            # preempt == wait-only (asserted above): one list covers both
+            "overload": stop_v.tolist(),
         },
         # every metric must stay >= min_frac * baseline value; tolerances
         # live IN the baseline so re-baselining is an explicit commit
@@ -496,6 +567,10 @@ def main(argv=None) -> int:
                     {"value": fleet_g.requests_per_s, "min_frac": 0.3},
                 "group_consensus_vs_independent":
                     {"value": group_ratio, "min_frac": 0.6},
+                # overload: class-0 p99 TTFT improvement from involuntary
+                # preemption (no-preempt / preempt ratio, bigger is better)
+                "preemption_ttft_p99_class0":
+                    {"value": preempt_ratio, "min_frac": 0.3},
             },
         },
     }

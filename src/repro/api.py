@@ -91,6 +91,7 @@ def engine(model, params, calibrator: Calibrator, *,
            group_size: int = 1,
            consensus=None,
            consensus_delta: Optional[float] = None,
+           preemption: bool = True,
            **serve_kwargs) -> OrcaScheduler:
     """Build a continuous-batching ``OrcaScheduler`` serving the calibrated
     procedure.
@@ -118,11 +119,19 @@ def engine(model, params, calibrator: Calibrator, *,
     head of the next, block-diagonally isolated — so short prompt tails
     don't leave budget on the table; ``pack_chunks=False`` restores the
     one-request-per-chunk composer through the same step executable.
-    ``policy`` picks the scheduling policy ("fifo", "priority", "ttft" or
-    a ``repro.serving.SchedulingPolicy`` instance): admission order and
-    the per-step prefill share.  Stop decisions are unchanged by ANY of
-    these knobs; TTFT/stall tails and per-prompt-length recompiles go
-    away.
+    ``policy`` picks the scheduling policy ("fifo", "priority", "edf",
+    "ttft" or a ``repro.serving.SchedulingPolicy`` instance): admission
+    order, the per-step prefill share and — under overload — victim
+    selection.  Stop decisions are unchanged by ANY of these knobs;
+    TTFT/stall tails and per-prompt-length recompiles go away.
+
+    ``preemption`` (default True) makes the scheduler overload-safe: when
+    capacity fails for a unit strictly more urgent than some resident,
+    the policy's victims are spilled to host RAM (KV pages AND probe
+    fast-weight state, ``engine.Spill``) and restored byte-identically
+    once room returns — the SWAPPED queue re-admits before WAITING.
+    ``preemption=False`` restores wait-only admission.  Stop decisions
+    are invariant under any preemption schedule.
 
     ``group_size=N`` serves self-consistency groups: ``serve_requests``
     expands each prompt into N gang-admitted samples sharing its prompt
@@ -186,7 +195,7 @@ def engine(model, params, calibrator: Calibrator, *,
                           num_blocks=num_blocks, chunk_tokens=chunk_tokens,
                           token_budget=token_budget, policy=policy,
                           pack_chunks=pack_chunks, pack_max=pack_max,
-                          consensus=consensus)
+                          consensus=consensus, preemption=preemption)
     sched.group_size = group_size       # serve_requests' expansion default
     return sched
 

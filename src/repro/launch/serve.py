@@ -93,10 +93,15 @@ def main(argv=None) -> int:
     ap.add_argument("--token-budget", type=int, default=0,
                     help="max tokens per unified step (0 -> slots + chunk)")
     ap.add_argument("--policy", default="fifo",
-                    choices=("fifo", "priority", "ttft"),
-                    help="scheduling policy: admission order + per-step "
-                         "prefill share (priority classes come from "
-                         "--batch-every)")
+                    choices=("fifo", "priority", "edf", "ttft"),
+                    help="scheduling policy: admission order, per-step "
+                         "prefill share and victim selection (priority "
+                         "classes come from --batch-every; edf ranks by "
+                         "per-class deadline)")
+    ap.add_argument("--no-preempt", action="store_true",
+                    help="disable involuntary preemption (spill/restore "
+                         "of lower-priority residents when capacity fails "
+                         "for a more urgent unit) — wait-only admission")
     ap.add_argument("--no-pack", action="store_true",
                     help="disable multi-request chunk packing (one request "
                          "per prefill chunk, the pre-packing composer)")
@@ -172,7 +177,8 @@ def main(argv=None) -> int:
                         group_size=args.group_size, consensus=consensus,
                         consensus_delta=(args.consensus_delta or None
                                          if consensus is not None
-                                         else None))
+                                         else None),
+                        preemption=not args.no_preempt)
     batch = model_inputs(cfg, jax.random.PRNGKey(args.seed + 1),
                          args.requests, args.prompt_len)
     extra_keys = [k for k in batch if k != "tokens"]
@@ -210,8 +216,13 @@ def main(argv=None) -> int:
         print(f"[serve] groups: {fleet.consensus_groups} consensus stops "
               f"(mean step {fleet.consensus_steps:.1f}), "
               f"{fleet.samples_cancelled} siblings cancelled, group savings "
-              f"{fleet.group_savings:.3f}, {fleet.cancel_freed_blocks} pages "
-              "freed at cancel")
+              f"{fleet.group_savings:.0f} steps (mean "
+              f"{fleet.group_savings_mean:.3f}), "
+              f"{fleet.cancel_freed_blocks} pages freed at cancel")
+    if fleet.preemptions:
+        print(f"[serve] preemption: {fleet.preemptions} spills / "
+              f"{fleet.restores} restores ({fleet.spilled_blocks} pages "
+              "copied to host)")
     print(f"[serve] latency: ttft p50/p99 {fleet.ttft_ms_p50:.1f}/"
           f"{fleet.ttft_ms_p99:.1f} ms, step stall p50/p99 "
           f"{fleet.stall_ms_p50:.1f}/{fleet.stall_ms_p99:.1f} ms"

@@ -1,18 +1,19 @@
 from repro.serving.engine import (ChunkSeg, ChunkWork,
                                   ContinuousServingEngine,
                                   ProbeState, ServeConfig, ServeResult,
-                                  ServingEngine, SlotStepView,
+                                  ServingEngine, SlotStepView, Spill,
                                   StaticQueueResult, chunk_supported,
                                   chunked_prefill, extract_trajectories,
                                   init_probe_state, inject_prefill,
                                   make_serve_step, prefix_len, probe_update,
-                                  reset_probe_slot, serve_queue_static)
+                                  reset_probe_slot, serve_queue_static,
+                                  write_probe_slot)
 from repro.serving.groups import (RequestGroup, group_requests, make_group)
 from repro.serving.kv_pool import (NULL_BLOCK, BlockPool, PrefixEntry,
-                                   blocks_needed, prompt_key)
-from repro.serving.policy import (ComposeView, FIFOPolicy, PriorityPolicy,
-                                  SchedulingPolicy, TTFTAwarePolicy,
-                                  make_policy)
+                                   blocks_needed, pad_row, prompt_key)
+from repro.serving.policy import (ComposeView, EDFPolicy, FIFOPolicy,
+                                  PriorityPolicy, SchedulingPolicy,
+                                  TTFTAwarePolicy, make_policy)
 from repro.serving.replay import (GroupFleet, make_group_fleet,
                                   replay_model, replay_params,
                                   replay_requests, served_stop_times)
@@ -21,20 +22,20 @@ from repro.serving.request import (FleetMetrics, Request, RequestState,
 from repro.serving.scheduler import OrcaScheduler
 
 __all__ = ["BlockPool", "ChunkSeg", "ChunkWork", "ComposeView",
-           "ContinuousServingEngine", "FIFOPolicy",
+           "ContinuousServingEngine", "EDFPolicy", "FIFOPolicy",
            "FleetMetrics", "GroupFleet", "NULL_BLOCK", "OrcaScheduler",
            "PrefixEntry",
            "PriorityPolicy", "ProbeState", "Request", "RequestGroup",
            "RequestState",
            "SchedulingPolicy", "ServeConfig",
-           "ServeResult", "ServingEngine", "SlotStepView",
+           "ServeResult", "ServingEngine", "SlotStepView", "Spill",
            "StaticQueueResult", "TTFTAwarePolicy", "blocks_needed",
            "chunk_supported",
            "chunked_prefill", "extract_trajectories", "group_requests",
            "init_probe_state",
            "inject_prefill", "make_group", "make_group_fleet",
            "make_policy", "make_request",
-           "make_serve_step",
+           "make_serve_step", "pad_row",
            "prefix_len", "probe_update", "prompt_key", "replay_model",
            "replay_params", "replay_requests", "reset_probe_slot",
-           "serve_queue_static", "served_stop_times"]
+           "serve_queue_static", "served_stop_times", "write_probe_slot"]

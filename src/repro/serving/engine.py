@@ -53,7 +53,7 @@ from repro.kernels.ttt_probe import ProbeStepOut as KernelOut
 from repro.kernels.ttt_probe import serving_probe_step
 from repro.models import attention as A
 from repro.models.registry import Model
-from repro.serving.kv_pool import NULL_BLOCK, blocks_needed
+from repro.serving.kv_pool import NULL_BLOCK, blocks_needed, pad_row
 
 
 class ProbeState(NamedTuple):
@@ -104,6 +104,21 @@ def reset_probe_slot(pc: ProbeConfig, theta, st: ProbeState, slot,
         jax.lax.dynamic_update_slice_in_dim(full, part.astype(full.dtype),
                                             slot, axis=0)
         for full, part in zip(st, one)])
+
+
+def write_probe_slot(st: ProbeState, slot, rows: ProbeState) -> ProbeState:
+    """Write ONE row of a batched ProbeState from saved per-leaf rows.
+
+    The restore half of preemption: ``rows`` holds one batch-axis-free row
+    per leaf (exactly what ``Spill`` captured at preempt time), written back
+    with the same dynamic-update-slice the reset path uses — so a restored
+    slot's probe state is bit-identical to the moment it was spilled.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+    return ProbeState(*[
+        jax.lax.dynamic_update_slice_in_dim(
+            full, part[None].astype(full.dtype), slot, axis=0)
+        for full, part in zip(st, rows)])
 
 
 def inject_prefill(model: Model, params, state, batch_one: Dict[str, jnp.ndarray],
@@ -529,6 +544,37 @@ def prefix_len(mcfg, batch_one: Dict[str, jnp.ndarray],
     return n
 
 
+@dataclasses.dataclass
+class Spill:
+    """Everything a preempted request needs to resume byte-identically,
+    copied to host RAM (the tiered-offload target: HBM pages -> host).
+
+    The per-request TTT calibrator (W_i, b_i, smoothing ring, counters)
+    *is* the request's identity — restoring it exactly, together with the
+    KV it conditions on and the position it decodes from, is what makes a
+    preempted-then-resumed request stop on the same reasoning step as an
+    undisturbed one.
+    """
+    probe: Tuple[np.ndarray, ...]   # one batch-axis-free row per ProbeState leaf
+    token: int                      # last decoded token (decode input)
+    pos: int                        # sequence position to resume from
+    armed: bool                     # True: was RUNNING; False: mid-prefill
+    prompt_len: int = 0             # prefill progress bookkeeping (host side)
+    # paged: host copies of the victim's pages, (L, max_blocks, ...) per leaf
+    pages: Optional[Dict[str, np.ndarray]] = None
+    n_blocks: int = 0               # physical blocks the pages cover
+    # dense: host copy of the slot's full decode-state lane (axis-1 slice)
+    lane: Optional[object] = None
+
+    @property
+    def nbytes(self) -> int:
+        """Host RAM this spill occupies (KV payload only)."""
+        leaves = (list(self.pages.values()) if self.pages is not None
+                  else jax.tree.leaves(self.lane) if self.lane is not None
+                  else [])
+        return int(sum(np.asarray(x).nbytes for x in leaves))
+
+
 class ContinuousServingEngine:
     """Fixed-shape batch of ``n_slots`` whose rows live independent lives.
 
@@ -624,11 +670,20 @@ class ContinuousServingEngine:
             self._prefill_pages = jax.jit(self._prefill_pages_impl,
                                           static_argnames=("s_pad",),
                                           donate_argnums=1)
+            # preemption: gather copies pages OUT (no donation — the pool
+            # keeps serving), scatter writes them back in place
+            self._gather_pages = jax.jit(self._gather_pages_impl)
+            self._scatter_pages = jax.jit(self._scatter_pages_impl,
+                                          donate_argnums=0)
         else:
             self._inject = jax.jit(functools.partial(
                 inject_prefill, model, cache_len=cache_len))
+            self._take_lane = jax.jit(self._take_lane_impl)
+            self._write_lane = jax.jit(self._write_lane_impl,
+                                       donate_argnums=0)
         self._reset = jax.jit(functools.partial(reset_probe_slot, pc),
                               static_argnames=("active",))
+        self._write_probe = jax.jit(write_probe_slot)
 
     # ------------------------------------------------------------------
     # paged device ops (jitted in __init__)
@@ -651,6 +706,40 @@ class ContinuousServingEngine:
                                    s_pad // self.block_size)
         return dict(pages, block_tables=state["block_tables"])
 
+    @staticmethod
+    def _gather_pages_impl(state, row):
+        # page axis is 1 in every page leaf; NULL tail rows clamp to page 0
+        # (their content is garbage but the scatter drops them — old and
+        # new rows share the same n_blocks, hence the same NULL tail)
+        src = jnp.where(row == NULL_BLOCK, 0, row)
+        return {k: v[:, src] for k, v in state.items()
+                if k != "block_tables"}
+
+    @staticmethod
+    def _scatter_pages_impl(state, pages, row):
+        out = {"block_tables": state["block_tables"]}
+        for k, v in state.items():
+            if k == "block_tables":
+                continue
+            # NULL rows are redirected past the pool and dropped — the
+            # copy-back can never touch the NULL page or a live page
+            dst = jnp.where(row == NULL_BLOCK, v.shape[1], row)
+            out[k] = v.at[:, dst].set(pages[k].astype(v.dtype), mode="drop")
+        return out
+
+    @staticmethod
+    def _take_lane_impl(state, slot):
+        return jax.tree.map(lambda x: x[:, slot], state)
+
+    @staticmethod
+    def _write_lane_impl(state, lane, slot):
+        slot = jnp.asarray(slot, jnp.int32)
+        return jax.tree.map(
+            lambda full, one: jax.lax.dynamic_update_slice_in_dim(
+                full, jnp.expand_dims(one, 1).astype(full.dtype), slot,
+                axis=1),
+            state, lane)
+
     # ------------------------------------------------------------------
     def admit(self, slot: int, batch_one: Dict[str, jnp.ndarray],
               prompt_len: int, *, block_row=None, skip_prefill: bool = False,
@@ -664,9 +753,7 @@ class ContinuousServingEngine:
         before this slot starts writing its own decode tokens into it."""
         if self.paged:
             assert block_row is not None, "paged admit needs a block row"
-            row = np.full((self.max_blocks,), NULL_BLOCK, np.int32)
-            row[:len(block_row)] = np.asarray(block_row, np.int32)
-            row = jnp.asarray(row)
+            row = jnp.asarray(pad_row(block_row, self.max_blocks))
             self.state = self._set_row(self.state,
                                        jnp.asarray(slot, jnp.int32), row)
             if copy_tail is not None:
@@ -718,6 +805,70 @@ class ContinuousServingEngine:
         reclaim."""
         self.release(slot)
 
+    def preempt(self, slot: int, *, block_row=None,
+                armed: bool = True, prompt_len: int = 0) -> Spill:
+        """INVOLUNTARY eviction: copy the slot's complete request identity
+        to host RAM, then release the slot.  Unlike ``cancel`` the request
+        is not dead — ``restore`` resumes it byte-identically later.
+
+        Paged mode takes the victim's physical block ids (``block_row`` —
+        the SCHEDULER's view, because a mid-prefill victim's device table
+        row is still NULL while chunks write through explicit rows) and
+        copies those pages out; dense mode copies the slot's whole
+        decode-state lane.  ``armed=False`` marks a mid-prefill victim:
+        its probe row is parked and its restore re-parks it (the table row
+        stays NULL until ``finish_prefill`` arms it)."""
+        probe = tuple(np.asarray(leaf[slot]) for leaf in self.st)
+        token = int(np.asarray(self.token[slot]))
+        pos = int(self.pos[slot])
+        pages = lane = None
+        n_blocks = 0
+        if self.paged:
+            assert block_row is not None, "paged preempt needs the block row"
+            n_blocks = len(block_row)
+            row = jnp.asarray(pad_row(block_row, self.max_blocks))
+            pages = {k: np.asarray(v) for k, v in
+                     self._gather_pages(self.state, row).items()}
+        else:
+            assert block_row is None
+            lane = jax.tree.map(
+                np.asarray,
+                self._take_lane(self.state, jnp.asarray(slot, jnp.int32)))
+        self.release(slot)
+        return Spill(probe=probe, token=token, pos=pos, armed=bool(armed),
+                     prompt_len=int(prompt_len), pages=pages,
+                     n_blocks=n_blocks, lane=lane)
+
+    def restore(self, slot: int, spill: Spill, *, block_row=None) -> None:
+        """Resume a spilled request in ``slot``: page copy-back (or dense
+        lane write), block-table rewrite, probe rows reloaded exactly,
+        token and position restored.  The new ``block_row`` need not be the
+        victim's original blocks — only the table indirection changes, the
+        virtual sequence the model sees is identical."""
+        if self.paged:
+            assert block_row is not None, "paged restore needs a block row"
+            assert len(block_row) == spill.n_blocks, \
+                (len(block_row), spill.n_blocks)
+            row = jnp.asarray(pad_row(block_row, self.max_blocks))
+            pages = {k: jnp.asarray(v) for k, v in spill.pages.items()}
+            self.state = self._scatter_pages(self.state, pages, row)
+            # mid-prefill rows stay parked at NULL — remaining chunks write
+            # through the explicit row and finish_prefill arms the table
+            table = row if spill.armed else \
+                jnp.full((self.max_blocks,), NULL_BLOCK, jnp.int32)
+            self.state = self._set_row(self.state,
+                                       jnp.asarray(slot, jnp.int32), table)
+        else:
+            assert block_row is None
+            lane = jax.tree.map(jnp.asarray, spill.lane)
+            self.state = self._write_lane(self.state, lane,
+                                          jnp.asarray(slot, jnp.int32))
+        rows = ProbeState(*[jnp.asarray(p) for p in spill.probe])
+        self.st = self._write_probe(self.st, jnp.asarray(slot, jnp.int32),
+                                    rows)
+        self.token = self.token.at[slot].set(spill.token)
+        self.pos[slot] = spill.pos
+
     # ------------------------------------------------------------------
     # chunked prefill: PREFILL is a resident phase, not an admission event
     def begin_prefill(self, slot: int) -> None:
@@ -747,11 +898,9 @@ class ContinuousServingEngine:
         assert self.chunk_tokens, "engine built without chunk_tokens"
         if self.paged:
             assert block_row is not None, "paged finish_prefill needs a row"
-            row = np.full((self.max_blocks,), NULL_BLOCK, np.int32)
-            row[:len(block_row)] = np.asarray(block_row, np.int32)
-            self.state = self._set_row(self.state,
-                                       jnp.asarray(slot, jnp.int32),
-                                       jnp.asarray(row))
+            self.state = self._set_row(
+                self.state, jnp.asarray(slot, jnp.int32),
+                jnp.asarray(pad_row(block_row, self.max_blocks)))
         self.st = self._reset(self.theta, self.st,
                               jnp.asarray(slot, jnp.int32), active=True)
         self.token = self.token.at[slot].set(0)

@@ -40,6 +40,15 @@ def blocks_needed(n_tokens: int, block_size: int) -> int:
     return max((int(n_tokens) + block_size - 1) // block_size, 1)
 
 
+def pad_row(block_row: Sequence[int], max_blocks: int) -> np.ndarray:
+    """A request's physical block ids padded to a fixed-width table row
+    with NULL blocks — the one layout the engine's device ops (admit,
+    finish_prefill, preempt/restore page gather+scatter) all share."""
+    row = np.full((int(max_blocks),), NULL_BLOCK, np.int32)
+    row[:len(block_row)] = np.asarray(block_row, np.int32)
+    return row
+
+
 def prompt_key(tokens) -> str:
     """Prefix-sharing key: content hash of the prompt token ids."""
     arr = np.asarray(tokens, np.int64).ravel()

@@ -1,18 +1,31 @@
 """Pluggable scheduling policies for the unified token-budget step.
 
-``OrcaScheduler``'s batch composer asks its policy two questions every
+``OrcaScheduler``'s batch composer asks its policy three questions every
 iteration:
 
 * **whom to admit** (``select_admit``) — which WAITING request takes the
   next free slot.  FIFO takes the queue head; the priority policy serves
   latency-sensitive requests first with an anti-starvation aging guard for
-  the batch class.
+  the batch class; the EDF policy ranks by per-request deadline (falling
+  back to per-class SLOs, which ``EDFPolicy.from_metrics`` derives from a
+  previous run's ``c<class>_ttft_ms_p99`` fleet metrics).
+* **whom to preempt** (``select_victim``) — when a reservation fails for a
+  strictly-higher-priority unit, which resident is spilled to host RAM to
+  make room.  Default: least-important class first, newest admission first
+  (its KV investment is smallest).  Only strictly-lower-priority residents
+  are ever eligible, so the preemption relation is a DAG and a restored
+  victim can never preempt its preemptor (no livelock).
 * **how much prefill** (``prefill_share``) — how many of the step's budget
   tokens go to mid-prefill residents (the composer then packs them across
   up to ``max_pack`` requests).  FIFO gives prefill whatever the decode
   fleet leaves; the TTFT-aware policy widens the share when decode slots
   are idle and throttles it when the fleet is full, tuning the
   TTFT-vs-stall trade the committed benchmark measures.
+
+All policies share one anti-starvation aging clock (``max_head_skips``):
+a unit passed over — by a priority queue-jump OR because it is a gang
+needing more slots than are free while a smaller unit admits past it —
+ages toward a PIN, after which nothing may be admitted past it.
 
 Every policy also carries the **probe-aware chunk sizing** knob
 (``probe_margin``): when at least half the running residents are within
@@ -45,15 +58,22 @@ class ComposeView:
 
 
 class SchedulingPolicy:
-    """Base policy: FIFO admission, greedy prefill share.
+    """Base policy: FIFO admission, greedy prefill share, lowest-class /
+    newest-first victim selection.
 
     ``probe_margin`` (tokens) enables probe-aware chunk sizing; None
-    disables it."""
+    disables it.  ``max_head_skips`` bounds how many times any unit may be
+    passed over (priority queue-jump or oversized-gang skip) before it is
+    pinned."""
 
     name = "fifo"
 
-    def __init__(self, *, probe_margin: Optional[int] = None):
+    def __init__(self, *, probe_margin: Optional[int] = None,
+                 max_head_skips: int = 8):
         self.probe_margin = probe_margin
+        assert max_head_skips >= 1
+        self.max_head_skips = int(max_head_skips)
+        self._head_skips: Dict[int, int] = {}
 
     # -- admission -----------------------------------------------------
     def select_admit(self, waiting: Sequence[Request], step: int) -> int:
@@ -67,6 +87,44 @@ class SchedulingPolicy:
         (reservation succeeded, slot assigned) and before it leaves the
         queue — the place for aging/fairness bookkeeping, so pool-full
         iterations that admit nobody never advance fairness clocks."""
+        self._head_skips.pop(waiting[idx].req_id, None)
+
+    def on_skipped_unit(self, units: Sequence[Sequence[Request]],
+                        idx: int) -> bool:
+        """The scheduler wants to pass over the SELECTED unit at ``idx``
+        (e.g. a gang needing more slots than are free) and admit a smaller
+        unit this iteration.  Returns True to allow the skip (and advances
+        the unit's aging clock); False when the unit has already been
+        skipped ``max_head_skips`` times and is now PINNED — the scheduler
+        must stop admitting past it and wait for capacity, so a blocked
+        gang always makes progress under a sustained singleton stream."""
+        rid = units[idx][0].req_id
+        n = self._head_skips.get(rid, 0)
+        if n >= self.max_head_skips:
+            return False
+        self._head_skips[rid] = n + 1
+        return True
+
+    # -- preemption ----------------------------------------------------
+    def select_victim(self, residents: Sequence[Request],
+                      for_priority: int) -> Optional[int]:
+        """Index into ``residents`` of the request to preempt (spill to
+        host RAM) to make room for an admission of priority class
+        ``for_priority``, or None to refuse.  Only strictly-LOWER-priority
+        residents (``priority > for_priority``: larger number = less
+        urgent) are eligible — the preemption relation is then a DAG, so a
+        restored victim can never preempt its preemptor and the scheduler
+        cannot livelock.  Must be side-effect free (the scheduler runs a
+        feasibility simulation before executing any spill).  Default:
+        least-important class first, newest admission first within a class
+        (its KV investment is smallest, vLLM's recompute-cheapest rule)."""
+        eligible = [i for i, r in enumerate(residents)
+                    if r.priority > for_priority]
+        if not eligible:
+            return None
+        return max(eligible, key=lambda i: (residents[i].priority,
+                                            residents[i].admitted_step,
+                                            residents[i].req_id))
 
     # -- gang admission (self-consistency groups) ----------------------
     def select_admit_unit(self, units: Sequence[Sequence[Request]],
@@ -124,10 +182,8 @@ class PriorityPolicy(SchedulingPolicy):
 
     def __init__(self, *, max_head_skips: int = 8,
                  probe_margin: Optional[int] = None):
-        super().__init__(probe_margin=probe_margin)
-        assert max_head_skips >= 1
-        self.max_head_skips = int(max_head_skips)
-        self._head_skips: Dict[int, int] = {}
+        super().__init__(probe_margin=probe_margin,
+                         max_head_skips=max_head_skips)
 
     def select_admit(self, waiting: Sequence[Request], step: int) -> int:
         if self._head_skips.get(waiting[0].req_id, 0) >= self.max_head_skips:
@@ -141,8 +197,61 @@ class PriorityPolicy(SchedulingPolicy):
         if idx != 0:
             self._head_skips[head.req_id] = \
                 self._head_skips.get(head.req_id, 0) + 1
-        else:
-            self._head_skips.pop(head.req_id, None)
+        self._head_skips.pop(waiting[idx].req_id, None)
+
+
+class EDFPolicy(PriorityPolicy):
+    """Earliest-deadline-first admission: rank WAITING units by deadline
+    instead of raw class.  A request's deadline is its own ``deadline_ms``
+    when set, else the SLO of its priority class (``class_slo_ms``), else
+    ``default_slo_ms * (priority + 1)`` — so with no configuration at all
+    EDF degrades gracefully to priority order.  ``from_metrics`` closes
+    the loop with the fleet's own observability: per-class SLOs are seeded
+    from a previous run's ``c<class>_ttft_ms_p99`` metrics (what each
+    class ACTUALLY achieves, scaled by ``slack``), so the ranking adapts
+    to the serving configuration rather than hand-tuned constants.
+    Deadlines are measured from the shared submission epoch;
+    ``submitted_step`` breaks ties for staggered arrivals.  Inherits the
+    priority policy's head-pin aging and the base victim selection."""
+
+    name = "edf"
+
+    def __init__(self, *, class_slo_ms: Optional[Dict[int, float]] = None,
+                 default_slo_ms: float = 1000.0, max_head_skips: int = 8,
+                 probe_margin: Optional[int] = None):
+        super().__init__(max_head_skips=max_head_skips,
+                         probe_margin=probe_margin)
+        self.class_slo_ms = {int(k): float(v)
+                             for k, v in (class_slo_ms or {}).items()}
+        self.default_slo_ms = float(default_slo_ms)
+
+    @classmethod
+    def from_metrics(cls, per_class: Dict[str, float], *,
+                     slack: float = 1.0, **kwargs) -> "EDFPolicy":
+        """Build an EDF policy whose class SLOs are a previous run's
+        observed ``c<class>_ttft_ms_p99`` (``FleetMetrics.per_class``),
+        scaled by ``slack`` (>1 loosens, <1 tightens)."""
+        import re
+        slo = {}
+        for key, val in (per_class or {}).items():
+            m = re.fullmatch(r"c(\d+)_ttft_ms_p99", key)
+            if m:
+                slo[int(m.group(1))] = float(val) * float(slack)
+        return cls(class_slo_ms=slo, **kwargs)
+
+    def _deadline(self, r: Request) -> float:
+        if r.deadline_ms is not None:
+            return float(r.deadline_ms)
+        return self.class_slo_ms.get(
+            r.priority, self.default_slo_ms * (r.priority + 1))
+
+    def select_admit(self, waiting: Sequence[Request], step: int) -> int:
+        if self._head_skips.get(waiting[0].req_id, 0) >= self.max_head_skips:
+            return 0
+        return min(range(len(waiting)),
+                   key=lambda i: (self._deadline(waiting[i]),
+                                  waiting[i].submitted_step,
+                                  waiting[i].req_id))
 
 
 class TTFTAwarePolicy(SchedulingPolicy):
@@ -177,6 +286,7 @@ class TTFTAwarePolicy(SchedulingPolicy):
 _POLICIES = {
     "fifo": FIFOPolicy,
     "priority": PriorityPolicy,
+    "edf": EDFPolicy,
     "ttft": TTFTAwarePolicy,
 }
 

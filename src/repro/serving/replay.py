@@ -151,8 +151,14 @@ def replay_requests(lengths: Sequence[int], *, prompt_len: int = 1,
 def served_stop_times(requests: Sequence[Request],
                       lengths: Sequence[int]) -> np.ndarray:
     """Map served outcomes onto offline ``stopping.stop_times`` semantics:
-    0-based stop index, or T_i when the budget ran out (never charged)."""
-    return np.array([r.stop_step - 1 if r.stop_step > 0 else int(T)
+    0-based stop index, or T_i when the budget ran out (never charged).
+
+    The engine convention is ``stop_step >= 0`` means "stopped" (see
+    ``engine.ServeResult`` / ``ContinuousServingEngine``) — comparing
+    against 0 here would misread a step-0 stop as budget-exhausted.  The
+    0-based index floors at 0: the offline grid cannot stop before its
+    first score, so a (convention-level) step-0 stop maps to index 0."""
+    return np.array([max(r.stop_step - 1, 0) if r.stop_step >= 0 else int(T)
                      for r, T in zip(requests, lengths)], np.int64)
 
 

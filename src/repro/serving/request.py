@@ -3,6 +3,9 @@
 A ``Request`` is one user sequence moving through the ORCA server:
 
     WAITING -> PREFILL -> RUNNING -> STOPPED | FINISHED | CANCELLED
+                  ^          |
+                  +- SWAPPED +   (involuntary preemption: spilled to host,
+                                  re-admitted before WAITING)
 
 ``STOPPED`` means the calibrated ORCA threshold test fired (the paper's
 early stop — the request's remaining step budget is *returned to the
@@ -10,12 +13,19 @@ fleet* by evicting its slot); ``FINISHED`` means the token budget ran out
 without a stop; ``CANCELLED`` means a *voluntary* mid-flight release — the
 request's self-consistency group reached its calibrated consensus and the
 scheduler evicted the still-running sibling (no per-request stop fired:
-``stop_step`` stays -1).  Metrics use the shared savings helper
+``stop_step`` stays -1).  ``SWAPPED`` is *involuntary* and *temporary*: the
+scheduler preempted the request to make room for a strictly-higher-priority
+admission, spilling its KV pages AND its probe fast-weight state to host
+RAM (``engine.Spill``); it re-enters PREFILL or RUNNING via ``restore``
+with byte-identical state, so its eventual stop decision is unchanged.
+Metrics use the shared savings helper
 (``repro.core.stopping.step_savings``) so served savings are directly
 comparable with offline-evaluated savings; a cancelled sample's *unspent*
-budget is counted as group savings (``FleetMetrics.group_savings``), and
-CANCELLED requests are excluded from the TTFT / queue-wait percentiles so
-by-design cancellations don't pollute the latency tails.
+budget is counted as group savings (``FleetMetrics.group_savings`` — the
+TOTAL unspent reasoning steps across groups; ``group_savings_mean`` is the
+per-group mean fraction), and CANCELLED requests are excluded from the
+TTFT / queue-wait percentiles so by-design cancellations don't pollute the
+latency tails.
 """
 from __future__ import annotations
 
@@ -40,6 +50,9 @@ class RequestState(enum.Enum):
     CANCELLED = "cancelled"  # voluntary release: group consensus fired and
     #                          the scheduler evicted this still-running
     #                          sibling mid-flight (stop_step stays -1)
+    SWAPPED = "swapped"      # involuntarily preempted: KV + probe state
+    #                          spilled to host RAM, queued for restore
+    #                          ahead of WAITING admissions
 
 
 _req_counter = itertools.count()
@@ -55,6 +68,9 @@ class Request:
     # latency-sensitive (0 = interactive, 1 = batch by convention); FIFO
     # policies ignore it, PriorityPolicy admits lower classes first
     priority: int = 0
+    # optional per-request latency deadline for the EDF policy (ms from
+    # submission); None -> the policy falls back to the class SLO
+    deadline_ms: Optional[float] = None
     # self-consistency group membership: samples sharing a group_id are
     # gang-admitted atomically and consensus-stopped together (None = the
     # classic independent request; group code is then completely inert)
@@ -89,6 +105,10 @@ class Request:
     block_ids: List[int] = dataclasses.field(default_factory=list)
     n_shared_blocks: int = 0              # prefix pages shared with a donor
     prefill_skipped: bool = False         # prompt was resident: no prefill
+
+    # preemption bookkeeping (owned by the scheduler)
+    n_preempted: int = 0                  # times spilled to host RAM
+    restored_step: int = -1               # engine step of the last restore
 
     @property
     def done(self) -> bool:
@@ -165,9 +185,15 @@ class FleetMetrics:
     samples_cancelled: int = 0   # siblings evicted by consensus
     consensus_groups: int = 0    # groups whose consensus fired
     consensus_steps: float = 0.0  # mean reasoning-step index of consensus
-    group_savings: float = 0.0   # mean over groups of 1 - spent/budget,
-    #                              counting cancelled samples' UNSPENT budget
+    group_savings: float = 0.0   # TOTAL unspent reasoning steps across all
+    #                              groups — cancelled samples' UNSPENT budget
+    #                              (what the fleet actually got back)
+    group_savings_mean: float = 0.0  # mean over groups of 1 - spent/budget
     cancel_freed_blocks: int = 0  # KV pages that died at cancellation
+    # preemption (overload-safe serving tentpole)
+    preemptions: int = 0         # victims spilled to host RAM
+    restores: int = 0            # spilled requests resumed
+    spilled_blocks: int = 0      # KV pages copied out across all spills
 
     def row(self) -> Dict[str, float]:
         return {
@@ -176,7 +202,11 @@ class FleetMetrics:
             "consensus_groups": self.consensus_groups,
             "consensus_steps": self.consensus_steps,
             "group_savings": self.group_savings,
+            "group_savings_mean": self.group_savings_mean,
             "cancel_freed_blocks": self.cancel_freed_blocks,
+            "preemptions": self.preemptions,
+            "restores": self.restores,
+            "spilled_blocks": self.spilled_blocks,
             "packed_chunks": self.packed_chunks,
             "peak_step_tokens": self.peak_step_tokens,
             "requests": self.n_requests, "slots": self.n_slots,

@@ -51,6 +51,23 @@ are identical to admission-time prefill across every policy and packing
 mode (asserted in ``tests/test_chunked_prefill.py``,
 ``tests/test_packed_chunks.py`` and the throughput gate).
 
+Preemption (``preemption=True``, the overload-safe default) makes the
+scheduler reclaim residents, not just wait for them: when capacity (slots
+or pages) fails for a unit that is strictly MORE urgent than some
+resident, the policy's ``select_victim`` picks strictly-lower-priority
+victims (newest first by default) and ``engine.preempt`` spills each one's
+KV pages AND probe fast-weight state to host RAM (``engine.Spill``).
+Spilled requests sit in a SWAPPED queue that re-admits BEFORE the waiting
+queue (``engine.restore`` is a block-table rewrite + page copy-back with
+the probe buffers reloaded bit-for-bit), and a swapped head that cannot
+yet restore barriers its own class so it is never overtaken.  A
+feasibility simulation runs before any spill (no victim is evicted unless
+the unit will actually fit) and victims are only ever strictly lower
+priority, so the preemption relation is a DAG — no livelock.  Because the
+spill/restore round-trip is byte-exact, stop decisions are invariant
+under ANY preemption schedule (asserted in ``tests/test_preemption.py``
+and ``tests/test_validity_regression.py``).
+
 Eviction is score-invariant by construction: each slot's probe fast
 weights are reset to (W0, b0) at admission and the per-slot KV view (dense
 lane or block table) only ever exposes the slot's own request, so a
@@ -74,7 +91,7 @@ from repro.core.probe import ProbeConfig
 from repro.models.registry import Model
 from repro.serving.engine import (ChunkSeg, ChunkWork,
                                   ContinuousServingEngine, ServeConfig,
-                                  chunk_supported, prefix_len)
+                                  Spill, chunk_supported, prefix_len)
 from repro.serving.groups import RequestGroup, group_requests
 from repro.serving.kv_pool import BlockPool, blocks_needed, prompt_key
 from repro.serving.policy import (ComposeView, SchedulingPolicy, make_policy)
@@ -107,7 +124,8 @@ class OrcaScheduler:
                  policy: Union[str, SchedulingPolicy, None] = None,
                  pack_chunks: bool = True,
                  pack_max: int = 4,
-                 consensus: Union[GroupCalibrator, float, None] = None):
+                 consensus: Union[GroupCalibrator, float, None] = None,
+                 preemption: bool = True):
         self.model, self.params, self.pc, self.theta, self.cfg = \
             model, params, pc, theta, cfg
         self.n_slots = n_slots
@@ -186,6 +204,11 @@ class OrcaScheduler:
                     "GroupCalibrator.calibrate(...) first or pass "
                     "consensus=<float threshold>")
         self.consensus = consensus
+        # involuntary preemption: reservation failures for strictly-more-
+        # urgent units spill lower-priority residents to host RAM instead
+        # of waiting; False restores the wait-only (PR-6) admission
+        self.preemption = bool(preemption)
+        self._n_preempted = self._n_restored = self._n_spilled_blocks = 0
         self.pool: Optional[BlockPool] = None
         self._engine: Optional[ContinuousServingEngine] = None
 
@@ -359,6 +382,110 @@ class OrcaScheduler:
         return plans
 
     # ------------------------------------------------------------------
+    # involuntary preemption: spill residents to host RAM, restore later
+    def _spill(self, req: Request, running: Dict[int, Request],
+               prefilling: Dict[int, Request], plans: Dict[int, "_AdmitPlan"],
+               free: List[int], swapped) -> None:
+        """Preempt one resident: engine state to host RAM, pages back to
+        the pool, slot back to the fleet, request onto the SWAPPED queue."""
+        eng = self._engine
+        slot = req.slot
+        armed = req.state is RequestState.RUNNING
+        spill = eng.preempt(
+            slot,
+            block_row=(req.block_ids if eng.paged and req.block_ids
+                       else None),
+            armed=armed, prompt_len=req.prefill_progress)
+        if self.paged and req.block_ids:
+            self._n_spilled_blocks += len(req.block_ids)
+            self.pool.free(req.block_ids)
+        req.block_ids = []
+        req.n_shared_blocks = 0
+        running.pop(slot, None)
+        prefilling.pop(slot, None)
+        # a mid-prefill victim's deferred donor plan names the pages just
+        # freed — stale the moment the spill lands, so it is dropped (the
+        # restored request re-registers nothing; only an optimization lost)
+        plans.pop(slot, None)
+        free.append(slot)
+        req.slot = -1
+        req.state = RequestState.SWAPPED
+        req.n_preempted += 1
+        self._n_preempted += 1
+        swapped.append((req, spill))
+
+    def _restore(self, req: Request, spill: Spill,
+                 row: Optional[List[int]], free: List[int],
+                 running: Dict[int, Request],
+                 prefilling: Dict[int, Request], steps: int) -> None:
+        """Resume a spilled request in a free slot: page copy-back (the
+        new pages need not be the originals — only the block-table
+        indirection changes), probe buffers reloaded exactly, and the
+        request re-enters RUNNING (armed) or PREFILL (mid-prompt, its
+        remaining chunks ride the unified step as before)."""
+        eng = self._engine
+        slot = free.pop()
+        eng.restore(slot, spill,
+                    block_row=(row if eng.paged else None))
+        if row is not None:
+            req.block_ids = list(row)
+            req.n_shared_blocks = 0
+        req.slot = slot
+        req.restored_step = steps
+        self._n_restored += 1
+        if spill.armed:
+            req.state = RequestState.RUNNING
+            running[slot] = req
+        else:
+            req.state = RequestState.PREFILL
+            prefilling[slot] = req
+
+    def _preempt_for(self, members: Sequence[Request], prio: int,
+                     running: Dict[int, Request],
+                     prefilling: Dict[int, Request], free: List[int],
+                     swapped, plans: Dict[int, "_AdmitPlan"]) -> bool:
+        """Make room (slots and, in paged mode, pages) for ``members`` by
+        spilling strictly-lower-priority residents.
+
+        Runs a FEASIBILITY SIMULATION first — victims are chosen by the
+        policy over a shrinking candidate list while simulated refcount
+        decrements track which shared pages would actually die — and
+        executes NO spill unless the unit will fit afterwards, so a spill
+        can never be wasted on a unit that still doesn't fit (and a
+        restored victim, being strictly lower priority, can never preempt
+        its preemptor back: the relation is a DAG, no livelock)."""
+        if not self.preemption:
+            return False
+        cand = list(running.values()) + list(prefilling.values())
+        victims: List[Request] = []
+        sim_slots = len(free)
+        need_slots = len(members)
+        sim_pages = self.pool.num_free if self.paged else 0
+        need_pages = (sum(self._request_blocks(r) for r in members)
+                      if self.paged else 0)
+        sim_dec: Dict[int, int] = {}
+
+        def fits() -> bool:
+            return sim_slots >= need_slots and sim_pages >= need_pages
+
+        while not fits():
+            vi = self.policy.select_victim(cand, prio)
+            if vi is None:
+                return False
+            victim = cand.pop(vi)
+            victims.append(victim)
+            sim_slots += 1
+            for b in victim.block_ids:
+                d = sim_dec.get(b, 0) + 1
+                sim_dec[b] = d
+                # a shared page only returns with its LAST owner
+                if self.pool.refcount(b) - d == 0:
+                    sim_pages += 1
+        for victim in victims:
+            self._spill(victim, running, prefilling, plans, free, swapped)
+        return True
+
+    # ------------------------------------------------------------------
     def run(self, requests: Sequence[Request]
             ) -> Tuple[List[Request], FleetMetrics]:
         """Drive every request to STOPPED/FINISHED/CANCELLED; return them
@@ -382,6 +509,7 @@ class OrcaScheduler:
         open_groups: List[RequestGroup] = \
             [g for g in groups if g.size >= 2] if self.consensus else []
         waiting = deque(units)
+        swapped: deque = deque()                  # (request, Spill) pairs
         running: Dict[int, Request] = {}          # slot -> request
         prefilling: Dict[int, Request] = {}       # slot -> mid-prefill req
         plans: Dict[int, _AdmitPlan] = {}         # deferred donor registry
@@ -390,34 +518,99 @@ class OrcaScheduler:
         total_tokens = n_chunks = n_packed = 0
         peak_blocks = prefill_skips = peak_step_tokens = 0
         n_cancelled = cancel_freed = 0
+        self._n_preempted = self._n_restored = self._n_spilled_blocks = 0
         stalls: List[float] = []
         t0 = time.perf_counter()
 
-        while waiting or running or prefilling:
+        while waiting or swapped or running or prefilling:
             t_iter = time.perf_counter()
-            # admission: refill free slots before the next fused step; the
-            # POLICY picks which UNIT (a whole group, or a singleton for
-            # the classic request) — in paged mode a unit that doesn't fit
-            # the pool holds its place and WAITS for an eviction to return
-            # pages, and a group additionally waits for enough free SLOTS:
-            # gang admission is all-or-nothing on both resources, so a
-            # group is never half-resident.  Pages are still reserved
-            # ALL-OR-NOTHING, whether the prompt then prefills in one
-            # admission shot or in scheduled chunks.
-            while free and waiting:
-                idx = self.policy.select_admit_unit(waiting, steps)
+            # admission: refill free slots before the next fused step.
+            # SWAPPED requests (preemption victims) restore FIRST — ahead
+            # of every WAITING unit — and a swapped head that cannot yet
+            # restore BARRIERS its own class: only strictly-more-urgent
+            # units admit past it, so a victim is never overtaken by its
+            # own class.  Then the POLICY picks which WAITING UNIT (a
+            # whole group, or a singleton for the classic request) — in
+            # paged mode a unit that doesn't fit the pool holds its place
+            # and WAITS for an eviction to return pages, and a group
+            # additionally waits for enough free SLOTS: gang admission is
+            # all-or-nothing on both resources, so a group is never
+            # half-resident.  Pages are still reserved ALL-OR-NOTHING,
+            # whether the prompt then prefills in one admission shot or in
+            # scheduled chunks.  When capacity fails for a unit strictly
+            # MORE urgent than some resident, ``_preempt_for`` spills
+            # policy-chosen victims until the unit fits; and a gang
+            # needing more slots than are free no longer stalls smaller
+            # units behind it — the policy may SKIP it, bounded by the
+            # ``max_head_skips`` aging guard (a pinned gang admits next).
+            tried: set = set()        # id(unit) passed over this round
+            barrier_prio: Optional[int] = None
+            while swapped or waiting:
+                if swapped and barrier_prio is None:
+                    req, spill = swapped[0]
+                    if req.done:      # cancelled while swapped
+                        swapped.popleft()
+                        continue
+                    if free:
+                        row = None
+                        if self.paged:
+                            row = self.pool.allocate(
+                                self._request_blocks(req))
+                        if row is not None or not self.paged:
+                            swapped.popleft()
+                            self._restore(req, spill, row, free, running,
+                                          prefilling, steps)
+                            if self.paged:
+                                peak_blocks = max(peak_blocks,
+                                                  self.pool.blocks_in_use)
+                            continue
+                    if self._preempt_for([req], req.priority, running,
+                                         prefilling, free, swapped, plans):
+                        continue      # room made: retry the restore
+                    if not (running or prefilling):
+                        raise RuntimeError(
+                            f"swapped request {req.req_id} cannot restore "
+                            "with the fleet empty — slot/page accounting "
+                            "is corrupt")
+                    barrier_prio = req.priority
+                if not waiting:
+                    break
+                cand_idx = [i for i, u in enumerate(waiting)
+                            if id(u) not in tried]
+                if not cand_idx:
+                    break
+                cand = [waiting[i] for i in cand_idx]
+                sel = self.policy.select_admit_unit(cand, steps)
+                idx = cand_idx[sel]
                 unit = waiting[idx]
                 members = [r for r in unit
                            if r.state is RequestState.WAITING]
                 if not members:          # fully cancelled before admission
                     del waiting[idx]
                     continue
+                prio = min(r.priority for r in members)
+                if barrier_prio is not None and prio >= barrier_prio:
+                    break     # nothing more urgent than the blocked head
                 if len(members) > len(free):
-                    break                # gang needs more slots: wait
+                    # slot shortage: preempt strictly-less-urgent
+                    # residents; else let the policy skip the oversized
+                    # unit so smaller units behind it still admit
+                    if not self._preempt_for(members, prio, running,
+                                             prefilling, free, swapped,
+                                             plans):
+                        if free and len(cand) > 1 \
+                                and self.policy.on_skipped_unit(cand, sel):
+                            tried.add(id(unit))
+                            continue
+                        break
                 if self.paged:
                     mplans = self._reserve_unit(members)
+                    if mplans is None and self._preempt_for(
+                            members, prio, running, prefilling, free,
+                            swapped, plans):
+                        mplans = self._reserve_unit(members)
                     if mplans is None:
-                        if not (running or prefilling):
+                        if not (running or prefilling or swapped):
                             need = sum(self._request_blocks(r)
                                        for r in members)
                             what = (f"group {members[0].group_id}"
@@ -430,7 +623,7 @@ class OrcaScheduler:
                         break
                 else:
                     mplans = [None] * len(members)
-                self.policy.on_admitted_unit(waiting, idx)
+                self.policy.on_admitted_unit(cand, sel)
                 del waiting[idx]
                 for req, plan in zip(members, mplans):
                     slot = free.pop()
@@ -605,6 +798,20 @@ class OrcaScheduler:
                         for sib in grp.requests:
                             if sib.done:
                                 continue
+                            if sib.state is RequestState.SWAPPED:
+                                # a spilled sibling holds no slot and no
+                                # pages (both returned at spill) — drop
+                                # its queued restore and mark it cancelled
+                                for qi, (q, _) in enumerate(swapped):
+                                    if q is sib:
+                                        del swapped[qi]
+                                        break
+                                sib.steps_run = len(sib.scores)
+                                sib.stop_step = -1
+                                self._complete(sib, RequestState.CANCELLED,
+                                               steps)
+                                n_cancelled += 1
+                                continue
                             slot = sib.slot
                             eng.cancel(slot)
                             if self.paged and sib.block_ids:
@@ -706,14 +913,23 @@ class OrcaScheduler:
         real_groups = [g for g in (groups or []) if g.size >= 2]
         g_sav = [g.savings(tps, dmn) for g in real_groups]
         fired = [g for g in real_groups if g.decided]
+        # total unspent reasoning steps across groups — what the fleet
+        # actually got back (the documented group_savings semantics; the
+        # old per-group mean fraction survives as group_savings_mean)
+        g_unspent = [max(g.budget_steps(tps, dmn) - g.steps_spent(), 0)
+                     for g in real_groups]
         return FleetMetrics(
             samples_cancelled=n_cancelled,
             consensus_groups=len(fired),
             consensus_steps=(float(np.mean([g.consensus_index
                                             for g in fired]))
                              if fired else 0.0),
-            group_savings=float(np.mean(g_sav)) if g_sav else 0.0,
+            group_savings=float(sum(g_unspent)),
+            group_savings_mean=float(np.mean(g_sav)) if g_sav else 0.0,
             cancel_freed_blocks=cancel_freed,
+            preemptions=self._n_preempted,
+            restores=self._n_restored,
+            spilled_blocks=self._n_spilled_blocks,
             n_requests=n, n_slots=self.n_slots, engine_steps=steps,
             active_slot_steps=active_slot_steps, wall_time_s=wall,
             requests_per_s=n / wall, tokens_per_s=total_tokens / wall,

@@ -396,8 +396,13 @@ def _sweep_case(budget, chunk, lens, policy):
     # admission reorders service
     assert [r.stop_step for r in done_c] == [r.stop_step for r in done_o]
     assert fleet.peak_step_tokens <= budget
-    # overlapping residents never co-own a private page
-    spans = [(r.admitted_step, r.completed_step, set(r.block_ids),
+    # overlapping residents never co-own a private page — a preempted
+    # request frees its pages while SWAPPED and block_ids records the
+    # post-restore allocation, so its ownership span starts at
+    # restored_step (step-level double ownership is owned by
+    # tests/test_preemption.py + pool.check)
+    spans = [((r.restored_step if r.n_preempted else r.admitted_step),
+              r.completed_step, set(r.block_ids),
               r.n_shared_blocks) for r in done_c]
     for i in range(len(spans)):
         for j in range(i + 1, len(spans)):

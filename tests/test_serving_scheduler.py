@@ -13,7 +13,8 @@ from repro.models import build
 from repro.serving import (ContinuousServingEngine, OrcaScheduler,
                            RequestState, ServeConfig, ServingEngine,
                            init_probe_state, make_request, replay_model,
-                           replay_params, reset_probe_slot)
+                           replay_params, reset_probe_slot,
+                           served_stop_times)
 
 
 @pytest.fixture(scope="module")
@@ -247,3 +248,18 @@ def test_scheduler_fuzz_no_double_occupancy(small_model):
     # slot-step accounting is consistent with the occupancy intervals
     busy = sum(r.completed_step - r.admitted_step for r in done)
     assert busy == fleet.active_slot_steps
+
+
+# ---------------------------------------------------------------------------
+# served_stop_times convention regression
+
+def test_served_stop_times_step_zero_stop():
+    """The engine convention is ``stop_step >= 0`` means "stopped" — the
+    old ``> 0`` comparison misread a step-0 stop as budget exhaustion and
+    charged the request its full length.  The 0-based offline index floors
+    at 0 (the offline grid cannot stop before its first score)."""
+    reqs = [make_request(np.zeros(1, np.int64)) for _ in range(3)]
+    reqs[0].stop_step = 0        # convention-level boundary case
+    reqs[1].stop_step = 1        # the kernel's earliest real stop
+    reqs[2].stop_step = -1       # budget exhausted: never charged
+    assert served_stop_times(reqs, [12, 12, 12]).tolist() == [0, 0, 12]

@@ -47,7 +47,7 @@ def noisy_splits():
 
 
 def _serve(calibrator, test, lam, chunk_tokens=None, policy=None,
-           pack_chunks=False):
+           pack_chunks=False, priorities=None):
     pc, theta = calibrator.serving_params()
     cfg = ServeConfig(tokens_per_step=1,
                       max_new_tokens=int(test.lengths.max()),
@@ -64,7 +64,8 @@ def _serve(calibrator, test, lam, chunk_tokens=None, policy=None,
                           pack_chunks=pack_chunks)
     reqs = replay_requests(test.lengths)
     for i, r in enumerate(reqs):
-        r.priority = i % 2        # two classes: exercises priority policies
+        # two classes by default: exercises priority policies
+        r.priority = priorities[i] if priorities is not None else i % 2
     done, fleet = sched.run(reqs)
     assert fleet.peak_blocks_in_use <= 3 * max_blocks
     return served_stop_times(done, test.lengths), fleet
@@ -87,6 +88,16 @@ def _assert_served_validity(calibrator, cal, test):
                                     policy="priority", pack_chunks=True)
     np.testing.assert_array_equal(tau_chunk, tau_off)
     assert fleet_chunk.packed_chunks > 0, "packing never engaged"
+    # involuntary preemption (an overload burst: urgent class-0 requests
+    # hit a full fleet and spill lower-class residents' KV AND probe state
+    # to host RAM, restored later) must not move a single stop either —
+    # the spill/restore round trip is byte-exact, so the conformal
+    # guarantee is preemption-schedule invariant
+    prio = [1, 1, 1, 0, 0] + [2] * (len(test) - 5)
+    tau_pre, fleet_pre = _serve(calibrator, test, lam, priorities=prio)
+    assert fleet_pre.preemptions > 0, "overload never forced a spill"
+    assert fleet_pre.restores == fleet_pre.preemptions
+    np.testing.assert_array_equal(tau_pre, tau_off)
     # and it respects the calibrated risk level on held-out data
     labels = make_labels(test, calibrator.mode)
     risk = float(S.procedure_risk(tau_srv[:, None], labels, test.mask).mean())
