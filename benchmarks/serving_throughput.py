@@ -48,6 +48,24 @@ be IDENTICAL across paths (asserted):
     byte-identical across both runs (asserted — the spill/restore round
     trip is exact, so the calibrated procedure is preemption-invariant).
 
+  * FLEET serving: 2 simulated hosts vs 1 host at EQUAL TOTAL KV pages on
+    the shared-prefix workload — the ``FleetRouter`` splits the page
+    budget across per-host pools, places same-prompt traffic on the host
+    already holding the donor pages (prefix-affine placement — follower
+    prefills collapse to page-table copies, ``prefill_skips``), and steps
+    the hosts concurrently (the jitted fused step releases the GIL).
+    Doubling the concurrent slots at the same bytes cuts QUEUEING
+    latency structurally — a wave-k request waits k-1 wave-times, and the
+    fleet halves the wave count — so p99 TTFT drops even on one core
+    (the ``fleet_ttft_p99_gain`` gate metric).  The requests/s ratio
+    (``fleet_vs_single_host``) additionally captures the concurrent-
+    stepping win, which needs >= 2 physical cores: host threads share one
+    JAX runtime, so on a single-core build box the pair is throughput-
+    parity (total step work is conserved) and the committed ratio is ~1x
+    with a tolerant floor — multi-core CI runners see the parallel win on
+    top.  Per-request stop decisions are byte-identical to the single
+    host under every placement (asserted — the fleet invariant).
+
 ``--check`` is the CI perf-regression gate: re-run, then compare against the
 committed ``results/serving_throughput.json`` baseline — stop decisions must
 be byte-identical and every tracked metric must stay within the tolerance
@@ -57,6 +75,7 @@ and committing the JSON).  Exits nonzero on regression.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import sys
@@ -126,6 +145,9 @@ def main(argv=None) -> int:
     ap.add_argument("--group-size", type=int, default=3,
                     help="gang-admitted samples per group")
     ap.add_argument("--group-max-new", type=int, default=24)
+    # shared-prefix fleet workload for the 2-hosts-vs-1 row
+    ap.add_argument("--fleet-prompts", type=int, default=4)
+    ap.add_argument("--fleet-hosts", type=int, default=2)
     ap.add_argument("--check", action="store_true",
                     help="CI gate: compare against the committed baseline "
                          "instead of overwriting it; nonzero exit on "
@@ -187,9 +209,9 @@ def main(argv=None) -> int:
                                               args.slots))
 
     # --- continuous batching ---------------------------------------------
-    sched = orca.engine(model, params, calib, n_slots=args.slots, lam=lam,
-                        tokens_per_step=args.tokens_per_step,
-                        max_new_tokens=args.max_new_tokens, burn_in=2)
+    sched = orca.engine(model, params, calib,
+                        config=dataclasses.replace(scfg,
+                                                   n_slots=args.slots))
     sched.run(queue_requests())
     done, fleet = best_of(lambda: sched.run(queue_requests()))
 
@@ -464,6 +486,66 @@ def main(argv=None) -> int:
           f"{c0_wait:.1f} ms (wait) -> {c0_pre:.1f} ms (preempt), "
           f"{preempt_ratio:.2f}x")
 
+    # --- fleet: 2 hosts vs 1 host at EQUAL TOTAL KV pages ----------------
+    n_fleet_hosts = args.fleet_hosts
+    f_cache = args.prefix_prompt_len + args.prefix_max_new
+    # total budget = what n_fleet_hosts dense-equivalent per-host pools
+    # need; the single host gets the SAME total pages in one pool — the
+    # fleet's win is turning the same bytes into more concurrent slots
+    f_host_blocks = args.paged_slots * (f_cache // bs) + 1
+    f_total_blocks = n_fleet_hosts * f_host_blocks
+    hbm_fleet = kv_bytes_paged(cfg, f_total_blocks, bs)
+    f_prompts = jax.random.randint(jax.random.PRNGKey(args.seed + 5),
+                                   (args.fleet_prompts,
+                                    args.prefix_prompt_len),
+                                   0, cfg.vocab_size)
+
+    def fleet_requests():
+        # self-consistency style shared-prefix traffic: samples of one
+        # prompt enqueue back-to-back (the affinity router's best case)
+        return [make_request(f_prompts[p])
+                for p in range(args.fleet_prompts)
+                for _ in range(args.prefix_samples)]
+
+    fcfg = ServeConfig(tokens_per_step=args.tokens_per_step,
+                       max_new_tokens=args.prefix_max_new, lam=float(lam),
+                       burn_in=2, n_slots=args.paged_slots,
+                       cache_len=f_cache, paged=True, block_size=bs,
+                       num_blocks=f_total_blocks)
+    one_sched = orca.engine(model, params, calib, config=fcfg)
+    one_sched.run(fleet_requests())
+    done_1h, fleet_1h = best_of(lambda: one_sched.run(fleet_requests()))
+    fl_router = orca.fleet(model, params, calib, config=fcfg,
+                           n_hosts=n_fleet_hosts)
+    fl_router.run(fleet_requests())
+    done_fl, fleet_fl = best_of(lambda: fl_router.run(fleet_requests()))
+    stop_1h = np.array([r.stop_step for r in done_1h])
+    stop_fl = np.array([r.stop_step for r in done_fl])
+    assert (stop_1h == stop_fl).all(), \
+        f"fleet serving changed stop decisions: {stop_1h} vs {stop_fl}"
+    assert fleet_fl.prefill_skips > 0, \
+        "prefix-affine placement produced no donor-host prefill skips"
+    assert fleet_fl.routed_affine > 0, \
+        "no placement followed the prefix-affinity hint"
+    for h in fl_router.hosts:
+        h.pool.check()
+    fleet_ratio = (fleet_fl.requests_per_s
+                   / max(fleet_1h.requests_per_s, 1e-9))
+    fleet_ttft_gain = (fleet_1h.ttft_ms_p99
+                       / max(fleet_fl.ttft_ms_p99, 1e-9))
+    print(f"[throughput] fleet == single-host stop decisions on "
+          f"shared-prefix workload ({stop_fl.tolist()}); "
+          f"{fleet_fl.prefill_skips} donor-host prefill skips, "
+          f"{fleet_fl.routed_affine} prefix-affine placements, KV budget "
+          f"{hbm_fleet / 1e6:.2f} MB total each")
+    print(f"[throughput] {n_fleet_hosts}-host fleet vs 1 host (equal total "
+          f"pages): {fleet_ratio:.2f}x requests/s "
+          f"({fleet_fl.requests_per_s:.2f} vs {fleet_1h.requests_per_s:.2f}), "
+          f"p99 TTFT {fleet_1h.ttft_ms_p99:.1f} -> "
+          f"{fleet_fl.ttft_ms_p99:.1f} ms ({fleet_ttft_gain:.2f}x; "
+          f"requests/s needs >= 2 cores to beat parity, this box has "
+          f"{os.cpu_count()})")
+
     util_b = base.active_slot_steps / max(base.total_slot_steps, 1)
     steps_s = fleet.engine_steps / max(fleet.wall_time_s, 1e-9)
     steps_s_ref = fleet_ref.engine_steps / max(fleet_ref.wall_time_s, 1e-9)
@@ -497,6 +579,10 @@ def main(argv=None) -> int:
          "kv_mb": hbm_over / 1e6, "wall_s": fleet_v.wall_time_s},
         {"mode": "overload-wait", **fleet_n.row(),
          "kv_mb": hbm_over / 1e6, "wall_s": fleet_n.wall_time_s},
+        {"mode": "fleet-1-host", **fleet_1h.row(),
+         "kv_mb": hbm_fleet / 1e6, "wall_s": fleet_1h.wall_time_s},
+        {"mode": f"fleet-{n_fleet_hosts}-hosts", **fleet_fl.row(),
+         "kv_mb": hbm_fleet / 1e6, "wall_s": fleet_fl.wall_time_s},
     ]
     print_table("serving throughput (same lambda*, same stop decisions)",
                 rows, ("mode", "engine_steps", "requests_per_s",
@@ -518,7 +604,7 @@ def main(argv=None) -> int:
           f"{fleet_d.requests_per_s:.2f})")
 
     report = {
-        "schema": 6,
+        "schema": 7,
         "quick": QUICK,
         "rows": rows,
         # the gate requires these BYTE-IDENTICAL against the baseline: the
@@ -537,6 +623,8 @@ def main(argv=None) -> int:
             "group_consensus_index": consensus_idx,
             # preempt == wait-only (asserted above): one list covers both
             "overload": stop_v.tolist(),
+            # fleet == single-host (asserted above): one list covers both
+            "fleet": stop_fl.tolist(),
         },
         # every metric must stay >= min_frac * baseline value; tolerances
         # live IN the baseline so re-baselining is an explicit commit
@@ -571,6 +659,19 @@ def main(argv=None) -> int:
                 # preemption (no-preempt / preempt ratio, bigger is better)
                 "preemption_ttft_p99_class0":
                     {"value": preempt_ratio, "min_frac": 0.3},
+                # fleet serving at equal TOTAL KV pages on shared-prefix
+                # traffic (stops byte-identical, asserted).  The p99-TTFT
+                # gain is STRUCTURAL (half the admission waves) and holds
+                # on one core; the requests/s ratio only beats parity
+                # with >= 2 physical cores (concurrent host stepping), so
+                # its committed single-core value is ~1x and the floor is
+                # tolerant — multi-core CI clears it with margin
+                "fleet_requests_per_s":
+                    {"value": fleet_fl.requests_per_s, "min_frac": 0.3},
+                "fleet_vs_single_host":
+                    {"value": fleet_ratio, "min_frac": 0.5},
+                "fleet_ttft_p99_gain":
+                    {"value": fleet_ttft_gain, "min_frac": 0.5},
             },
         },
     }

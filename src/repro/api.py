@@ -8,9 +8,14 @@ re-plumbing the train -> calibrate -> serve path by hand:
     cal   = orca.fit(train, mode="supervised", method="ttt", epochs=25)
     ev    = orca.evaluate(cal, cal_split, test_split, deltas=(0.1,))
     lam   = cal.calibrate(cal_split, delta=0.1)          # LTT lambda*
-    sched = orca.engine(model, params, cal, n_slots=4,
-                        tokens_per_step=8, max_new_tokens=96)
-    done, fleet = orca.serve_requests(sched, prompt_token_rows)
+    cfg   = orca.ServeConfig(n_slots=4, tokens_per_step=8,
+                             max_new_tokens=96)
+    sched = orca.engine(model, params, cal, config=cfg)
+    done, fm = orca.serve_requests(sched, prompt_token_rows)
+
+    router = orca.fleet(model, params, cal,      # multi-host serving:
+                        config=cfg, n_hosts=2)   # same protocol
+    done, fm = orca.serve_requests(router, prompt_token_rows)
 
 ``fit``/``evaluate`` work for every registered Calibrator ("ttt",
 "static"); ``engine`` needs a calibrator that can hand (ProbeConfig,
@@ -18,8 +23,10 @@ theta) to the fused serve step (the TTT probe).
 """
 from __future__ import annotations
 
+import dataclasses
 import math
-from typing import Optional, Sequence
+import warnings
+from typing import Optional, Sequence, Union
 
 import numpy as np
 
@@ -27,13 +34,14 @@ from repro.core.calibrator import (Calibrator, GroupCalibrator, GroupTrace,
                                    StaticCalibrator, TTTCalibrator,
                                    groups_from_trajectories, make_calibrator)
 from repro.core.pipeline import ProcedureEval, evaluate_probe
-from repro.serving.engine import ServeConfig
+from repro.serving.config import ServeConfig
+from repro.serving.router import FleetRouter
 from repro.serving.scheduler import OrcaScheduler
 from repro.trajectories import TrajectorySet
 
 __all__ = ["Calibrator", "GroupCalibrator", "GroupTrace",
-           "StaticCalibrator", "TTTCalibrator",
-           "calibrated_lambda", "engine", "evaluate", "fit",
+           "ServeConfig", "StaticCalibrator", "TTTCalibrator",
+           "calibrated_lambda", "engine", "evaluate", "fit", "fleet",
            "groups_from_trajectories", "make_calibrator", "serve_requests"]
 
 DELTAS = (0.05, 0.1, 0.15, 0.2)
@@ -78,139 +86,141 @@ def calibrated_lambda(calibrator: Calibrator, cal: TrajectorySet,
     return lam
 
 
-def engine(model, params, calibrator: Calibrator, *,
-           n_slots: int = 4, cache_len: Optional[int] = None,
+def _resolve_lam(calibrator: Calibrator,
+                 lam: Optional[float]) -> float:
+    """Explicit lam wins, else the calibrator's LTT threshold; a
+    non-finite lambda* (LTT selected nothing) serves with stopping
+    disabled — sigmoid scores <= 1 never cross 2.0."""
+    if lam is None:
+        lam = calibrator.threshold()
+    lam = float(lam)
+    if not math.isfinite(lam):
+        lam = 2.0
+    return lam
+
+
+def engine(model, params, calibrator: Calibrator,
+           config: Optional[ServeConfig] = None, *,
            lam: Optional[float] = None,
            serve: Optional[ServeConfig] = None,
-           paged: bool = False, block_size: int = 16,
-           num_blocks: Optional[int] = None,
-           chunk_tokens: Optional[int] = None,
-           token_budget: Optional[int] = None,
-           policy=None, pack_chunks: bool = True,
-           pack_max: int = 4,
-           group_size: int = 1,
-           consensus=None,
-           consensus_delta: Optional[float] = None,
-           preemption: bool = True,
-           **serve_kwargs) -> OrcaScheduler:
+           **kwargs) -> OrcaScheduler:
     """Build a continuous-batching ``OrcaScheduler`` serving the calibrated
     procedure.
 
-    The threshold comes from an explicit ``serve`` config (exclusive with
-    ``lam``/``serve_kwargs``), else ``lam``, else ``calibrator.threshold()``
-    (requires a prior ``calibrate()``).  A non-finite lambda* (LTT selected
-    nothing) serves with stopping disabled — scores never cross a threshold
-    above 1.
+    The blessed path is ONE config object::
 
-    ``paged=True`` serves from a paged KV cache: admission reserves
-    fixed-size pages from a ``BlockPool`` of ``num_blocks`` (default: the
-    dense-equivalent n_slots * blocks-per-request + null page), resident
-    prompts are prefix-shared (refcount bump instead of recompute), ORCA
-    stops return pages to the pool immediately and the scheduler keeps
-    requests WAITING when the pool is exhausted.
+        cfg = ServeConfig(n_slots=8, paged=True, chunk_tokens=32,
+                          policy="priority", group_size=4, consensus=gcal)
+        sched = orca.engine(model, params, cal, config=cfg)
 
-    ``chunk_tokens=N`` enables chunked prefill (stall-free serving): prompt
-    prefill becomes schedulable work — each engine iteration packs every
-    resident decode token plus up to N prompt tokens of mid-prefill
-    residents (``token_budget`` tokens per step total), instead of a
-    batch-1 full-prompt prefill stalling the fleet at admission.  With
-    ``pack_chunks`` (the default) one fused chunk carries tokens of up to
-    ``pack_max`` requests — the tail of one prompt piggybacked with the
-    head of the next, block-diagonally isolated — so short prompt tails
-    don't leave budget on the table; ``pack_chunks=False`` restores the
-    one-request-per-chunk composer through the same step executable.
-    ``policy`` picks the scheduling policy ("fifo", "priority", "edf",
-    "ttft" or a ``repro.serving.SchedulingPolicy`` instance): admission
-    order, the per-step prefill share and — under overload — victim
-    selection.  Stop decisions are unchanged by ANY of these knobs;
-    TTFT/stall tails and per-prompt-length recompiles go away.
+    Every serving knob — fleet shape, paged KV, chunked/packed prefill,
+    scheduling policy, self-consistency groups, preemption, probe
+    dispatch — is a ``ServeConfig`` field, validated once at construction
+    with errors that name the fix (see ``repro.serving.ServeConfig``).
+    The threshold comes from ``config.lam`` unless ``lam=`` overrides it;
+    with neither, the calibrator's LTT ``threshold()`` is used (a
+    non-finite lambda* serves with stopping disabled).
 
-    ``preemption`` (default True) makes the scheduler overload-safe: when
-    capacity fails for a unit strictly more urgent than some resident,
-    the policy's victims are spilled to host RAM (KV pages AND probe
-    fast-weight state, ``engine.Spill``) and restored byte-identically
-    once room returns — the SWAPPED queue re-admits before WAITING.
-    ``preemption=False`` restores wait-only admission.  Stop decisions
-    are invariant under any preemption schedule.
+    The pre-ServeConfig keyword sprawl (``n_slots=8, paged=True, ...``)
+    still works as a shim that builds the same ServeConfig — it emits
+    ``DeprecationWarning`` and will be removed; so does ``serve=`` (the
+    old name for the step-field config, now the same class as
+    ``config=``).
 
-    ``group_size=N`` serves self-consistency groups: ``serve_requests``
-    expands each prompt into N gang-admitted samples sharing its prompt
-    pages, and ``consensus`` (a calibrated ``GroupCalibrator`` or a raw
-    agreement threshold in (0, 1]) enables the conformal consensus stop —
-    the moment a group's confidence-weighted answer vote clears the
-    threshold, the still-running siblings are CANCELLED mid-flight and
-    their pages/slots return to the fleet.  ``consensus_delta`` documents
-    (and cross-checks) the risk level the GroupCalibrator was calibrated
-    at.  With ``group_size=1`` or ``consensus=None`` the group layer is
-    inert: stop decisions are byte-identical to the classic engine.
+    Stop decisions are unchanged by ANY scheduling knob — paging,
+    chunking, packing, policy, preemption and grouping all preserve the
+    standing invariant that per-request stops are byte-identical across
+    serving configurations.
     """
-    if isinstance(group_size, bool) or int(group_size) < 1:
-        raise ValueError(
-            f"group_size={group_size!r} must be an int >= 1: the number "
-            "of self-consistency samples per prompt; fix by passing a "
-            "positive count (1 disables grouping)")
-    group_size = int(group_size)
-    if group_size > n_slots:
-        raise ValueError(
-            f"group_size={group_size} > n_slots={n_slots}: gang admission "
-            "needs every sample of a group resident at once; fix by "
-            f"raising n_slots to >= {group_size} or lowering group_size")
-    if consensus is not None and group_size == 1:
-        raise ValueError(
-            "consensus= with group_size=1 can never fire (every request "
-            "is its own singleton and a lone sample never votes); fix by "
-            "passing group_size >= 2 (or grouping requests yourself via "
-            "repro.serving.make_group) or dropping consensus=")
-    if consensus_delta is not None:
-        if consensus is None:
-            raise ValueError(
-                "consensus_delta= without consensus= does nothing; fix by "
-                "passing consensus=<GroupCalibrator calibrated at delta="
-                f"{consensus_delta}> (or a float threshold, and dropping "
-                "consensus_delta)")
-        if isinstance(consensus, GroupCalibrator) \
-                and consensus.delta is not None \
-                and not math.isclose(float(consensus.delta),
-                                     float(consensus_delta)):
-            raise ValueError(
-                f"consensus_delta={consensus_delta} does not match the "
-                f"GroupCalibrator's calibrated delta={consensus.delta}; "
-                "fix by re-running GroupCalibrator.calibrate(..., delta="
-                f"{consensus_delta}) or passing consensus_delta="
-                f"{consensus.delta}")
-    pc, theta = calibrator.serving_params()
     if serve is not None:
-        if lam is not None or serve_kwargs:
+        if config is not None:
+            raise ValueError("pass either config= or the deprecated "
+                             "serve=, not both")
+        if lam is not None or kwargs:
             raise ValueError("pass either a full ServeConfig via serve= or "
                              "lam=/ServeConfig kwargs, not both")
+        warnings.warn(
+            "engine(serve=...) is deprecated: the step config and the "
+            "scheduler kwargs are one ServeConfig now — pass it as "
+            "engine(..., config=cfg)", DeprecationWarning, stacklevel=2)
+        config = serve
+    if config is not None:
+        if kwargs:
+            raise ValueError(
+                f"config= together with ServeConfig kwargs {sorted(kwargs)} "
+                "is ambiguous; fix by folding them into the config "
+                "(dataclasses.replace(config, ...)) or dropping config=")
+        if lam is not None:
+            config = dataclasses.replace(config, lam=float(lam))
     else:
-        if lam is None:
-            lam = calibrator.threshold()
-        if not math.isfinite(lam):
-            lam = 2.0               # sigmoid scores <= 1: never stop early
-        serve = ServeConfig(lam=float(lam), **serve_kwargs)
-    sched = OrcaScheduler(model, params, pc, theta, serve,
-                          n_slots=n_slots, cache_len=cache_len,
-                          paged=paged, block_size=block_size,
-                          num_blocks=num_blocks, chunk_tokens=chunk_tokens,
-                          token_budget=token_budget, policy=policy,
-                          pack_chunks=pack_chunks, pack_max=pack_max,
-                          consensus=consensus, preemption=preemption)
-    sched.group_size = group_size       # serve_requests' expansion default
+        if kwargs:
+            warnings.warn(
+                "engine(**serving_kwargs) is deprecated: build a "
+                "repro.serving.ServeConfig and pass engine(..., "
+                "config=cfg) — ServeConfig.from_args converts argparse "
+                "namespaces", DeprecationWarning, stacklevel=2)
+        # kwargs validation first (as the pre-config API did), THEN the
+        # lam resolution that touches the calibrator
+        config = ServeConfig(**kwargs)
+        config = dataclasses.replace(
+            config, lam=_resolve_lam(calibrator, lam))
+    pc, theta = calibrator.serving_params()
+    sched = OrcaScheduler(model, params, pc, theta, config)
+    sched.group_size = config.group_size  # serve_requests' expansion default
     return sched
 
 
-def serve_requests(scheduler: OrcaScheduler, prompts: np.ndarray,
+def fleet(model, params, calibrator: Calibrator,
+          config: Optional[ServeConfig] = None, *,
+          n_hosts: Optional[int] = None,
+          lam: Optional[float] = None,
+          placement=None,
+          parallel_hosts: bool = True) -> FleetRouter:
+    """Build a multi-host ``FleetRouter`` serving the calibrated procedure.
+
+    The fleet facade: N simulated hosts, each running the unchanged
+    single-host scheduler with its own engine, ``BlockPool`` and policy
+    instance; the router places gang-admission units by gossiped
+    ``HostPressure`` with prefix-affine routing (see
+    ``repro.serving.FleetRouter``).  Config-only — no legacy kwargs
+    path::
+
+        cfg = ServeConfig(n_slots=4, paged=True, num_blocks=96,
+                          n_hosts=2)             # num_blocks = TOTAL pages
+        router = orca.fleet(model, params, cal, config=cfg)
+        done, fm = orca.serve_requests(router, prompt_rows)
+
+    ``n_hosts=``/``lam=``/``placement=`` override the config fields.
+    Per-request stop decisions are byte-identical to single-host serving
+    under every placement policy.
+    """
+    if config is None:
+        config = ServeConfig(lam=_resolve_lam(calibrator, lam))
+    elif lam is not None:
+        config = dataclasses.replace(config, lam=float(lam))
+    pc, theta = calibrator.serving_params()
+    return FleetRouter(model, params, pc, theta, config,
+                       n_hosts=(n_hosts if n_hosts is not None
+                                else config.n_hosts),
+                       placement=(placement if placement is not None
+                                  else config.placement),
+                       parallel_hosts=parallel_hosts)
+
+
+def serve_requests(server: Union[OrcaScheduler, FleetRouter],
+                   prompts: np.ndarray,
                    group_size: Optional[int] = None):
     """Convenience: one Request per row of ``prompts`` (N, prompt_len),
-    driven through the scheduler.  ``group_size`` (default: the value the
-    scheduler was built with via ``engine(group_size=...)``) expands each
-    prompt into a gang-admitted self-consistency group.  Returns
-    (requests, FleetMetrics)."""
+    driven through ``server`` — an ``OrcaScheduler`` or a ``FleetRouter``;
+    both speak the same submit/step/drain/run protocol, so callers and the
+    benchmark drive single-host and fleet serving through this one entry
+    point.  ``group_size`` (default: the server's configured value)
+    expands each prompt into a gang-admitted self-consistency group.
+    Returns (requests, FleetMetrics)."""
     from repro.serving.groups import make_group
     from repro.serving.request import make_request
     if group_size is None:
-        group_size = getattr(scheduler, "group_size", 1)
+        group_size = getattr(server, "group_size", 1)
     if group_size > 1:
         reqs = [r for i in range(len(prompts))
                 for r in make_group(np.asarray(prompts[i]), group_size,
@@ -218,4 +228,4 @@ def serve_requests(scheduler: OrcaScheduler, prompts: np.ndarray,
     else:
         reqs = [make_request(np.asarray(prompts[i]))
                 for i in range(len(prompts))]
-    return scheduler.run(reqs)
+    return server.run(reqs)

@@ -141,7 +141,13 @@ def run_orca(train: TrajectorySet, cal: TrajectorySet, test: TrajectorySet,
     Returns {"ttt": ProcedureEval, "static": ..., "_probe": TrainedProbe,
     "_static": StaticProbe} exactly as before.
     """
+    import warnings
+
     from repro import api
+    warnings.warn(
+        "run_orca is a deprecated shim: call repro.api.fit / "
+        "repro.api.evaluate directly (same numbers by construction)",
+        DeprecationWarning, stacklevel=2)
     pc = pc or ProbeConfig(d_phi=train.phis.shape[-1])
     ttt_cal = api.fit(train, mode=mode, method="ttt", pc=pc, epochs=epochs,
                       seed=seed, verbose=verbose)

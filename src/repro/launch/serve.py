@@ -121,6 +121,17 @@ def main(argv=None) -> int:
     ap.add_argument("--consensus-delta", type=float, default=0.0,
                     help="risk level for the group-consensus LTT "
                          "calibration (0 -> reuse --delta)")
+    ap.add_argument("--hosts", type=int, default=1,
+                    help="simulated fleet hosts: >1 serves through a "
+                         "FleetRouter (per-host engine/pool/policy, "
+                         "pressure-balanced prefix-affine placement; "
+                         "--num-blocks is the TOTAL page budget split "
+                         "across hosts, --slots is PER HOST)")
+    ap.add_argument("--placement", default="pressure",
+                    choices=("pressure", "roundrobin"),
+                    help="fleet placement policy (--hosts > 1): 'pressure' "
+                         "= least-loaded with prefix affinity, "
+                         "'roundrobin' = locality-blind rotation")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -164,21 +175,20 @@ def main(argv=None) -> int:
         print(f"[serve] consensus threshold g* = {g_cal.lam:.3f} "
               f"(delta={c_delta}, {len(traces)} calibration groups)")
 
-    sched = orca.engine(model, params, calib, n_slots=args.slots, lam=lam,
-                        tokens_per_step=args.tokens_per_step,
-                        max_new_tokens=args.max_new_tokens,
-                        burn_in=args.burn_in, paged=args.paged,
-                        block_size=args.block_size,
-                        num_blocks=args.num_blocks or None,
-                        chunk_tokens=args.chunk_tokens or None,
-                        token_budget=args.token_budget or None,
-                        policy=args.policy, pack_chunks=not args.no_pack,
-                        pack_max=args.pack_max,
-                        group_size=args.group_size, consensus=consensus,
-                        consensus_delta=(args.consensus_delta or None
-                                         if consensus is not None
-                                         else None),
-                        preemption=not args.no_preempt)
+    # the ~20 CLI flags become ONE ServeConfig: from_args maps the flag
+    # names (slots -> n_slots, no_pack -> pack_chunks, 0 -> None for the
+    # optional ints); runtime-computed values ride in as overrides
+    serve_cfg = ServeConfig.from_args(
+        args, lam=float(lam), consensus=consensus,
+        consensus_delta=(args.consensus_delta or None
+                         if consensus is not None else None),
+        placement=args.placement)
+    if args.hosts > 1:
+        sched = orca.fleet(model, params, calib, config=serve_cfg)
+        print(f"[serve] fleet: {args.hosts} hosts x {args.slots} slots, "
+              f"placement={args.placement}")
+    else:
+        sched = orca.engine(model, params, calib, config=serve_cfg)
     batch = model_inputs(cfg, jax.random.PRNGKey(args.seed + 1),
                          args.requests, args.prompt_len)
     extra_keys = [k for k in batch if k != "tokens"]
@@ -212,6 +222,9 @@ def main(argv=None) -> int:
               f"(x{args.block_size} tokens), peak in use "
               f"{fleet.peak_blocks_in_use}, prefill skips "
               f"{fleet.prefill_skips}")
+    if args.hosts > 1:
+        print(f"[serve] routing: {fleet.n_hosts} hosts, "
+              f"{fleet.routed_affine} prefix-affine placements")
     if args.group_size > 1:
         print(f"[serve] groups: {fleet.consensus_groups} consensus stops "
               f"(mean step {fleet.consensus_steps:.1f}), "

@@ -1,6 +1,7 @@
+from repro.serving.config import ServeConfig
 from repro.serving.engine import (ChunkSeg, ChunkWork,
                                   ContinuousServingEngine,
-                                  ProbeState, ServeConfig, ServeResult,
+                                  ProbeState, ServeResult,
                                   ServingEngine, SlotStepView, Spill,
                                   StaticQueueResult, chunk_supported,
                                   chunked_prefill, extract_trajectories,
@@ -12,30 +13,38 @@ from repro.serving.groups import (RequestGroup, group_requests, make_group)
 from repro.serving.kv_pool import (NULL_BLOCK, BlockPool, PrefixEntry,
                                    blocks_needed, pad_row, prompt_key)
 from repro.serving.policy import (ComposeView, EDFPolicy, FIFOPolicy,
-                                  PriorityPolicy, SchedulingPolicy,
-                                  TTFTAwarePolicy, make_policy)
+                                  HostPressure, PlacementPolicy,
+                                  PressurePlacement, PriorityPolicy,
+                                  RoundRobinPlacement, SchedulingPolicy,
+                                  TTFTAwarePolicy, make_placement,
+                                  make_policy)
 from repro.serving.replay import (GroupFleet, make_group_fleet,
                                   replay_model, replay_params,
-                                  replay_requests, served_stop_times)
+                                  replay_requests, serve_replay,
+                                  served_stop_times)
 from repro.serving.request import (FleetMetrics, Request, RequestState,
-                                   make_request)
+                                   latency_stats, make_request)
+from repro.serving.router import FleetRouter
 from repro.serving.scheduler import OrcaScheduler
 
 __all__ = ["BlockPool", "ChunkSeg", "ChunkWork", "ComposeView",
            "ContinuousServingEngine", "EDFPolicy", "FIFOPolicy",
-           "FleetMetrics", "GroupFleet", "NULL_BLOCK", "OrcaScheduler",
-           "PrefixEntry",
+           "FleetMetrics", "FleetRouter", "GroupFleet", "HostPressure",
+           "NULL_BLOCK", "OrcaScheduler",
+           "PlacementPolicy", "PrefixEntry", "PressurePlacement",
            "PriorityPolicy", "ProbeState", "Request", "RequestGroup",
-           "RequestState",
+           "RequestState", "RoundRobinPlacement",
            "SchedulingPolicy", "ServeConfig",
            "ServeResult", "ServingEngine", "SlotStepView", "Spill",
            "StaticQueueResult", "TTFTAwarePolicy", "blocks_needed",
            "chunk_supported",
            "chunked_prefill", "extract_trajectories", "group_requests",
            "init_probe_state",
-           "inject_prefill", "make_group", "make_group_fleet",
-           "make_policy", "make_request",
+           "inject_prefill", "latency_stats", "make_group",
+           "make_group_fleet",
+           "make_placement", "make_policy", "make_request",
            "make_serve_step", "pad_row",
            "prefix_len", "probe_update", "prompt_key", "replay_model",
            "replay_params", "replay_requests", "reset_probe_slot",
-           "serve_queue_static", "served_stop_times", "write_probe_slot"]
+           "serve_queue_static", "serve_replay", "served_stop_times",
+           "write_probe_slot"]

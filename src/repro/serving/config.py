@@ -1,0 +1,245 @@
+"""ServeConfig: ONE frozen config object for the whole serving stack.
+
+Seven PRs of feature growth left ``api.engine`` with ~15 keyword arguments
+mirrored by ~20 CLI flags in ``launch/serve.py`` — and the fleet router
+needs to construct N per-host schedulers from one description.  This
+module is the consolidation: every serving knob (the fused-step parameters
+the engines always took, plus the scheduler's paged / chunked / policy /
+group / preemption / fleet knobs) lives on a single frozen dataclass, and
+every cross-field validation that used to be inlined in ``api.engine``
+runs in ``__post_init__`` — so an invalid configuration fails at
+construction, once, with an error that names the fix, no matter which
+entry point built it.
+
+Construction paths:
+
+* ``ServeConfig(lam=0.7, n_slots=8, paged=True)`` — direct;
+* ``ServeConfig.from_args(args)`` — from an ``argparse`` namespace using
+  the ``launch/serve.py`` flag names (``--slots`` -> ``n_slots``,
+  ``--no-pack`` -> ``pack_chunks=False``, 0 -> None for the optional
+  ints), so the CLI can stop re-plumbing flags into keywords by hand;
+* ``dataclasses.replace(cfg, ...)`` — per-host / per-run overrides
+  (validation re-runs automatically).
+
+``api.engine(model, params, calibrator, config=cfg)`` and
+``api.fleet(..., n_hosts=N, config=cfg)`` consume it; the legacy
+``api.engine(**kwargs)`` path survives as a shim that builds a ServeConfig
+and emits ``DeprecationWarning``.  ``OrcaScheduler`` and ``FleetRouter``
+resolve every constructor keyword they still accept against this config
+(explicit keyword wins), so old call sites keep working unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+_VALID_PROBE_IMPLS = ("kernel", "ref")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Every serving knob, validated once at construction.
+
+    The first five fields are the fused serve-step parameters the engines
+    have taken since PR 1; the rest are the scheduler/fleet knobs that
+    used to be ``api.engine`` keyword arguments.  The step-level engines
+    (``ServingEngine``, ``ContinuousServingEngine``) read only the step
+    fields, so any ServeConfig drives any layer of the stack.
+    """
+
+    # -- fused serve step (PR-1 fields; every engine reads these) -------
+    tokens_per_step: int = 16     # tokens per "reasoning step" for phi_t
+    max_new_tokens: int = 256
+    lam: float = 0.9              # LTT-calibrated threshold lambda*
+    burn_in: int = 10             # steps before stopping is allowed
+    greedy: bool = True
+
+    # -- fleet shape ----------------------------------------------------
+    n_slots: int = 4              # batch slots per scheduler (PER HOST for
+    #                               a FleetRouter fleet)
+    cache_len: Optional[int] = None   # None -> sized from the requests
+
+    # -- paged KV (PR 3) ------------------------------------------------
+    paged: bool = False
+    block_size: int = 16
+    num_blocks: Optional[int] = None  # pool pages; None -> dense-equivalent.
+    #                               For a fleet this is the TOTAL page
+    #                               budget, split across hosts.
+    prefix_sharing: bool = True
+
+    # -- chunked / packed prefill (PRs 4-5) ------------------------------
+    chunk_tokens: Optional[int] = None
+    token_budget: Optional[int] = None
+    pack_chunks: bool = True
+    pack_max: int = 4
+
+    # -- scheduling policy (PR 5) ----------------------------------------
+    policy: Any = None            # "fifo"/"priority"/"edf"/"ttft", a
+    #                               SchedulingPolicy instance, or None
+
+    # -- self-consistency groups (PR 6) ----------------------------------
+    group_size: int = 1
+    consensus: Any = None         # GroupCalibrator | float in (0,1] | None
+    consensus_delta: Optional[float] = None
+
+    # -- preemption (PR 7) -----------------------------------------------
+    preemption: bool = True
+
+    # -- probe dispatch ---------------------------------------------------
+    probe_impl: str = "kernel"    # "kernel" (Pallas) or "ref" (jnp oracle)
+    interpret: Optional[bool] = None
+
+    # -- fleet serving (PR 8) ---------------------------------------------
+    n_hosts: int = 1
+    placement: Any = None         # "pressure"/"roundrobin", a
+    #                               PlacementPolicy instance, or None
+
+    def __post_init__(self) -> None:
+        # normalize the optional ints the CLI passes as 0-for-disabled
+        for field in ("cache_len", "num_blocks", "chunk_tokens",
+                      "token_budget"):
+            val = getattr(self, field)
+            if val is not None:
+                val = int(val)
+                object.__setattr__(self, field, val if val > 0 else None)
+        self.validate()
+
+    # ------------------------------------------------------------------
+    def validate(self) -> None:
+        """Cross-field validation — every error names the fix.
+
+        This is the single home for the checks that used to be inlined in
+        ``api.engine`` (group/consensus/gang) plus the fleet checks; the
+        scheduler re-validates the model-dependent ones (e.g. the
+        ``token_budget`` floor depends on whether the model family
+        supports chunked prefill) at construction.
+        """
+        if isinstance(self.tokens_per_step, bool) or self.tokens_per_step < 1:
+            raise ValueError(
+                f"tokens_per_step={self.tokens_per_step!r} must be an int "
+                ">= 1: the probe pools this many tokens per reasoning "
+                "step; fix by passing a positive count")
+        if self.max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens={self.max_new_tokens} must be >= 1: a "
+                "request with no decode budget can never emit a token; "
+                "fix by passing a positive budget")
+        if self.block_size < 1:
+            raise ValueError(
+                f"block_size={self.block_size} must be >= 1: a KV page "
+                "holds this many token positions; fix by passing a "
+                "positive page size (16 is the default)")
+        if self.pack_max < 1:
+            raise ValueError(
+                f"pack_max={self.pack_max} must be >= 1: a packed chunk "
+                "carries at least its own request; fix by passing a "
+                "positive count (1 behaves like pack_chunks=False)")
+        if self.probe_impl not in _VALID_PROBE_IMPLS:
+            raise ValueError(
+                f"unknown probe_impl {self.probe_impl!r} (expected one of "
+                f"{_VALID_PROBE_IMPLS}); fix by passing 'kernel' (the "
+                "Pallas serving probe) or 'ref' (the jnp parity oracle)")
+        if isinstance(self.n_hosts, bool) or int(self.n_hosts) < 1:
+            raise ValueError(
+                f"n_hosts={self.n_hosts!r} must be an int >= 1: the number "
+                "of simulated hosts the FleetRouter shards the scheduler "
+                "across; fix by passing a positive count (1 serves "
+                "single-host)")
+        # group/consensus checks — moved verbatim from api.engine so every
+        # construction path fails identically
+        group_size = self.group_size
+        if isinstance(group_size, bool) or int(group_size) < 1:
+            raise ValueError(
+                f"group_size={group_size!r} must be an int >= 1: the number "
+                "of self-consistency samples per prompt; fix by passing a "
+                "positive count (1 disables grouping)")
+        object.__setattr__(self, "group_size", int(group_size))
+        if self.group_size > self.n_slots:
+            raise ValueError(
+                f"group_size={self.group_size} > n_slots={self.n_slots}: "
+                "gang admission needs every sample of a group resident at "
+                "once; fix by raising n_slots to >= "
+                f"{self.group_size} or lowering group_size")
+        if self.consensus is not None and self.group_size == 1:
+            raise ValueError(
+                "consensus= with group_size=1 can never fire (every request "
+                "is its own singleton and a lone sample never votes); fix by "
+                "passing group_size >= 2 (or grouping requests yourself via "
+                "repro.serving.make_group) or dropping consensus=")
+        if isinstance(self.consensus, bool):
+            raise ValueError(
+                f"consensus={self.consensus!r} is not a threshold: pass a "
+                "float agreement threshold in (0, 1], a calibrated "
+                "GroupCalibrator, or None to disable the consensus stop")
+        if isinstance(self.consensus, (int, float)) \
+                and not 0.0 < float(self.consensus) <= 1.0:
+            raise ValueError(
+                f"consensus={float(self.consensus)} is outside (0, 1]: the "
+                "threshold is the weight share the top answer must reach; "
+                "fix by passing a float in (0, 1] or a calibrated "
+                "GroupCalibrator")
+        if self.consensus_delta is not None:
+            from repro.core.calibrator import GroupCalibrator
+            if self.consensus is None:
+                raise ValueError(
+                    "consensus_delta= without consensus= does nothing; fix "
+                    "by passing consensus=<GroupCalibrator calibrated at "
+                    f"delta={self.consensus_delta}> (or a float threshold, "
+                    "and dropping consensus_delta)")
+            if isinstance(self.consensus, GroupCalibrator) \
+                    and self.consensus.delta is not None \
+                    and not math.isclose(float(self.consensus.delta),
+                                         float(self.consensus_delta)):
+                raise ValueError(
+                    f"consensus_delta={self.consensus_delta} does not match "
+                    "the GroupCalibrator's calibrated delta="
+                    f"{self.consensus.delta}; fix by re-running "
+                    "GroupCalibrator.calibrate(..., delta="
+                    f"{self.consensus_delta}) or passing consensus_delta="
+                    f"{self.consensus.delta}")
+
+    # ------------------------------------------------------------------
+    # CLI flag names (launch/serve.py) -> field, with the transforms the
+    # driver used to hand-roll.  ``from_args`` reads only the attributes
+    # the namespace actually has, so partial namespaces work.
+    _ARG_FIELDS = (
+        ("tokens_per_step", "tokens_per_step", None),
+        ("max_new_tokens", "max_new_tokens", None),
+        ("burn_in", "burn_in", None),
+        ("slots", "n_slots", None),
+        ("paged", "paged", None),
+        ("block_size", "block_size", None),
+        ("num_blocks", "num_blocks", None),      # 0 -> None in __post_init__
+        ("chunk_tokens", "chunk_tokens", None),
+        ("token_budget", "token_budget", None),
+        ("policy", "policy", None),
+        ("no_pack", "pack_chunks", "invert"),
+        ("pack_max", "pack_max", None),
+        ("group_size", "group_size", None),
+        ("no_preempt", "preemption", "invert"),
+        ("hosts", "n_hosts", None),
+    )
+
+    @classmethod
+    def from_args(cls, args, **overrides) -> "ServeConfig":
+        """Build a ServeConfig from an ``argparse`` namespace using the
+        ``launch/serve.py`` flag names.
+
+        Only attributes present on the namespace are read (so any driver
+        with a subset of the flags works); ``overrides`` win over the
+        namespace — the place for runtime-computed values like the
+        LTT-calibrated ``lam`` or a calibrated ``consensus`` object.
+        Optional ints passed as 0 (the CLI's "disabled") normalize to
+        None.
+        """
+        fields: dict = {}
+        for arg_name, field, transform in cls._ARG_FIELDS:
+            if not hasattr(args, arg_name):
+                continue
+            val = getattr(args, arg_name)
+            if transform == "invert":
+                val = not val
+            fields[field] = val
+        fields.update(overrides)
+        return cls(**fields)

@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Dict, List, NamedTuple, Optional, Tuple
 
 import jax
@@ -53,6 +54,7 @@ from repro.kernels.ttt_probe import ProbeStepOut as KernelOut
 from repro.kernels.ttt_probe import serving_probe_step
 from repro.models import attention as A
 from repro.models.registry import Model
+from repro.serving.config import ServeConfig
 from repro.serving.kv_pool import NULL_BLOCK, blocks_needed, pad_row
 
 
@@ -284,13 +286,11 @@ def probe_update(pc: ProbeConfig, theta, st: ProbeState, hidden: jnp.ndarray,
                       out.n_scores, out.smoothed, out.stopped, out.stop_step)
 
 
-@dataclasses.dataclass(frozen=True)
-class ServeConfig:
-    tokens_per_step: int = 16     # tokens per "reasoning step" for phi_t
-    max_new_tokens: int = 256
-    lam: float = 0.9              # LTT-calibrated threshold lambda*
-    burn_in: int = 10             # steps before stopping is allowed
-    greedy: bool = True
+# The unified ServeConfig (repro.serving.config) replaced the step-level
+# dataclass that lived here through PR 7; re-exported so every existing
+# ``from repro.serving.engine import ServeConfig`` keeps working.  The
+# engines below read only the fused-step fields (tokens_per_step,
+# max_new_tokens, lam, burn_in, greedy).
 
 
 def make_serve_step(model: Model, pc: ProbeConfig, cfg: ServeConfig,
@@ -408,6 +408,13 @@ class ServingEngine:
 
     def serve(self, batch: Dict[str, jnp.ndarray], prompt_len: int,
               cache_len: Optional[int] = None) -> ServeResult:
+        warnings.warn(
+            "ServingEngine.serve is deprecated as a serving path (stopped "
+            "sequences occupy their slot as no-op compute until the slowest "
+            "finishes); serve through repro.serving.OrcaScheduler / "
+            "repro.api.engine for continuous batching — this class remains "
+            "only as the static-batch baseline",
+            DeprecationWarning, stacklevel=2)
         model, cfg = self.model, self.cfg
         mcfg = model.cfg
         B = next(iter(batch.values())).shape[0]
@@ -469,7 +476,11 @@ def serve_queue_static(engine: ServingEngine, batch: Dict[str, jnp.ndarray],
     t0 = time.perf_counter()
     for lo in range(0, n, n_slots):
         group = {k: v[lo:lo + n_slots] for k, v in batch.items()}
-        res = engine.serve(group, prompt_len=prompt_len)
+        with warnings.catch_warnings():
+            # this helper IS the sanctioned baseline use of the deprecated
+            # path — don't spam its own deprecation per group
+            warnings.simplefilter("ignore", DeprecationWarning)
+            res = engine.serve(group, prompt_len=prompt_len)
         iters = res.tokens.shape[1]
         b = group["tokens"].shape[0] if "tokens" in group else \
             next(iter(group.values())).shape[0]

@@ -304,3 +304,139 @@ def make_policy(policy: Union[str, SchedulingPolicy, None]
     except KeyError:
         raise ValueError(f"unknown scheduling policy {policy!r} "
                          f"(expected one of {sorted(_POLICIES)})") from None
+
+
+# ---------------------------------------------------------------------------
+# fleet-level placement (PR 8): the router-side half of the policy split.
+# ``select_admit`` semantics move UP a level — the FleetRouter picks which
+# HOST admits a unit, fed by per-host HostPressure snapshots; each host's
+# own SchedulingPolicy instance then runs the unchanged single-host
+# admission, so stop decisions stay byte-identical under every placement.
+
+@dataclasses.dataclass(frozen=True)
+class HostPressure:
+    """One host's scheduler pressure, gossiped to the router each step.
+
+    A ``ComposeView``-style snapshot exported by ``OrcaScheduler.pressure()``
+    (scheduler occupancy + kv_pool page counts); the placement policy sees
+    one of these per host and nothing else — the same information a real
+    fleet's gossip/heartbeat protocol would carry.
+    """
+
+    host: int
+    n_slots: int
+    n_running: int
+    n_prefilling: int
+    n_swapped: int
+    n_waiting: int            # queued admission units (gangs count once)
+    queued_samples: int       # queued individual requests (gang members)
+    free_slots: int
+    pool_blocks: int          # usable pages (0 when the host is not paged)
+    free_blocks: int
+    blocks_in_use: int
+    max_resident_priority: Optional[int] = None
+
+    @property
+    def outstanding(self) -> int:
+        """Samples this host still owes work: queued + resident + swapped."""
+        return (self.queued_samples + self.n_running
+                + self.n_prefilling + self.n_swapped)
+
+
+class PlacementPolicy:
+    """Chooses the host a gang-admission unit is routed to.
+
+    The fleet analogue of ``SchedulingPolicy.select_admit``: same
+    priority/aging/gang semantics (the ROUTER's SchedulingPolicy still
+    orders the queue; this class only places the unit it selected).
+    Stateless by default so one instance may serve many routers.
+    """
+
+    def select_host(self, unit: Sequence[Request],
+                    pressures: Sequence[HostPressure], *,
+                    need_slots: int, need_pages: int,
+                    affine_host: Optional[int] = None) -> Optional[int]:
+        """Return the host index for ``unit``, or None if NO host can ever
+        fit it (total capacity, not current load — the router raises on
+        None rather than queueing forever).
+
+        ``affine_host`` is the prefix-registry hint: the host already
+        holding donor pages for this unit's prompt hash, or None.
+        """
+        feasible = [p for p in pressures
+                    if p.n_slots >= need_slots
+                    and (need_pages == 0 or p.pool_blocks >= need_pages)]
+        if not feasible:
+            return None
+        # prefix affinity wins whenever the donor host can fit the unit at
+        # all: landing on the donor turns the whole prompt prefill into a
+        # page-table copy (prefill_skipped), worth far more than a
+        # marginally shorter queue elsewhere
+        if affine_host is not None:
+            for p in feasible:
+                if p.host == affine_host:
+                    return p.host
+        return self.rank(unit, feasible)
+
+    def rank(self, unit: Sequence[Request],
+             feasible: Sequence[HostPressure]) -> int:
+        """Pick among feasible hosts (affinity already handled).
+
+        Default: least-loaded by outstanding samples, pages in use
+        breaking ties, host index last so placement is deterministic.
+        """
+        best = min(feasible, key=lambda p: (p.outstanding,
+                                            p.blocks_in_use, p.host))
+        return best.host
+
+
+class PressurePlacement(PlacementPolicy):
+    """Least-outstanding-samples placement with prefix affinity (default)."""
+
+
+class RoundRobinPlacement(PlacementPolicy):
+    """Rotate placements across feasible hosts, ignoring pressure AND
+    prefix affinity — the placement-invariance probe: stop decisions must
+    be byte-identical even under this deliberately locality-blind policy.
+    """
+
+    def __init__(self) -> None:
+        self._next = 0
+
+    def select_host(self, unit: Sequence[Request],
+                    pressures: Sequence[HostPressure], *,
+                    need_slots: int, need_pages: int,
+                    affine_host: Optional[int] = None) -> Optional[int]:
+        feasible = [p for p in pressures
+                    if p.n_slots >= need_slots
+                    and (need_pages == 0 or p.pool_blocks >= need_pages)]
+        if not feasible:
+            return None
+        pick = feasible[self._next % len(feasible)]
+        self._next += 1
+        return pick.host
+
+
+_PLACEMENTS = {
+    "pressure": PressurePlacement,
+    "roundrobin": RoundRobinPlacement,
+}
+
+
+def make_placement(placement: Union[str, PlacementPolicy, None]
+                   ) -> PlacementPolicy:
+    """Resolve a placement spec: an instance passes through, a name builds
+    the registered class, None means pressure-balanced with prefix
+    affinity (the default that makes prefix sharing a fleet-level win)."""
+    if placement is None:
+        return PressurePlacement()
+    if isinstance(placement, PlacementPolicy):
+        return placement
+    try:
+        return _PLACEMENTS[placement]()
+    except KeyError:
+        raise ValueError(
+            f"unknown placement policy {placement!r} (expected one of "
+            f"{sorted(_PLACEMENTS)}); fix by passing 'pressure' "
+            "(load-balanced + prefix-affine) or 'roundrobin', or a "
+            "PlacementPolicy instance") from None

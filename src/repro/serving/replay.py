@@ -212,3 +212,49 @@ def make_group_fleet(ts, group_size: int, *, seed: int = 0,
     return GroupFleet(model=model, params=params, requests=requests,
                       members=members, truth=truth,
                       answer_hash=answer_hash)
+
+
+def serve_replay(phis: np.ndarray, theta, *, n_hosts: int = 1,
+                 cfg=None, placement=None, lengths=None,
+                 priorities: Optional[Sequence[int]] = None,
+                 parallel_hosts: bool = True, **cfg_overrides):
+    """Drive a replay-model fleet end-to-end and return
+    ``(requests, metrics, server)``.
+
+    The fleet-serving harness: builds the replay model/params from the
+    ``phis`` bank, a ``ServeConfig`` (``cfg`` or ``tokens_per_step=1`` +
+    ``cfg_overrides``), and either a single ``OrcaScheduler``
+    (``n_hosts=1``) or a ``FleetRouter`` — then runs one whole session.
+    Because both servers speak the same submit/step/drain protocol and
+    replay trajectories are deterministic, the returned stop decisions
+    are directly comparable across host counts: byte-identical stops is
+    the fleet invariant this harness exists to check (and benchmark).
+    """
+    from repro.core.probe import ProbeConfig
+    from repro.serving.config import ServeConfig
+    from repro.serving.router import FleetRouter
+    from repro.serving.scheduler import OrcaScheduler
+
+    phis = np.asarray(phis)
+    if cfg is None:
+        cfg = ServeConfig(tokens_per_step=1,
+                          max_new_tokens=int(phis.shape[1]),
+                          **cfg_overrides)
+    elif cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    pc = ProbeConfig(d_phi=int(phis.shape[2]), smooth_window=4)
+    model, params = replay_model(phis), replay_params(phis)
+    if n_hosts == 1:
+        server = OrcaScheduler(model, params, pc, theta, cfg)
+    else:
+        server = FleetRouter(model, params, pc, theta, cfg,
+                             n_hosts=n_hosts, placement=placement,
+                             parallel_hosts=parallel_hosts)
+    if lengths is None:
+        lengths = [int(phis.shape[1])] * int(phis.shape[0])
+    requests = replay_requests(lengths)
+    if priorities is not None:
+        for r, p in zip(requests, priorities):
+            r.priority = int(p)
+    requests, metrics = server.run(requests)
+    return requests, metrics, server

@@ -81,6 +81,8 @@ class Request:
     # lifecycle (owned by the scheduler)
     state: RequestState = RequestState.WAITING
     slot: int = -1
+    host: int = -1                        # fleet host that served it (-1 =
+    #                                       single-host / not yet placed)
     submitted_step: int = 0               # engine step at enqueue
     admitted_step: int = -1               # engine step at slot admission
     completed_step: int = -1              # engine step at stop/finish
@@ -194,10 +196,15 @@ class FleetMetrics:
     preemptions: int = 0         # victims spilled to host RAM
     restores: int = 0            # spilled requests resumed
     spilled_blocks: int = 0      # KV pages copied out across all spills
+    # fleet serving (multi-host tentpole): n_slots above is PER HOST
+    n_hosts: int = 1
+    routed_affine: int = 0       # placements that followed prefix affinity
 
     def row(self) -> Dict[str, float]:
         return {
             **self.per_class,
+            "n_hosts": self.n_hosts,
+            "routed_affine": self.routed_affine,
             "samples_cancelled": self.samples_cancelled,
             "consensus_groups": self.consensus_groups,
             "consensus_steps": self.consensus_steps,
@@ -225,3 +232,35 @@ class FleetMetrics:
             "stall_ms_p99": self.stall_ms_p99,
             "prefill_chunks": self.prefill_chunks,
         }
+
+
+def latency_stats(requests: List[Request]
+                  ) -> "tuple[float, float, Dict[str, float]]":
+    """TTFT percentiles + per-priority-class latency tails for a served
+    population: ``(ttft_ms_p50, ttft_ms_p99, per_class)``.
+
+    Shared by ``OrcaScheduler._metrics`` and the ``FleetRouter``'s
+    aggregation, so fleet-level percentiles are recomputed over the union
+    of requests rather than averaged across per-host percentiles (which
+    would be wrong for tails).  CANCELLED samples are excluded: a
+    consensus cancellation is a by-design eviction, not a latency event,
+    and would otherwise pollute the tails the policies tune.
+    """
+    kept = [r for r in requests if r.state is not RequestState.CANCELLED]
+    ttft = np.array([r.ttft_s for r in kept if r.ttft_s >= 0]) * 1e3
+    per_class: Dict[str, float] = {}
+    for cls in sorted({r.priority for r in kept}):
+        in_cls = [r for r in kept if r.priority == cls]
+        c_ttft = np.array([r.ttft_s for r in in_cls
+                           if r.ttft_s >= 0]) * 1e3
+        c_wait = np.array([r.queue_wait_s for r in in_cls
+                           if r.queue_wait_s >= 0]) * 1e3
+        for key, arr in (("ttft_ms", c_ttft), ("queue_wait_ms", c_wait)):
+            if arr.size:
+                per_class[f"c{cls}_{key}_p50"] = \
+                    float(np.percentile(arr, 50))
+                per_class[f"c{cls}_{key}_p99"] = \
+                    float(np.percentile(arr, 99))
+    return (float(np.percentile(ttft, 50)) if ttft.size else 0.0,
+            float(np.percentile(ttft, 99)) if ttft.size else 0.0,
+            per_class)

@@ -94,8 +94,10 @@ from repro.serving.engine import (ChunkSeg, ChunkWork,
                                   Spill, chunk_supported, prefix_len)
 from repro.serving.groups import RequestGroup, group_requests
 from repro.serving.kv_pool import BlockPool, blocks_needed, prompt_key
-from repro.serving.policy import (ComposeView, SchedulingPolicy, make_policy)
-from repro.serving.request import FleetMetrics, Request, RequestState
+from repro.serving.policy import (ComposeView, HostPressure,
+                                  SchedulingPolicy, make_policy)
+from repro.serving.request import (FleetMetrics, Request, RequestState,
+                                   latency_stats)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,36 +110,78 @@ class _AdmitPlan:
     register_key: Optional[str]  # register as prefix donor after admission
 
 
+# constructor-keyword sentinel: distinguishes "not passed" (resolve from
+# the unified ServeConfig) from an explicit None (which is meaningful for
+# cache_len / num_blocks / chunk_tokens / token_budget / policy / ...)
+_UNSET: object = object()
+
+
+def _pick(explicit, cfg_value):
+    """An explicitly passed constructor keyword wins; else the value comes
+    from the unified ``ServeConfig`` (the api_redesign contract that lets
+    one config object describe a whole scheduler — or N fleet hosts)."""
+    return cfg_value if explicit is _UNSET else explicit
+
+
 class OrcaScheduler:
-    """Admit waiting requests into slots; evict on ORCA stop or budget."""
+    """Admit waiting requests into slots; evict on ORCA stop or budget.
+
+    Driving protocol (shared with ``FleetRouter`` — ``serve_requests``
+    duck-types over either):
+
+    * ``submit(requests)`` — enqueue gang-admission units (opens a fresh
+      serving session if none is active; callable repeatedly);
+    * ``step()`` — ONE scheduler iteration (admission -> batch composition
+      -> fused engine step -> collection/eviction -> consensus); returns
+      False once the fleet is idle;
+    * ``drain()`` — step until idle, close the session, return
+      ``(requests, FleetMetrics)``;
+    * ``run(requests)`` — the classic one-shot facade: submit + drain.
+
+    ``prepare(requests)`` sizes the engine/pool for a population WITHOUT
+    enqueueing it, and ``pressure()`` exports the ``HostPressure`` summary
+    the fleet router's placement policy consumes.
+
+    Every constructor keyword resolves against the unified ``ServeConfig``
+    (explicit keyword wins), so ``OrcaScheduler(model, params, pc, theta,
+    cfg)`` alone builds the fully-described scheduler.
+    """
 
     def __init__(self, model: Model, params, pc: ProbeConfig, theta,
-                 cfg: ServeConfig, *, n_slots: int = 4,
-                 cache_len: Optional[int] = None,
-                 probe_impl: str = "kernel",
-                 interpret: Optional[bool] = None,
-                 paged: bool = False, block_size: int = 16,
-                 num_blocks: Optional[int] = None,
-                 prefix_sharing: bool = True,
-                 chunk_tokens: Optional[int] = None,
-                 token_budget: Optional[int] = None,
-                 policy: Union[str, SchedulingPolicy, None] = None,
-                 pack_chunks: bool = True,
-                 pack_max: int = 4,
-                 consensus: Union[GroupCalibrator, float, None] = None,
-                 preemption: bool = True):
+                 cfg: ServeConfig, *, n_slots: int = _UNSET,
+                 cache_len: Optional[int] = _UNSET,
+                 probe_impl: str = _UNSET,
+                 interpret: Optional[bool] = _UNSET,
+                 paged: bool = _UNSET, block_size: int = _UNSET,
+                 num_blocks: Optional[int] = _UNSET,
+                 prefix_sharing: bool = _UNSET,
+                 chunk_tokens: Optional[int] = _UNSET,
+                 token_budget: Optional[int] = _UNSET,
+                 policy: Union[str, SchedulingPolicy, None] = _UNSET,
+                 pack_chunks: bool = _UNSET,
+                 pack_max: int = _UNSET,
+                 consensus: Union[GroupCalibrator, float, None] = _UNSET,
+                 preemption: bool = _UNSET):
         self.model, self.params, self.pc, self.theta, self.cfg = \
             model, params, pc, theta, cfg
+        n_slots = int(_pick(n_slots, cfg.n_slots))
+        chunk_tokens = _pick(chunk_tokens, cfg.chunk_tokens)
+        token_budget = _pick(token_budget, cfg.token_budget)
+        policy = _pick(policy, cfg.policy)
+        consensus = _pick(consensus, cfg.consensus)
+        pack_chunks = _pick(pack_chunks, cfg.pack_chunks)
+        pack_max = _pick(pack_max, cfg.pack_max)
+        preemption = _pick(preemption, cfg.preemption)
         self.n_slots = n_slots
-        self.cache_len = cache_len
+        self.cache_len = _pick(cache_len, cfg.cache_len)
         # probe_impl/interpret route the fused step's probe math: "kernel"
         # (the Pallas serving_probe_step) or "ref" (jnp parity oracle)
-        self.probe_impl = probe_impl
-        self.interpret = interpret
-        self.paged = bool(paged)
-        self.block_size = int(block_size)
-        self.num_blocks = num_blocks
-        self.prefix_sharing = bool(prefix_sharing)
+        self.probe_impl = _pick(probe_impl, cfg.probe_impl)
+        self.interpret = _pick(interpret, cfg.interpret)
+        self.paged = bool(_pick(paged, cfg.paged))
+        self.block_size = int(_pick(block_size, cfg.block_size))
+        self.num_blocks = _pick(num_blocks, cfg.num_blocks)
+        self.prefix_sharing = bool(_pick(prefix_sharing, cfg.prefix_sharing))
         # chunked prefill (Sarathi-style): prefill stops being an admission
         # event and becomes schedulable work — each engine iteration packs
         # every resident decode token plus up to ``chunk_tokens`` prompt
@@ -211,8 +255,50 @@ class OrcaScheduler:
         self._n_preempted = self._n_restored = self._n_spilled_blocks = 0
         self.pool: Optional[BlockPool] = None
         self._engine: Optional[ContinuousServingEngine] = None
+        self._session_open = False
+        self._reset_session()
 
     # ------------------------------------------------------------------
+    # serving-session state: queues, residents and counters for ONE
+    # submit..drain cycle.  Engine, pool and policy objects deliberately
+    # survive across sessions (repeated runs must not recompile).
+    def _reset_session(self) -> None:
+        self._waiting: deque = deque()            # gang-admission units
+        self._swapped: deque = deque()            # (request, Spill) pairs
+        self._running: Dict[int, Request] = {}    # slot -> request
+        self._prefilling: Dict[int, Request] = {}  # slot -> mid-prefill req
+        self._plans: Dict[int, _AdmitPlan] = {}   # deferred donor registry
+        self._free: List[int] = list(range(self.n_slots))
+        self._requests: List[Request] = []        # submission order
+        self.groups: List[RequestGroup] = []      # consensus outcomes
+        self._open_groups: List[RequestGroup] = []
+        self._steps = 0
+        self._active_slot_steps = 0
+        self._total_tokens = self._n_chunks = self._n_packed = 0
+        self._peak_blocks = self._prefill_skips = self._peak_step_tokens = 0
+        self._n_cancelled = self._cancel_freed = 0
+        self._n_preempted = self._n_restored = self._n_spilled_blocks = 0
+        self._stalls: List[float] = []
+        self._t0 = time.perf_counter()
+
+    @property
+    def has_work(self) -> bool:
+        """True while any request is queued, swapped or resident."""
+        return bool(self._waiting or self._swapped or self._running
+                    or self._prefilling)
+
+    # ------------------------------------------------------------------
+    def _resident(self) -> bool:
+        return bool(self._running or self._prefilling or self._swapped)
+
+    def _refuse_rebuild(self, what: str, have, need) -> None:
+        raise RuntimeError(
+            f"submit() needs {what} of {need} but the live session has "
+            f"{have} with requests resident — a rebuild would discard "
+            "their KV/probe state; fix by sizing the fleet up front via "
+            "prepare(<full request population>) (or an explicit "
+            "cache_len/num_blocks) before serving starts")
+
     def _ensure_engine(self, requests: Sequence[Request]) -> ContinuousServingEngine:
         cache_len = self.cache_len
         if cache_len is None:
@@ -235,11 +321,27 @@ class OrcaScheduler:
             cache_len = max([cache_len]
                             + [self._request_tokens(r) for r in requests])
             max_blocks = blocks_needed(cache_len, self.block_size)
-            num_blocks = int(self.num_blocks or
-                             (self.n_slots * max_blocks + 1))
+            if self.num_blocks:
+                num_blocks = int(self.num_blocks)
+            else:
+                num_blocks = self.n_slots * max_blocks + 1
+                if self.pool is not None:
+                    # derived sizing never shrinks a live pool: a smaller
+                    # incremental submit (the router's placement path) must
+                    # not drop pages a bigger earlier population reserved
+                    num_blocks = max(num_blocks, self.pool.num_blocks)
+            if self.pool is not None and self.pool.num_blocks != num_blocks \
+                    and (self.pool.blocks_in_use or self._resident()):
+                if num_blocks > self.pool.num_blocks:
+                    self._refuse_rebuild("a page pool",
+                                         self.pool.num_blocks, num_blocks)
+                num_blocks = self.pool.num_blocks   # big enough: keep it
             if self.pool is None or self.pool.num_blocks != num_blocks:
                 self.pool = BlockPool(num_blocks, self.block_size)
             if self._engine is None or self._engine.cache_len < cache_len:
+                if self._engine is not None and self._resident():
+                    self._refuse_rebuild("an engine cache_len",
+                                         self._engine.cache_len, cache_len)
                 self._engine = ContinuousServingEngine(
                     self.model, self.params, self.pc, self.theta, self.cfg,
                     self.n_slots, cache_len, probe_impl=self.probe_impl,
@@ -248,6 +350,9 @@ class OrcaScheduler:
                     chunk_tokens=self.chunk_tokens,
                     pack_max=self.pack_max)
         elif self._engine is None or self._engine.cache_len < cache_len:
+            if self._engine is not None and self._resident():
+                self._refuse_rebuild("an engine cache_len",
+                                     self._engine.cache_len, cache_len)
             self._engine = ContinuousServingEngine(
                 self.model, self.params, self.pc, self.theta, self.cfg,
                 self.n_slots, cache_len, probe_impl=self.probe_impl,
@@ -486,17 +591,43 @@ class OrcaScheduler:
         return True
 
     # ------------------------------------------------------------------
-    def run(self, requests: Sequence[Request]
-            ) -> Tuple[List[Request], FleetMetrics]:
-        """Drive every request to STOPPED/FINISHED/CANCELLED; return them
-        + metrics."""
-        eng = self._ensure_engine(requests)
-        chunked = bool(eng.chunk_tokens)
+    # the submit/step/drain protocol (shared with FleetRouter)
+    def prepare(self, requests: Sequence[Request]) -> None:
+        """Size the engine and (in paged mode) the page pool for a request
+        population WITHOUT enqueueing it.
+
+        The fleet router calls this on every host with the FULL fleet
+        population before placement, so no host ever needs a mid-flight
+        engine rebuild (refused while requests are resident — a rebuild
+        would discard their KV/probe state)."""
+        fresh = not self._session_open
+        if fresh:
+            self._reset_session()
+            self._session_open = True
+        if requests:
+            self._ensure_engine(requests)
+        if fresh:
+            # engine construction (jit) stays out of queue-wait time, same
+            # as the fresh-submit path
+            self._t0 = time.perf_counter()
+
+    def submit(self, requests: Sequence[Request]) -> None:
+        """Enqueue ``requests`` as gang-admission units, opening a fresh
+        serving session if none is active.  Callable repeatedly — the
+        engine/pool are sized for each submitted population, so size for
+        the UNION up front via ``prepare`` when submitting incrementally."""
+        requests = list(requests)
+        fresh = not self._session_open
+        if fresh:
+            self._reset_session()
+            self._session_open = True
+        if not requests:
+            return
+        self._ensure_engine(requests)
         # gang-admission units: a whole self-consistency group (atomic:
         # all samples or none) or a singleton; with no grouped requests
         # this is exactly the classic per-request queue
         units, groups = group_requests(requests)
-        self.groups = groups          # exposed: consensus outcomes per group
         for grp in groups:
             if grp.size > self.n_slots:
                 raise ValueError(
@@ -504,346 +635,403 @@ class OrcaScheduler:
                     f"fleet has {self.n_slots} slots: gang admission needs "
                     "every sample resident at once; fix by raising n_slots "
                     f"to >= {grp.size} or lowering the group size")
-        # groups whose consensus may still fire (checked every step a
-        # member could have emitted a score; a lone sample never votes)
-        open_groups: List[RequestGroup] = \
-            [g for g in groups if g.size >= 2] if self.consensus else []
-        waiting = deque(units)
-        swapped: deque = deque()                  # (request, Spill) pairs
-        running: Dict[int, Request] = {}          # slot -> request
-        prefilling: Dict[int, Request] = {}       # slot -> mid-prefill req
-        plans: Dict[int, _AdmitPlan] = {}         # deferred donor registry
-        free = list(range(self.n_slots))
-        steps = active_slot_steps = 0
-        total_tokens = n_chunks = n_packed = 0
-        peak_blocks = prefill_skips = peak_step_tokens = 0
-        n_cancelled = cancel_freed = 0
-        self._n_preempted = self._n_restored = self._n_spilled_blocks = 0
-        stalls: List[float] = []
-        t0 = time.perf_counter()
+        if fresh:
+            # the serving clock starts once the first batch is staged —
+            # engine construction stays out of queue-wait time, matching
+            # the pre-split run() semantics
+            self._t0 = time.perf_counter()
+        self._requests.extend(requests)
+        self.groups.extend(groups)     # exposed: consensus outcomes
+        if self.consensus:
+            # groups whose consensus may still fire (checked every step a
+            # member could have emitted a score; a lone sample never votes)
+            self._open_groups.extend(g for g in groups if g.size >= 2)
+        self._waiting.extend(units)
 
-        while waiting or swapped or running or prefilling:
-            t_iter = time.perf_counter()
-            # admission: refill free slots before the next fused step.
-            # SWAPPED requests (preemption victims) restore FIRST — ahead
-            # of every WAITING unit — and a swapped head that cannot yet
-            # restore BARRIERS its own class: only strictly-more-urgent
-            # units admit past it, so a victim is never overtaken by its
-            # own class.  Then the POLICY picks which WAITING UNIT (a
-            # whole group, or a singleton for the classic request) — in
-            # paged mode a unit that doesn't fit the pool holds its place
-            # and WAITS for an eviction to return pages, and a group
-            # additionally waits for enough free SLOTS: gang admission is
-            # all-or-nothing on both resources, so a group is never
-            # half-resident.  Pages are still reserved ALL-OR-NOTHING,
-            # whether the prompt then prefills in one admission shot or in
-            # scheduled chunks.  When capacity fails for a unit strictly
-            # MORE urgent than some resident, ``_preempt_for`` spills
-            # policy-chosen victims until the unit fits; and a gang
-            # needing more slots than are free no longer stalls smaller
-            # units behind it — the policy may SKIP it, bounded by the
-            # ``max_head_skips`` aging guard (a pinned gang admits next).
-            tried: set = set()        # id(unit) passed over this round
-            barrier_prio: Optional[int] = None
-            while swapped or waiting:
-                if swapped and barrier_prio is None:
-                    req, spill = swapped[0]
-                    if req.done:      # cancelled while swapped
+    def run(self, requests: Sequence[Request]
+            ) -> Tuple[List[Request], FleetMetrics]:
+        """Drive every request to STOPPED/FINISHED/CANCELLED; return them
+        + metrics.  The classic one-shot facade over submit + drain."""
+        if self._session_open and self.has_work:
+            raise RuntimeError(
+                "run() while a serving session is active would reset "
+                "resident state; drive incremental traffic through "
+                "submit()/step()/drain() instead")
+        self._session_open = False     # fresh session even after a drain
+        self.submit(requests)
+        return self.drain()
+
+    def drain(self) -> Tuple[List[Request], FleetMetrics]:
+        """Step until the fleet is idle, close the session and return
+        every submitted request plus the session's ``FleetMetrics``."""
+        while self.step():
+            pass
+        wall = max(time.perf_counter() - self._t0, 1e-9)
+        requests = list(self._requests)
+        metrics = self._metrics(requests, self._steps,
+                                self._active_slot_steps,
+                                self._total_tokens, wall,
+                                self._peak_blocks, self._prefill_skips,
+                                self._stalls, self._n_chunks,
+                                self._n_packed, self._peak_step_tokens,
+                                self.groups, self._n_cancelled,
+                                self._cancel_freed)
+        self._session_open = False
+        return requests, metrics
+
+    def step(self) -> bool:
+        """ONE scheduler iteration: admission -> batch composition -> the
+        fused engine step -> token collection / ORCA eviction -> prefill
+        bookkeeping -> consensus.  Returns False when the fleet is idle
+        (nothing queued, swapped or resident)."""
+        if not self.has_work:
+            return False
+        eng = self._engine
+        chunked = bool(eng.chunk_tokens)
+        waiting, swapped = self._waiting, self._swapped
+        running, prefilling = self._running, self._prefilling
+        plans, free = self._plans, self._free
+        steps = self._steps
+        t_iter = time.perf_counter()
+
+        # admission: refill free slots before the next fused step.
+        # SWAPPED requests (preemption victims) restore FIRST — ahead
+        # of every WAITING unit — and a swapped head that cannot yet
+        # restore BARRIERS its own class: only strictly-more-urgent
+        # units admit past it, so a victim is never overtaken by its
+        # own class.  Then the POLICY picks which WAITING UNIT (a
+        # whole group, or a singleton for the classic request) — in
+        # paged mode a unit that doesn't fit the pool holds its place
+        # and WAITS for an eviction to return pages, and a group
+        # additionally waits for enough free SLOTS: gang admission is
+        # all-or-nothing on both resources, so a group is never
+        # half-resident.  Pages are still reserved ALL-OR-NOTHING,
+        # whether the prompt then prefills in one admission shot or in
+        # scheduled chunks.  When capacity fails for a unit strictly
+        # MORE urgent than some resident, ``_preempt_for`` spills
+        # policy-chosen victims until the unit fits; and a gang
+        # needing more slots than are free no longer stalls smaller
+        # units behind it — the policy may SKIP it, bounded by the
+        # ``max_head_skips`` aging guard (a pinned gang admits next).
+        tried: set = set()        # id(unit) passed over this round
+        barrier_prio: Optional[int] = None
+        while swapped or waiting:
+            if swapped and barrier_prio is None:
+                req, spill = swapped[0]
+                if req.done:      # cancelled while swapped
+                    swapped.popleft()
+                    continue
+                if free:
+                    row = None
+                    if self.paged:
+                        row = self.pool.allocate(
+                            self._request_blocks(req))
+                    if row is not None or not self.paged:
                         swapped.popleft()
-                        continue
-                    if free:
-                        row = None
+                        self._restore(req, spill, row, free, running,
+                                      prefilling, steps)
                         if self.paged:
-                            row = self.pool.allocate(
-                                self._request_blocks(req))
-                        if row is not None or not self.paged:
-                            swapped.popleft()
-                            self._restore(req, spill, row, free, running,
-                                          prefilling, steps)
-                            if self.paged:
-                                peak_blocks = max(peak_blocks,
-                                                  self.pool.blocks_in_use)
-                            continue
-                    if self._preempt_for([req], req.priority, running,
-                                         prefilling, free, swapped, plans):
-                        continue      # room made: retry the restore
-                    if not (running or prefilling):
-                        raise RuntimeError(
-                            f"swapped request {req.req_id} cannot restore "
-                            "with the fleet empty — slot/page accounting "
-                            "is corrupt")
-                    barrier_prio = req.priority
-                if not waiting:
-                    break
-                cand_idx = [i for i, u in enumerate(waiting)
-                            if id(u) not in tried]
-                if not cand_idx:
-                    break
-                cand = [waiting[i] for i in cand_idx]
-                sel = self.policy.select_admit_unit(cand, steps)
-                idx = cand_idx[sel]
-                unit = waiting[idx]
-                members = [r for r in unit
-                           if r.state is RequestState.WAITING]
-                if not members:          # fully cancelled before admission
-                    del waiting[idx]
-                    continue
-                prio = min(r.priority for r in members)
-                if barrier_prio is not None and prio >= barrier_prio:
-                    break     # nothing more urgent than the blocked head
-                if len(members) > len(free):
-                    # slot shortage: preempt strictly-less-urgent
-                    # residents; else let the policy skip the oversized
-                    # unit so smaller units behind it still admit
-                    if not self._preempt_for(members, prio, running,
-                                             prefilling, free, swapped,
-                                             plans):
-                        if free and len(cand) > 1 \
-                                and self.policy.on_skipped_unit(cand, sel):
-                            tried.add(id(unit))
-                            continue
-                        break
-                if self.paged:
-                    mplans = self._reserve_unit(members)
-                    if mplans is None and self._preempt_for(
-                            members, prio, running, prefilling, free,
-                            swapped, plans):
-                        mplans = self._reserve_unit(members)
-                    if mplans is None:
-                        if not (running or prefilling or swapped):
-                            need = sum(self._request_blocks(r)
-                                       for r in members)
-                            what = (f"group {members[0].group_id}"
-                                    if members[0].group_id is not None
-                                    else f"request {members[0].req_id}")
-                            raise RuntimeError(
-                                f"{what} needs {need} pages but the "
-                                f"pool holds {self.pool.num_usable}; "
-                                "nothing left to evict")
-                        break
-                else:
-                    mplans = [None] * len(members)
-                self.policy.on_admitted_unit(cand, sel)
-                del waiting[idx]
-                for req, plan in zip(members, mplans):
-                    slot = free.pop()
-                    req.slot, req.admitted_step = slot, steps
-                    req.queue_wait_s = time.perf_counter() - t0
-                    req.state = RequestState.PREFILL
-                    skip = plan.skip_prefill if plan is not None else False
-                    if plan is not None:
-                        req.block_ids = list(plan.row)
-                        req.n_shared_blocks = plan.n_shared
-                        req.prefill_skipped = skip
-                        prefill_skips += int(skip)
-                        peak_blocks = max(peak_blocks,
-                                          self.pool.blocks_in_use)
-                    if chunked and not skip \
-                            and chunk_supported(self.model, req.inputs):
-                        # prefill is schedulable work, not an admission
-                        # event: the slot becomes a resident PREFILL row
-                        # and the prompt rides the unified step in
-                        # token-budget chunks
-                        eng.begin_prefill(slot)
-                        req.prefill_progress = 0
-                        prefilling[slot] = req
-                        if plan is not None:
-                            # donor registration deferred: the pages only
-                            # hold the prompt K/V once the last chunk lands
-                            plans[slot] = plan
-                    else:
-                        if plan is not None and eng.paged:
-                            eng.admit(slot, req.inputs, req.prompt_len,
-                                      block_row=plan.row,
-                                      skip_prefill=skip,
-                                      copy_tail=plan.copy_tail)
-                        else:
-                            # family without a page layout / non-text
-                            # prompt: the pool still admission-controls,
-                            # the device cache stays dense and prefill
-                            # stays one shot
-                            eng.admit(slot, req.inputs, req.prompt_len)
-                        if plan is not None:
-                            self._register_donor(req, plan)
-                        req.state = RequestState.RUNNING
-                        running[slot] = req
-
-            # batch composer: every resident decode token rides this step;
-            # the POLICY sizes the prefill share of what's left of the
-            # token budget, and the share is PACKED across mid-prefill
-            # residents in admission order — the tail of one prompt and
-            # the head of the next fuse into one block-diagonal chunk
-            # (pack_chunks=False: one request per chunk, PR-4's composer)
-            chunk = None
-            if prefilling:
-                share = self.policy.prefill_share(self._compose_view(
-                    running, prefilling, waiting, eng))
-                share = min(share, eng.chunk_tokens,
-                            self.token_budget - len(running))
-                segs: List[ChunkSeg] = []
-                residents = list(prefilling.items())
-                if any(r.group_id is not None
-                       for r in prefilling.values()):
-                    # sample spreading: order mid-prefill residents by
-                    # sample_idx first, so one packed chunk carries sample
-                    # k of SEVERAL groups rather than all samples of one —
-                    # siblings finish prefill on different steps and their
-                    # probe boundaries (hence votes) de-phase.  Ungrouped
-                    # fleets keep admission order byte-for-byte.
-                    residents.sort(key=lambda kv: (kv[1].sample_idx,
-                                                   kv[1].admitted_step,
-                                                   kv[1].req_id))
-                for slot, req in residents:
-                    if share <= 0 or len(segs) >= eng.max_pack:
-                        break
-                    n = min(share, req.prompt_len - req.prefill_progress)
-                    if n <= 0:
+                            self._peak_blocks = max(
+                                self._peak_blocks,
+                                self.pool.blocks_in_use)
                         continue
-                    segs.append(ChunkSeg(
-                        slot=slot,
-                        tokens=np.asarray(req.inputs["tokens"][0]),
-                        start=req.prefill_progress, length=int(n),
-                        row=(np.asarray(req.block_ids, np.int32)
-                             if eng.paged and req.block_ids else None)))
-                    share -= n
-                    if not self.pack_chunks:
-                        break
-                if segs:
-                    chunk = ChunkWork(segs=tuple(segs))
-                    n_chunks += 1
-                    n_packed += int(len(segs) >= 2)
-            peak_step_tokens = max(
-                peak_step_tokens,
-                len(running) + (chunk.total_tokens if chunk else 0))
-
-            view = eng.step(chunk) if chunked else eng.step()
-            steps += 1
-            active_slot_steps += len(running)
-            now = time.perf_counter()
-
-            for slot, req in list(running.items()):
-                if req.first_token_step < 0:
-                    req.first_token_step = steps
-                    req.ttft_s = now - t0
-                req.tokens.append(int(view.tokens[slot]))
-                total_tokens += 1
-                n_scores = int(view.n_scores[slot])
-                if n_scores > len(req.scores):
-                    req.scores.append(float(view.smoothed[slot]))
-                    # the vote at this probe boundary: the answer hash is
-                    # the token just decoded (the step's answer proxy,
-                    # same convention as launch.serve's trajectory
-                    # extraction) — recorded alongside the score so a
-                    # group's consensus sees matched (confidence, answer)
-                    # pairs
-                    req.answers.append(int(view.tokens[slot]))
-                max_new = req.max_new_tokens or self.cfg.max_new_tokens
-                if bool(view.stopped[slot]):
-                    # ORCA stop: evict NOW — the slot is free next step
-                    req.stop_step = int(view.stop_step[slot])
-                    req.steps_run = req.stop_step
-                    self._complete(req, RequestState.STOPPED, steps)
-                elif len(req.tokens) >= max_new:
-                    req.stop_step = -1
-                    req.steps_run = n_scores
-                    self._complete(req, RequestState.FINISHED, steps)
+                if self._preempt_for([req], req.priority, running,
+                                     prefilling, free, swapped, plans):
+                    continue      # room made: retry the restore
+                if not (running or prefilling):
+                    raise RuntimeError(
+                        f"swapped request {req.req_id} cannot restore "
+                        "with the fleet empty — slot/page accounting "
+                        "is corrupt")
+                barrier_prio = req.priority
+            if not waiting:
+                break
+            cand_idx = [i for i, u in enumerate(waiting)
+                        if id(u) not in tried]
+            if not cand_idx:
+                break
+            cand = [waiting[i] for i in cand_idx]
+            sel = self.policy.select_admit_unit(cand, steps)
+            idx = cand_idx[sel]
+            unit = waiting[idx]
+            members = [r for r in unit
+                       if r.state is RequestState.WAITING]
+            if not members:          # fully cancelled before admission
+                del waiting[idx]
+                continue
+            prio = min(r.priority for r in members)
+            if barrier_prio is not None and prio >= barrier_prio:
+                break     # nothing more urgent than the blocked head
+            if len(members) > len(free):
+                # slot shortage: preempt strictly-less-urgent
+                # residents; else let the policy skip the oversized
+                # unit so smaller units behind it still admit
+                if not self._preempt_for(members, prio, running,
+                                         prefilling, free, swapped,
+                                         plans):
+                    if free and len(cand) > 1 \
+                            and self.policy.on_skipped_unit(cand, sel):
+                        tried.add(id(unit))
+                        continue
+                    break
+            if self.paged:
+                mplans = self._reserve_unit(members)
+                if mplans is None and self._preempt_for(
+                        members, prio, running, prefilling, free,
+                        swapped, plans):
+                    mplans = self._reserve_unit(members)
+                if mplans is None:
+                    if not (running or prefilling or swapped):
+                        need = sum(self._request_blocks(r)
+                                   for r in members)
+                        what = (f"group {members[0].group_id}"
+                                if members[0].group_id is not None
+                                else f"request {members[0].req_id}")
+                        raise RuntimeError(
+                            f"{what} needs {need} pages but the "
+                            f"pool holds {self.pool.num_usable}; "
+                            "nothing left to evict")
+                    break
+            else:
+                mplans = [None] * len(members)
+            self.policy.on_admitted_unit(cand, sel)
+            del waiting[idx]
+            for req, plan in zip(members, mplans):
+                slot = free.pop()
+                req.slot, req.admitted_step = slot, steps
+                req.queue_wait_s = time.perf_counter() - self._t0
+                req.state = RequestState.PREFILL
+                skip = plan.skip_prefill if plan is not None else False
+                if plan is not None:
+                    req.block_ids = list(plan.row)
+                    req.n_shared_blocks = plan.n_shared
+                    req.prefill_skipped = skip
+                    self._prefill_skips += int(skip)
+                    self._peak_blocks = max(self._peak_blocks,
+                                            self.pool.blocks_in_use)
+                if chunked and not skip \
+                        and chunk_supported(self.model, req.inputs):
+                    # prefill is schedulable work, not an admission
+                    # event: the slot becomes a resident PREFILL row
+                    # and the prompt rides the unified step in
+                    # token-budget chunks
+                    eng.begin_prefill(slot)
+                    req.prefill_progress = 0
+                    prefilling[slot] = req
+                    if plan is not None:
+                        # donor registration deferred: the pages only
+                        # hold the prompt K/V once the last chunk lands
+                        plans[slot] = plan
                 else:
+                    if plan is not None and eng.paged:
+                        eng.admit(slot, req.inputs, req.prompt_len,
+                                  block_row=plan.row,
+                                  skip_prefill=skip,
+                                  copy_tail=plan.copy_tail)
+                    else:
+                        # family without a page layout / non-text
+                        # prompt: the pool still admission-controls,
+                        # the device cache stays dense and prefill
+                        # stays one shot
+                        eng.admit(slot, req.inputs, req.prompt_len)
+                    if plan is not None:
+                        self._register_donor(req, plan)
+                    req.state = RequestState.RUNNING
+                    running[slot] = req
+
+        # batch composer: every resident decode token rides this step;
+        # the POLICY sizes the prefill share of what's left of the
+        # token budget, and the share is PACKED across mid-prefill
+        # residents in admission order — the tail of one prompt and
+        # the head of the next fuse into one block-diagonal chunk
+        # (pack_chunks=False: one request per chunk, PR-4's composer)
+        chunk = None
+        if prefilling:
+            share = self.policy.prefill_share(self._compose_view(
+                running, prefilling, waiting, eng))
+            share = min(share, eng.chunk_tokens,
+                        self.token_budget - len(running))
+            segs: List[ChunkSeg] = []
+            residents = list(prefilling.items())
+            if any(r.group_id is not None
+                   for r in prefilling.values()):
+                # sample spreading: order mid-prefill residents by
+                # sample_idx first, so one packed chunk carries sample
+                # k of SEVERAL groups rather than all samples of one —
+                # siblings finish prefill on different steps and their
+                # probe boundaries (hence votes) de-phase.  Ungrouped
+                # fleets keep admission order byte-for-byte.
+                residents.sort(key=lambda kv: (kv[1].sample_idx,
+                                               kv[1].admitted_step,
+                                               kv[1].req_id))
+            for slot, req in residents:
+                if share <= 0 or len(segs) >= eng.max_pack:
+                    break
+                n = min(share, req.prompt_len - req.prefill_progress)
+                if n <= 0:
                     continue
-                eng.release(slot)
-                if self.paged and req.block_ids:
-                    # the stop IS the reclaim: pages return to the pool now
-                    self.pool.free(req.block_ids)
-                free.append(slot)
-                del running[slot]
+                segs.append(ChunkSeg(
+                    slot=slot,
+                    tokens=np.asarray(req.inputs["tokens"][0]),
+                    start=req.prefill_progress, length=int(n),
+                    row=(np.asarray(req.block_ids, np.int32)
+                         if eng.paged and req.block_ids else None)))
+                share -= n
+                if not self.pack_chunks:
+                    break
+            if segs:
+                chunk = ChunkWork(segs=tuple(segs))
+                self._n_chunks += 1
+                self._n_packed += int(len(segs) >= 2)
+        self._peak_step_tokens = max(
+            self._peak_step_tokens,
+            len(running) + (chunk.total_tokens if chunk else 0))
 
-            # prefill bookkeeping AFTER token collection: every segment of
-            # the packed chunk advances; a request whose last chunk just
-            # landed decodes its first token NEXT step
-            if chunk is not None:
-                for seg in chunk.segs:
-                    req = prefilling[seg.slot]
-                    req.prefill_progress += seg.length
-                    if req.prefill_progress >= req.prompt_len:
-                        eng.finish_prefill(
-                            seg.slot, req.inputs, req.prompt_len,
-                            block_row=(req.block_ids
-                                       if eng.paged and req.block_ids
-                                       else None))
-                        del prefilling[seg.slot]
-                        plan = plans.pop(seg.slot, None)
-                        if plan is not None:
-                            self._register_donor(req, plan)
-                        req.state = RequestState.RUNNING
-                        running[seg.slot] = req
+        view = eng.step(chunk) if chunked else eng.step()
+        steps = self._steps = self._steps + 1
+        self._active_slot_steps += len(running)
+        now = time.perf_counter()
 
-            # consensus stop: after this step's scores landed (and ORCA
-            # evictions ran — a sample stopping at this very boundary
-            # still votes its final frozen score), each open group's
-            # calibrated vote is re-checked; the first crossing CANCELS
-            # every still-running sibling mid-flight — slot, pages and
-            # probe state return to the fleet, the unspent budget becomes
-            # group savings
-            if open_groups:
-                still_open: List[RequestGroup] = []
-                for grp in open_groups:
-                    fire, ans, agr = self.consensus.decide(
-                        [r.scores for r in grp.requests],
-                        [r.answers for r in grp.requests])
-                    if fire:
-                        grp.consensus_step = steps
-                        grp.consensus_index = max(
-                            len(r.scores) for r in grp.requests) - 1
-                        grp.consensus_answer = int(ans)
-                        grp.consensus_agreement = float(agr)
-                        for sib in grp.requests:
-                            if sib.done:
-                                continue
-                            if sib.state is RequestState.SWAPPED:
-                                # a spilled sibling holds no slot and no
-                                # pages (both returned at spill) — drop
-                                # its queued restore and mark it cancelled
-                                for qi, (q, _) in enumerate(swapped):
-                                    if q is sib:
-                                        del swapped[qi]
-                                        break
-                                sib.steps_run = len(sib.scores)
-                                sib.stop_step = -1
-                                self._complete(sib, RequestState.CANCELLED,
-                                               steps)
-                                n_cancelled += 1
-                                continue
-                            slot = sib.slot
-                            eng.cancel(slot)
-                            if self.paged and sib.block_ids:
-                                cancel_freed += \
-                                    self.pool.free(sib.block_ids)
-                            free.append(slot)
-                            running.pop(slot, None)
-                            if slot in prefilling:
-                                # cancel-mid-prefill: the row sat parked
-                                # at NULL the whole prefill, so it was
-                                # never armed; drop the deferred donor
-                                # plan with it
-                                del prefilling[slot]
-                                plans.pop(slot, None)
+        for slot, req in list(running.items()):
+            if req.first_token_step < 0:
+                req.first_token_step = steps
+                req.ttft_s = now - self._t0
+            req.tokens.append(int(view.tokens[slot]))
+            self._total_tokens += 1
+            n_scores = int(view.n_scores[slot])
+            if n_scores > len(req.scores):
+                req.scores.append(float(view.smoothed[slot]))
+                # the vote at this probe boundary: the answer hash is
+                # the token just decoded (the step's answer proxy,
+                # same convention as launch.serve's trajectory
+                # extraction) — recorded alongside the score so a
+                # group's consensus sees matched (confidence, answer)
+                # pairs
+                req.answers.append(int(view.tokens[slot]))
+            max_new = req.max_new_tokens or self.cfg.max_new_tokens
+            if bool(view.stopped[slot]):
+                # ORCA stop: evict NOW — the slot is free next step
+                req.stop_step = int(view.stop_step[slot])
+                req.steps_run = req.stop_step
+                self._complete(req, RequestState.STOPPED, steps)
+            elif len(req.tokens) >= max_new:
+                req.stop_step = -1
+                req.steps_run = n_scores
+                self._complete(req, RequestState.FINISHED, steps)
+            else:
+                continue
+            eng.release(slot)
+            if self.paged and req.block_ids:
+                # the stop IS the reclaim: pages return to the pool now
+                self.pool.free(req.block_ids)
+            free.append(slot)
+            del running[slot]
+
+        # prefill bookkeeping AFTER token collection: every segment of
+        # the packed chunk advances; a request whose last chunk just
+        # landed decodes its first token NEXT step
+        if chunk is not None:
+            for seg in chunk.segs:
+                req = prefilling[seg.slot]
+                req.prefill_progress += seg.length
+                if req.prefill_progress >= req.prompt_len:
+                    eng.finish_prefill(
+                        seg.slot, req.inputs, req.prompt_len,
+                        block_row=(req.block_ids
+                                   if eng.paged and req.block_ids
+                                   else None))
+                    del prefilling[seg.slot]
+                    plan = plans.pop(seg.slot, None)
+                    if plan is not None:
+                        self._register_donor(req, plan)
+                    req.state = RequestState.RUNNING
+                    running[seg.slot] = req
+
+        # consensus stop: after this step's scores landed (and ORCA
+        # evictions ran — a sample stopping at this very boundary
+        # still votes its final frozen score), each open group's
+        # calibrated vote is re-checked; the first crossing CANCELS
+        # every still-running sibling mid-flight — slot, pages and
+        # probe state return to the fleet, the unspent budget becomes
+        # group savings
+        if self._open_groups:
+            still_open: List[RequestGroup] = []
+            for grp in self._open_groups:
+                fire, ans, agr = self.consensus.decide(
+                    [r.scores for r in grp.requests],
+                    [r.answers for r in grp.requests])
+                if fire:
+                    grp.consensus_step = steps
+                    grp.consensus_index = max(
+                        len(r.scores) for r in grp.requests) - 1
+                    grp.consensus_answer = int(ans)
+                    grp.consensus_agreement = float(agr)
+                    for sib in grp.requests:
+                        if sib.done:
+                            continue
+                        if sib.state is RequestState.SWAPPED:
+                            # a spilled sibling holds no slot and no
+                            # pages (both returned at spill) — drop
+                            # its queued restore and mark it cancelled
+                            for qi, (q, _) in enumerate(swapped):
+                                if q is sib:
+                                    del swapped[qi]
+                                    break
                             sib.steps_run = len(sib.scores)
                             sib.stop_step = -1
                             self._complete(sib, RequestState.CANCELLED,
                                            steps)
-                            n_cancelled += 1
-                    elif not grp.done:
-                        still_open.append(grp)
-                open_groups = still_open
-            stalls.append((time.perf_counter() - t_iter) * 1e3)
+                            self._n_cancelled += 1
+                            continue
+                        slot = sib.slot
+                        eng.cancel(slot)
+                        if self.paged and sib.block_ids:
+                            self._cancel_freed += \
+                                self.pool.free(sib.block_ids)
+                        free.append(slot)
+                        running.pop(slot, None)
+                        if slot in prefilling:
+                            # cancel-mid-prefill: the row sat parked
+                            # at NULL the whole prefill, so it was
+                            # never armed; drop the deferred donor
+                            # plan with it
+                            del prefilling[slot]
+                            plans.pop(slot, None)
+                        sib.steps_run = len(sib.scores)
+                        sib.stop_step = -1
+                        self._complete(sib, RequestState.CANCELLED,
+                                       steps)
+                        self._n_cancelled += 1
+                elif not grp.done:
+                    still_open.append(grp)
+            self._open_groups = still_open
+        self._stalls.append((time.perf_counter() - t_iter) * 1e3)
+        return True
 
-        wall = max(time.perf_counter() - t0, 1e-9)
-        return list(requests), self._metrics(requests, steps,
-                                             active_slot_steps,
-                                             total_tokens, wall,
-                                             peak_blocks, prefill_skips,
-                                             stalls, n_chunks, n_packed,
-                                             peak_step_tokens, groups,
-                                             n_cancelled, cancel_freed)
+    # ------------------------------------------------------------------
+    def pressure(self, host: int = 0) -> HostPressure:
+        """Export this scheduler's ``ComposeView``-style pressure summary
+        — the per-host snapshot the ``FleetRouter``'s placement policy
+        consumes each step (the gossip of the simulated fleet).  Valid at
+        any point in a session, including before the first submit."""
+        residents = list(self._running.values()) \
+            + list(self._prefilling.values())
+        queued = sum(sum(1 for r in u if not r.done)
+                     for u in self._waiting)
+        swapped_live = sum(1 for r, _ in self._swapped if not r.done)
+        return HostPressure(
+            host=int(host), n_slots=self.n_slots,
+            n_running=len(self._running),
+            n_prefilling=len(self._prefilling),
+            n_swapped=swapped_live,
+            n_waiting=len(self._waiting),
+            queued_samples=queued,
+            free_slots=len(self._free),
+            pool_blocks=self.pool.num_usable if self.pool else 0,
+            free_blocks=self.pool.num_free if self.pool else 0,
+            blocks_in_use=self.pool.blocks_in_use if self.pool else 0,
+            max_resident_priority=(max(r.priority for r in residents)
+                                   if residents else None))
 
     # ------------------------------------------------------------------
     def _compose_view(self, running: Dict[int, Request],
@@ -885,28 +1073,10 @@ class OrcaScheduler:
         sav = [r.savings(self.cfg.tokens_per_step, self.cfg.max_new_tokens)
                for r in requests]
         queue = [r.queue_steps for r in requests]
-        # CANCELLED samples are excluded from the latency percentiles: a
-        # consensus cancellation is a by-design eviction, not a latency
-        # event, and would otherwise pollute the tails the policies tune
-        kept = [r for r in requests
-                if r.state is not RequestState.CANCELLED]
-        ttft = np.array([r.ttft_s for r in kept if r.ttft_s >= 0]) * 1e3
+        # latency tails via the shared helper (CANCELLED excluded there;
+        # the FleetRouter recomputes the same stats over the fleet union)
+        ttft_p50, ttft_p99, per_class = latency_stats(list(requests))
         st = np.asarray(stalls if stalls else [0.0])
-        # per-priority-class latency tails: TTFT and queue wait (WAITING ->
-        # PREFILL wall time) p50/p99 — what the priority/TTFT policies tune
-        per_class: Dict[str, float] = {}
-        for cls in sorted({r.priority for r in kept}):
-            in_cls = [r for r in kept if r.priority == cls]
-            c_ttft = np.array([r.ttft_s for r in in_cls
-                               if r.ttft_s >= 0]) * 1e3
-            c_wait = np.array([r.queue_wait_s for r in in_cls
-                               if r.queue_wait_s >= 0]) * 1e3
-            for key, arr in (("ttft_ms", c_ttft), ("queue_wait_ms", c_wait)):
-                if arr.size:
-                    per_class[f"c{cls}_{key}_p50"] = \
-                        float(np.percentile(arr, 50))
-                    per_class[f"c{cls}_{key}_p99"] = \
-                        float(np.percentile(arr, 99))
         # group-level accounting: savings COUNT a cancelled sample's
         # unspent budget (the whole point of consensus cancellation)
         tps, dmn = self.cfg.tokens_per_step, self.cfg.max_new_tokens
@@ -939,8 +1109,7 @@ class OrcaScheduler:
             mean_queue_steps=float(np.mean(queue)) if queue else 0.0,
             pool_blocks=self.pool.num_usable if self.pool else 0,
             peak_blocks_in_use=peak_blocks, prefill_skips=prefill_skips,
-            ttft_ms_p50=float(np.percentile(ttft, 50)) if ttft.size else 0.0,
-            ttft_ms_p99=float(np.percentile(ttft, 99)) if ttft.size else 0.0,
+            ttft_ms_p50=ttft_p50, ttft_ms_p99=ttft_p99,
             stall_ms_p50=float(np.percentile(st, 50)),
             stall_ms_p99=float(np.percentile(st, 99)),
             prefill_chunks=prefill_chunks, packed_chunks=packed_chunks,

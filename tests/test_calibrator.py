@@ -89,6 +89,7 @@ def test_make_calibrator_registry():
         make_calibrator("nope")
 
 
+@pytest.mark.filterwarnings("ignore::DeprecationWarning")
 def test_run_orca_shim_matches_facade(splits):
     """The deprecation shim must produce the facade's numbers exactly."""
     train, cal, test = splits

@@ -21,6 +21,11 @@ from repro.serving import (ContinuousServingEngine, OrcaScheduler,
 
 from tests._hypothesis_stub import given, settings, st
 
+# the deprecated shims (ServingEngine.serve / run_orca) are exercised here
+# ON PURPOSE as equality baselines — silence their DeprecationWarning
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
 
 @pytest.fixture(scope="module")
 def small_model():

@@ -1,0 +1,377 @@
+"""Multi-host fleet serving: FleetRouter stop-decision byte-identity
+across host counts (policy x packing x paged), prefix-affine placement,
+gang atomicity across hosts, pressure-balanced placement, the ServeConfig
+consolidation (validation, from_args, deprecation shims) and the
+hypothesis sweep over page ownership."""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api as orca
+from repro.configs import get_config
+from repro.core.probe import ProbeConfig, init_outer
+from repro.models import build
+from repro.serving import (FleetRouter, RoundRobinPlacement, ServeConfig,
+                           make_placement, make_request, replay_model,
+                           replay_params, replay_requests, serve_replay)
+
+from tests._hypothesis_stub import given, settings, st
+
+N_TRAJ, T_STEPS, D_PHI = 10, 20, 6
+
+
+@pytest.fixture(scope="module")
+def replay_bank():
+    rs = np.random.RandomState(7)
+    drift = np.linspace(0, 1.2, T_STEPS)[None, :, None]
+    bank = (rs.randn(N_TRAJ, T_STEPS, D_PHI) * 0.3
+            + drift * rs.rand(N_TRAJ, 1, D_PHI)).astype(np.float32)
+    theta = {"W0": (rs.randn(D_PHI) * 0.4).astype(np.float32),
+             "b0": np.float32(-0.2)}
+    return bank, theta
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("smollm_360m").reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _probe(mcfg, bias):
+    pc = ProbeConfig(d_phi=mcfg.d_model, smooth_window=2)
+    theta = init_outer(pc, jax.random.PRNGKey(1))
+    theta["b0"] = jnp.asarray(float(bias))
+    return pc, theta
+
+
+def _stops(requests):
+    return [(r.stop_step, r.state.name, tuple(r.tokens)) for r in requests]
+
+
+# ---------------------------------------------------------------------------
+# the fleet invariant: stops byte-identical to single-host serving
+
+@pytest.mark.parametrize("policy,pack,paged,chunk", [
+    ("fifo", False, False, None),
+    ("fifo", True, True, 2),
+    ("priority", True, False, 2),
+    ("priority", False, True, None),
+    ("edf", True, True, 2),
+    ("ttft", False, True, 2),
+])
+def test_stops_byte_identical_across_host_counts(replay_bank, policy,
+                                                 pack, paged, chunk):
+    """Per-request stop decisions (and every decoded token) are
+    byte-identical for 1-host vs 2-host vs 4-host fleets under every
+    policy x packing x paged combination — each host runs the unchanged
+    single-host scheduler, so placement cannot change a stop."""
+    bank, theta = replay_bank
+    kw = dict(lam=0.62, burn_in=3, n_slots=3, policy=policy,
+              pack_chunks=pack, paged=paged, block_size=4,
+              chunk_tokens=chunk)
+    prios = [i % 2 for i in range(N_TRAJ)]
+    base, _, _ = serve_replay(bank, theta, n_hosts=1, priorities=prios,
+                              **kw)
+    for n_hosts in (2, 4):
+        got, fm, _ = serve_replay(bank, theta, n_hosts=n_hosts,
+                                  priorities=prios, parallel_hosts=False,
+                                  **kw)
+        assert _stops(got) == _stops(base), \
+            f"stops diverged at {n_hosts} hosts"
+        assert fm.n_hosts == n_hosts
+        assert {r.host for r in got} <= set(range(n_hosts))
+
+
+def test_parallel_stepping_matches_serial(replay_bank):
+    """Concurrent host stepping (the thread pool) changes wall time only:
+    stops and tokens match the serial fleet byte for byte."""
+    bank, theta = replay_bank
+    kw = dict(lam=0.62, burn_in=3, n_slots=3, paged=True, block_size=4)
+    a, _, _ = serve_replay(bank, theta, n_hosts=2, parallel_hosts=False,
+                           **kw)
+    b, _, _ = serve_replay(bank, theta, n_hosts=2, parallel_hosts=True,
+                           **kw)
+    assert _stops(a) == _stops(b)
+
+
+# ---------------------------------------------------------------------------
+# placement
+
+def test_prefix_affinity_routes_to_donor_host(small_model):
+    """Same-prompt traffic lands on the host already holding the donor
+    pages: every follower's prefill collapses to a page-table copy
+    (prefill_skips) on ONE host instead of cold prefills spread across
+    the fleet — and stops stay byte-identical under the locality-blind
+    round-robin placement."""
+    model, params = small_model
+    pc, theta = _probe(model.cfg, 3.0)
+    cfg = ServeConfig(tokens_per_step=2, max_new_tokens=12, lam=0.6,
+                      burn_in=1, n_slots=4, paged=True, block_size=4)
+    prompt = jax.random.randint(jax.random.PRNGKey(3), (8,), 0,
+                                model.cfg.vocab_size)
+
+    def run(placement):
+        router = FleetRouter(model, params, pc, theta, cfg, n_hosts=2,
+                             placement=placement, parallel_hosts=False)
+        done, fm = router.run([make_request(np.asarray(prompt))
+                               for _ in range(4)])
+        return done, fm, router
+
+    done, fm, router = run("pressure")
+    assert fm.prefill_skips == 3          # one cold prefill, three skips
+    assert fm.routed_affine == 3
+    assert len({r.host for r in done}) == 1   # all on the donor host
+    rr_done, rr_fm, _ = run(RoundRobinPlacement())
+    # round-robin is affinity-blind; at most coincidental donor landings
+    assert rr_fm.routed_affine < fm.routed_affine
+    assert len({r.host for r in rr_done}) == 2   # spread: 2 hosts
+    assert rr_fm.prefill_skips == 2       # one cold prefill PER host
+    assert _stops(rr_done) == _stops(done)
+
+
+def test_gang_never_split_across_hosts(replay_bank):
+    """A self-consistency gang places as one unit: every sample of a
+    group lands on the same host, and a gang larger than any host's slot
+    count raises the fleet-flavored error instead of half-placing."""
+    bank, theta = replay_bank
+    reqs = replay_requests([T_STEPS] * 8)
+    for i, r in enumerate(reqs):
+        r.group_id, r.sample_idx = i // 4, i % 4
+    pc = ProbeConfig(d_phi=D_PHI, smooth_window=4)
+    cfg = ServeConfig(tokens_per_step=1, max_new_tokens=T_STEPS, lam=0.62,
+                      burn_in=3, n_slots=4, paged=True, block_size=4)
+    router = FleetRouter(replay_model(bank), replay_params(bank), pc,
+                         theta, cfg, n_hosts=2, parallel_hosts=False)
+    done, _ = router.run(reqs)
+    for gid in (0, 1):
+        hosts = {r.host for r in done if r.group_id == gid}
+        assert len(hosts) == 1, f"group {gid} split across hosts {hosts}"
+
+    big = replay_requests([T_STEPS] * 5)
+    for i, r in enumerate(big):
+        r.group_id, r.sample_idx = 0, i
+    router = FleetRouter(replay_model(bank), replay_params(bank), pc,
+                         theta, cfg, n_hosts=2, parallel_hosts=False)
+    with pytest.raises(ValueError, match="never split across hosts"):
+        router.submit(big)
+
+
+def test_pressure_balanced_placement_under_burst(replay_bank):
+    """A skewed burst (every request submitted at once) spreads across
+    the fleet: the pressure placement balances outstanding samples, so
+    neither host serves the whole burst."""
+    bank, theta = replay_bank
+    done, fm, router = serve_replay(
+        bank, theta, n_hosts=2, parallel_hosts=False, lam=0.62,
+        burn_in=3, n_slots=3)
+    counts = [sum(1 for r in done if r.host == h) for h in (0, 1)]
+    assert sorted(counts) == [5, 5], counts
+    assert fm.n_hosts == 2
+
+
+def test_pressure_snapshot_fields(replay_bank):
+    """``OrcaScheduler.pressure()`` exports the gossip snapshot at any
+    session point, and the router's ``pressures()`` mirrors its hosts."""
+    bank, theta = replay_bank
+    pc = ProbeConfig(d_phi=D_PHI, smooth_window=4)
+    cfg = ServeConfig(tokens_per_step=1, max_new_tokens=T_STEPS,
+                      lam=0.62, burn_in=3, n_slots=3, paged=True,
+                      block_size=4)
+    router = FleetRouter(replay_model(bank), replay_params(bank), pc,
+                         theta, cfg, n_hosts=2, parallel_hosts=False)
+    for p in router.pressures():          # before any submit
+        assert p.free_slots == p.n_slots == 3
+        assert p.outstanding == 0
+    router.submit(replay_requests([T_STEPS] * 8))
+    router.step()
+    ps = router.pressures()
+    assert [p.host for p in ps] == [0, 1]
+    assert sum(p.n_running + p.n_prefilling for p in ps) > 0
+    assert all(p.pool_blocks > 0 for p in ps)
+    while router.step():
+        pass
+    done, _ = router.drain()
+    assert all(r.done for r in done)
+
+
+# ---------------------------------------------------------------------------
+# ServeConfig: the consolidated API
+
+def test_serveconfig_validation_names_the_fix():
+    """Every invalid configuration fails at construction with an error
+    naming the fix, no matter which entry point would have built it."""
+    for kwargs, match in [
+        (dict(tokens_per_step=0), "tokens_per_step"),
+        (dict(max_new_tokens=0), "max_new_tokens"),
+        (dict(block_size=0), "block_size"),
+        (dict(pack_max=0), "pack_max"),
+        (dict(probe_impl="magic"), "probe_impl"),
+        (dict(n_hosts=0), "n_hosts"),
+        (dict(group_size=0), "group_size"),
+        (dict(group_size=8, n_slots=4), "gang admission"),
+        (dict(consensus=0.9), "group_size=1"),
+        (dict(consensus=True, group_size=2), "not a threshold"),
+        (dict(consensus=1.5, group_size=2), "outside"),
+        (dict(consensus_delta=0.1), "without consensus"),
+    ]:
+        with pytest.raises(ValueError, match=match):
+            ServeConfig(**kwargs)
+
+
+def test_serveconfig_is_frozen_and_normalizes():
+    cfg = ServeConfig(num_blocks=0, chunk_tokens=0, cache_len=0,
+                      token_budget=0)
+    assert cfg.num_blocks is None and cfg.chunk_tokens is None
+    assert cfg.cache_len is None and cfg.token_budget is None
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.n_slots = 8
+    # replace() re-validates
+    with pytest.raises(ValueError, match="gang admission"):
+        dataclasses.replace(cfg, group_size=99)
+
+
+def test_serveconfig_from_args_maps_cli_flags():
+    """from_args reads the launch/serve.py flag names (slots -> n_slots,
+    no_pack/no_preempt invert, 0 -> None), partial namespaces work and
+    overrides win."""
+    ns = argparse.Namespace(slots=6, paged=True, block_size=8,
+                            num_blocks=0, chunk_tokens=4, token_budget=0,
+                            policy="priority", no_pack=True, pack_max=2,
+                            group_size=2, no_preempt=True, hosts=3,
+                            tokens_per_step=2, max_new_tokens=32,
+                            burn_in=1)
+    cfg = ServeConfig.from_args(ns, lam=0.7)
+    assert cfg.n_slots == 6 and cfg.paged and cfg.block_size == 8
+    assert cfg.num_blocks is None and cfg.chunk_tokens == 4
+    assert cfg.token_budget is None and cfg.policy == "priority"
+    assert cfg.pack_chunks is False and cfg.pack_max == 2
+    assert cfg.preemption is False and cfg.n_hosts == 3
+    assert cfg.lam == 0.7 and cfg.tokens_per_step == 2
+    partial = ServeConfig.from_args(argparse.Namespace(slots=2))
+    assert partial.n_slots == 2 and partial.n_hosts == 1
+    override = ServeConfig.from_args(ns, n_slots=9, lam=0.5)
+    assert override.n_slots == 9
+
+
+# ---------------------------------------------------------------------------
+# api facade: config path, legacy shims, duck-typed serve_requests
+
+class _StubCalibrator:
+    """Minimal Calibrator surface engine()/fleet() consume."""
+
+    def __init__(self, pc, theta, lam=0.62):
+        self._pc, self._theta, self._lam = pc, theta, lam
+
+    def serving_params(self):
+        return self._pc, self._theta
+
+    def threshold(self):
+        return self._lam
+
+
+@pytest.fixture(scope="module")
+def replay_calibrator(replay_bank):
+    bank, theta = replay_bank
+    pc = ProbeConfig(d_phi=D_PHI, smooth_window=4)
+    return (replay_model(bank), replay_params(bank),
+            _StubCalibrator(pc, theta))
+
+
+def test_engine_legacy_kwargs_shim_matches_config(replay_calibrator):
+    """The pre-ServeConfig kwargs sprawl still works — as a
+    DeprecationWarning-emitting shim producing byte-identical serving."""
+    model, params, cal = replay_calibrator
+    kw = dict(tokens_per_step=1, max_new_tokens=T_STEPS, burn_in=3,
+              n_slots=3, paged=True, block_size=4)
+    with pytest.warns(DeprecationWarning, match="ServeConfig"):
+        legacy = orca.engine(model, params, cal, **kw)
+    blessed = orca.engine(model, params, cal,
+                          config=ServeConfig(lam=0.62, **kw))
+    l_done, _ = legacy.run(replay_requests([T_STEPS] * N_TRAJ))
+    b_done, _ = blessed.run(replay_requests([T_STEPS] * N_TRAJ))
+    assert _stops(l_done) == _stops(b_done)
+
+
+def test_engine_config_rejects_kwarg_mix(replay_calibrator):
+    model, params, cal = replay_calibrator
+    cfg = ServeConfig(lam=0.62, tokens_per_step=1)
+    with pytest.raises(ValueError, match="ambiguous"):
+        orca.engine(model, params, cal, config=cfg, n_slots=3)
+    with pytest.warns(DeprecationWarning, match="serve="):
+        orca.engine(model, params, cal, serve=cfg)
+    with pytest.raises(ValueError, match="not both"):
+        orca.engine(model, params, cal, serve=cfg, lam=0.5)
+
+
+def test_serve_requests_duck_typed_over_scheduler_and_router(
+        replay_calibrator):
+    """One entry point drives both servers: serve_requests accepts an
+    OrcaScheduler or a FleetRouter (same submit/step/drain protocol) and
+    the stops match byte for byte."""
+    model, params, cal = replay_calibrator
+    cfg = ServeConfig(lam=0.62, tokens_per_step=1,
+                      max_new_tokens=T_STEPS, burn_in=3, n_slots=3)
+    prompts = np.arange(N_TRAJ, dtype=np.int64)[:, None]
+    sched = orca.engine(model, params, cal, config=cfg)
+    router = orca.fleet(model, params, cal, config=cfg, n_hosts=2,
+                        parallel_hosts=False)
+    s_done, s_fm = orca.serve_requests(sched, prompts)
+    r_done, r_fm = orca.serve_requests(router, prompts)
+    assert _stops(s_done) == _stops(r_done)
+    assert s_fm.n_hosts == 1 and r_fm.n_hosts == 2
+
+
+def test_deprecated_serving_engine_serve_warns(small_model):
+    from repro.serving import ServingEngine
+    model, params = small_model
+    pc, theta = _probe(model.cfg, 3.0)
+    cfg = ServeConfig(tokens_per_step=2, max_new_tokens=8, lam=0.6,
+                      burn_in=1)
+    eng = ServingEngine(model, params, pc, theta, cfg)
+    batch = {"tokens": jnp.zeros((1, 4), jnp.int32)}
+    with pytest.warns(DeprecationWarning, match="static-batch baseline"):
+        eng.serve(batch, prompt_len=4, cache_len=16)
+
+
+# ---------------------------------------------------------------------------
+# property sweep: ownership + refcounts under random fleets
+
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       n_hosts=st.integers(min_value=1, max_value=3),
+       policy=st.sampled_from(["fifo", "priority"]),
+       paged=st.booleans())
+@settings(max_examples=8, deadline=None)
+def test_fuzz_no_cross_host_ownership(seed, n_hosts, policy, paged):
+    """Random fleets: every request terminates on exactly one host, no
+    host's pool ever references another host's pages (pools are disjoint
+    objects — cross-host ownership would surface as refcount leaks), and
+    every refcount drains to zero after the session."""
+    rs = np.random.RandomState(seed)
+    bank = (rs.randn(6, 12, 4) * 0.4
+            + np.linspace(0, 1, 12)[None, :, None]).astype(np.float32)
+    theta = {"W0": (rs.randn(4) * 0.4).astype(np.float32),
+             "b0": np.float32(-0.1)}
+    prios = rs.randint(0, 3, size=6).tolist()
+    done, fm, server = serve_replay(
+        bank, theta, n_hosts=n_hosts, parallel_hosts=False,
+        priorities=prios, lam=0.6, burn_in=2, n_slots=2, paged=paged,
+        block_size=4, policy=policy)
+    assert all(r.done for r in done)
+    hosts = [server] if n_hosts == 1 else server.hosts
+    for h in hosts:
+        if paged:
+            h.pool.check()
+            assert h.pool.blocks_in_use == 0
+            assert h.pool.num_free == h.pool.num_usable
+    if n_hosts > 1:
+        assert {r.host for r in done} <= set(range(n_hosts))
+        placement = make_placement(None)
+        assert placement.select_host(
+            [done[0]], server.pressures(), need_slots=1,
+            need_pages=0) in range(n_hosts)

@@ -16,6 +16,10 @@ from repro.serving import (ContinuousServingEngine, OrcaScheduler,
                            replay_params, reset_probe_slot,
                            served_stop_times)
 
+# the deprecated shims (ServingEngine.serve / run_orca) are exercised here
+# ON PURPOSE as equality baselines — silence their DeprecationWarning
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
 
 @pytest.fixture(scope="module")
 def small_model():

@@ -16,6 +16,10 @@ from repro.checkpoint import latest_step, restore, save_pytree
 from repro.serving import (ServeConfig, ServingEngine, extract_trajectories,
                            init_probe_state, make_serve_step)
 
+# the deprecated shims (ServingEngine.serve / run_orca) are exercised here
+# ON PURPOSE as equality baselines — silence their DeprecationWarning
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
 
 # ---------------------------------------------------------------------------
 # data

@@ -11,6 +11,11 @@ from repro.core.pipeline import evaluate_probe, run_orca
 from repro.core.probe import ProbeConfig
 from repro.trajectories import corpus_splits, ood_benchmark
 
+# the deprecated shims (ServingEngine.serve / run_orca) are exercised here
+# ON PURPOSE as equality baselines — silence their DeprecationWarning
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
 SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
