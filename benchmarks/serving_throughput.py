@@ -66,6 +66,16 @@ be IDENTICAL across paths (asserted):
     top.  Per-request stop decisions are byte-identical to the single
     host under every placement (asserted — the fleet invariant).
 
+  * SPECULATIVE draft-verify decode vs one-token decode on the
+    decode-bound replay fleet at EQUAL KV HBM (identical engine shape,
+    only ``spec_tokens`` differs): each RUNNING slot contributes a verify
+    segment of drafted tokens to the same unified step, the replay model
+    drafts from its own trajectory (100% acceptance — the throughput
+    ceiling), rejected-draft rollback and the accepted-length-masked
+    probe keep stop decisions byte-identical (asserted).  Decode tokens/s
+    multiplies by the accepted length per step (the
+    ``spec_vs_one_token`` gate metric, >= 1.3x enforced).
+
 ``--check`` is the CI perf-regression gate: re-run, then compare against the
 committed ``results/serving_throughput.json`` baseline — stop decisions must
 be byte-identical and every tracked metric must stay within the tolerance
@@ -90,7 +100,9 @@ from repro.core.probe import ProbeConfig
 from repro.launch.serve import model_inputs, trajectories_from_model
 from repro.models import build
 from repro.serving import (OrcaScheduler, ServeConfig, ServingEngine,
-                           make_group, make_request, serve_queue_static)
+                           make_group, make_request, replay_model,
+                           replay_params, replay_requests,
+                           serve_queue_static)
 
 from benchmarks.common import QUICK, RESULTS, print_table
 
@@ -148,6 +160,13 @@ def main(argv=None) -> int:
     # shared-prefix fleet workload for the 2-hosts-vs-1 row
     ap.add_argument("--fleet-prompts", type=int, default=4)
     ap.add_argument("--fleet-hosts", type=int, default=2)
+    # decode-bound replay fleet for the speculative-decode row
+    ap.add_argument("--spec-tokens", type=int, default=6,
+                    help="verify-block length for the spec-decode row")
+    ap.add_argument("--spec-trajectories", type=int, default=16)
+    ap.add_argument("--spec-steps", type=int, default=64,
+                    help="replay trajectory length (decode-bound: every "
+                         "token is one reasoning step)")
     ap.add_argument("--check", action="store_true",
                     help="CI gate: compare against the committed baseline "
                          "instead of overwriting it; nonzero exit on "
@@ -546,6 +565,64 @@ def main(argv=None) -> int:
           f"requests/s needs >= 2 cores to beat parity, this box has "
           f"{os.cpu_count()})")
 
+    # --- speculative draft-verify vs one-token decode, replay fleet ------
+    # decode-bound: tokens_per_step=1 replay trajectories, every generated
+    # token is a scored reasoning step.  The replay model drafts from its
+    # own trajectory (100% acceptance — the ceiling a learned drafter
+    # approaches), so each unified step advances every slot by the full
+    # verify block.  EQUAL KV HBM by construction: the two runs differ
+    # ONLY in spec_tokens (same engine shape, same cache)
+    s_traj, s_steps = args.spec_trajectories, args.spec_steps
+    s_rs = np.random.RandomState(args.seed)
+    s_drift = np.linspace(0, 1.2, s_steps)[None, :, None]
+    s_bank = (s_rs.randn(s_traj, s_steps, 16) * 0.3
+              + s_drift * s_rs.rand(s_traj, 1, 16)).astype(np.float32)
+    s_theta = {"W0": (s_rs.randn(16) * 0.4).astype(np.float32),
+               "b0": np.float32(-0.2)}
+    s_pc = ProbeConfig(d_phi=16, smooth_window=4)
+    s_scfg = ServeConfig(tokens_per_step=1, max_new_tokens=s_steps,
+                         lam=0.62, burn_in=3)
+    s_model, s_params = replay_model(s_bank), replay_params(s_bank)
+
+    def spec_requests():
+        return replay_requests([s_steps] * s_traj)
+
+    # wall times here are tens of ms, so this row takes extra timed reps —
+    # the per-step fixed cost spec amortizes is exactly what jitters
+    s_reps = max(args.reps, 5)
+    ot_sched = OrcaScheduler(s_model, s_params, s_pc, s_theta, s_scfg,
+                             n_slots=4)
+    ot_sched.run(spec_requests())
+    done_ot, fleet_ot = best_of(lambda: ot_sched.run(spec_requests()),
+                                n=s_reps)
+    sp_sched = OrcaScheduler(s_model, s_params, s_pc, s_theta, s_scfg,
+                             n_slots=4, spec_tokens=args.spec_tokens)
+    sp_sched.run(spec_requests())
+    done_sp, fleet_sp = best_of(lambda: sp_sched.run(spec_requests()),
+                                n=s_reps)
+    stop_ot = np.array([r.stop_step for r in done_ot])
+    stop_sp = np.array([r.stop_step for r in done_sp])
+    # the tentpole invariant: draft-verify must not move a stop decision
+    assert (stop_ot == stop_sp).all(), \
+        f"spec decode changed stop decisions: {stop_ot} vs {stop_sp}"
+    for r_ot, r_sp in zip(done_ot, done_sp):
+        assert r_ot.tokens == r_sp.tokens, "spec decode changed tokens"
+    assert fleet_sp.acceptance_rate == 1.0, \
+        f"replay self-draft acceptance {fleet_sp.acceptance_rate} != 1.0"
+    assert fleet_sp.engine_steps < fleet_ot.engine_steps
+    spec_ratio = fleet_sp.tokens_per_s / max(fleet_ot.tokens_per_s, 1e-9)
+    assert spec_ratio >= 1.3, \
+        f"spec decode only {spec_ratio:.2f}x tokens/s (need >= 1.3x)"
+    print(f"[throughput] spec == one-token stop decisions on replay fleet "
+          f"({stop_sp.tolist()}); {fleet_sp.spec_tokens_accepted}/"
+          f"{fleet_sp.spec_tokens_proposed} drafts accepted, accepted "
+          f"length p50/p99 {fleet_sp.accepted_len_p50:.1f}/"
+          f"{fleet_sp.accepted_len_p99:.1f}")
+    print(f"[throughput] spec decode (k={args.spec_tokens}, self-draft): "
+          f"{spec_ratio:.2f}x decode tokens/s ({fleet_sp.tokens_per_s:.1f} "
+          f"vs {fleet_ot.tokens_per_s:.1f}), engine steps "
+          f"{fleet_ot.engine_steps} -> {fleet_sp.engine_steps}")
+
     util_b = base.active_slot_steps / max(base.total_slot_steps, 1)
     steps_s = fleet.engine_steps / max(fleet.wall_time_s, 1e-9)
     steps_s_ref = fleet_ref.engine_steps / max(fleet_ref.wall_time_s, 1e-9)
@@ -583,6 +660,10 @@ def main(argv=None) -> int:
          "kv_mb": hbm_fleet / 1e6, "wall_s": fleet_1h.wall_time_s},
         {"mode": f"fleet-{n_fleet_hosts}-hosts", **fleet_fl.row(),
          "kv_mb": hbm_fleet / 1e6, "wall_s": fleet_fl.wall_time_s},
+        {"mode": "one-token-decode", **fleet_ot.row(),
+         "wall_s": fleet_ot.wall_time_s},
+        {"mode": f"spec-decode-k{args.spec_tokens}", **fleet_sp.row(),
+         "wall_s": fleet_sp.wall_time_s},
     ]
     print_table("serving throughput (same lambda*, same stop decisions)",
                 rows, ("mode", "engine_steps", "requests_per_s",
@@ -604,7 +685,7 @@ def main(argv=None) -> int:
           f"{fleet_d.requests_per_s:.2f})")
 
     report = {
-        "schema": 7,
+        "schema": 8,
         "quick": QUICK,
         "rows": rows,
         # the gate requires these BYTE-IDENTICAL against the baseline: the
@@ -625,6 +706,8 @@ def main(argv=None) -> int:
             "overload": stop_v.tolist(),
             # fleet == single-host (asserted above): one list covers both
             "fleet": stop_fl.tolist(),
+            # spec == one-token (asserted above): one list covers both
+            "spec_decode": stop_sp.tolist(),
         },
         # every metric must stay >= min_frac * baseline value; tolerances
         # live IN the baseline so re-baselining is an explicit commit
@@ -672,6 +755,16 @@ def main(argv=None) -> int:
                     {"value": fleet_ratio, "min_frac": 0.5},
                 "fleet_ttft_p99_gain":
                     {"value": fleet_ttft_gain, "min_frac": 0.5},
+                # speculative decode on the decode-bound replay fleet at
+                # equal KV HBM: absolute decode tokens/s, plus the ratio
+                # over one-token decode.  The ratio's floor is pinned at
+                # 1.3x (min_frac scaled so baseline * min_frac == 1.3
+                # whenever the committed ratio clears 1.3/0.95)
+                "spec_decode_tokens_per_s":
+                    {"value": fleet_sp.tokens_per_s, "min_frac": 0.3},
+                "spec_vs_one_token":
+                    {"value": spec_ratio,
+                     "min_frac": min(0.95, 1.3 / spec_ratio)},
             },
         },
     }

@@ -114,9 +114,10 @@ def engine(model, params, calibrator: Calibrator,
         sched = orca.engine(model, params, cal, config=cfg)
 
     Every serving knob — fleet shape, paged KV, chunked/packed prefill,
-    scheduling policy, self-consistency groups, preemption, probe
-    dispatch — is a ``ServeConfig`` field, validated once at construction
-    with errors that name the fix (see ``repro.serving.ServeConfig``).
+    speculative draft-verify decode (``spec_tokens=``), scheduling
+    policy, self-consistency groups, preemption, probe dispatch — is a
+    ``ServeConfig`` field, validated once at construction with errors
+    that name the fix (see ``repro.serving.ServeConfig``).
     The threshold comes from ``config.lam`` unless ``lam=`` overrides it;
     with neither, the calibrator's LTT ``threshold()`` is used (a
     non-finite lambda* serves with stopping disabled).

@@ -13,9 +13,10 @@ import os
 
 import jax
 
-from repro.kernels.ttt_probe import (ProbeStepOut, make_unroll_kernel,
-                                     serving_probe_step, ttt_probe_batched,
-                                     ttt_probe_scan)
+from repro.kernels.ttt_probe import (ProbeStepOut, SpecProbeOut,
+                                     make_unroll_kernel, serving_probe_step,
+                                     serving_probe_spec_step,
+                                     ttt_probe_batched, ttt_probe_scan)
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.decode_attention import (flash_decode, paged_flash_decode,
                                              paged_flash_packed_chunk,
@@ -34,8 +35,9 @@ def default_interpret() -> bool:
     return not on_tpu()
 
 
-__all__ = ["ProbeStepOut", "ttt_probe_scan", "ttt_probe_batched",
-           "make_unroll_kernel", "serving_probe_step", "flash_attention",
+__all__ = ["ProbeStepOut", "SpecProbeOut", "ttt_probe_scan",
+           "ttt_probe_batched", "make_unroll_kernel", "serving_probe_step",
+           "serving_probe_spec_step", "flash_attention",
            "flash_decode", "paged_flash_decode", "paged_flash_packed_chunk",
            "paged_flash_prefill_chunk", "wkv_scan", "on_tpu",
            "default_interpret"]

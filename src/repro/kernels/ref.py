@@ -77,6 +77,38 @@ def serving_probe_step_ref(zq, zk, boundary, W, b, ring, n_scores,
                         stop_step=stop_step)
 
 
+def serving_probe_spec_step_ref(zq, zk, boundary, accept, W, b, ring,
+                                n_scores, stopped, stop_step, eta, lam, *,
+                                burn_in: int):
+    """Chained-one-token oracle for ``serving_probe_spec_step``: token t of
+    slot i participates iff ``t < accept[i]`` and its boundary flag is set;
+    every participating token is EXACTLY one ``serving_probe_step_ref``
+    call, so the masked multi-token verify step equals the sequential
+    one-token procedure by construction — the spec-decode probe invariant
+    stated as code."""
+    from repro.kernels.ttt_probe import SpecProbeOut
+    t_total = zq.shape[1]
+    accept = jnp.asarray(accept, jnp.int32)
+    boundary = jnp.asarray(boundary, bool)
+    ss, sms, ns = [], [], []
+    out = None
+    for t in range(t_total):
+        bnd = boundary[:, t] & (t < accept)
+        out = serving_probe_step_ref(zq[:, t], zk[:, t], bnd, W, b, ring,
+                                     n_scores, stopped, stop_step, eta, lam,
+                                     burn_in=burn_in)
+        W, b, ring, n_scores, stopped, stop_step = (
+            out.W, out.b, out.ring, out.n_scores, out.stopped, out.stop_step)
+        ss.append(out.s)
+        sms.append(out.smoothed)
+        ns.append(out.n_scores)
+    return SpecProbeOut(
+        s=jnp.stack(ss, axis=1), smoothed_seq=jnp.stack(sms, axis=1),
+        n_seq=jnp.stack(ns, axis=1), W=W, b=b, ring=ring,
+        n_scores=n_scores, smoothed=out.smoothed, stopped=stopped,
+        stop_step=stop_step)
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=None):
     return attn_prefill_einsum(q, k, v, causal=causal, window=window)
 

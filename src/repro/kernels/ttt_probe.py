@@ -215,6 +215,155 @@ def _serving_kernel(zq_ref, zk_ref, bnd_ref, w_ref, b_ref, ring_ref, n_ref,
     step_out[...] = step_new[:, None]
 
 
+class SpecProbeOut(NamedTuple):
+    """A masked multi-token (speculative verify) probe step's outputs.
+
+    The per-token sequences let the scheduler replay the chain on the host:
+    token t of slot i emitted a score iff ``n_seq[i, t]`` exceeds the count
+    before it, and ``smoothed_seq[i, t]`` is that score's rolling mean."""
+    s: jnp.ndarray            # (B, T) raw probe score per verify token
+    smoothed_seq: jnp.ndarray  # (B, T) rolling mean AFTER each token
+    n_seq: jnp.ndarray        # (B, T) int32 scores emitted AFTER each token
+    W: jnp.ndarray            # (B, f) final fast weights
+    b: jnp.ndarray            # (B,)
+    ring: jnp.ndarray         # (B, window)
+    n_scores: jnp.ndarray     # (B,) int32
+    smoothed: jnp.ndarray     # (B,)
+    stopped: jnp.ndarray      # (B,) bool
+    stop_step: jnp.ndarray    # (B,) int32
+
+
+def _spec_kernel(zq_ref, zk_ref, bnd_ref, acc_ref, w_ref, b_ref, ring_ref,
+                 n_ref, stopped_ref, step_ref, eta_ref, lam_ref,
+                 s_out, sm_seq_out, n_seq_out, w_out, b_out, ring_out,
+                 n_out, sm_out, stopped_out, step_out, *, burn_in: int,
+                 t_total: int):
+    """T chained serving-probe steps with a per-slot accepted-length mask.
+
+    Token t of slot i participates iff ``t < accept[i]`` (and its boundary
+    flag is set); each participating token runs EXACTLY the
+    ``_serving_kernel`` per-token math, so the chain is bit-identical to
+    ``accept[i]`` sequential one-token steps.  Rejected-draft tokens
+    (t >= accept) leave every piece of state untouched."""
+    eta, lam = eta_ref[0], lam_ref[0]
+    acc = acc_ref[...][:, 0]                           # (B,) int32
+
+    def body(t, carry):
+        w, b, ring, n0, stopped_f, step0 = carry
+        zq = pl.load(zq_ref, (pl.dslice(t, 1), slice(None), slice(None)))[0]
+        zk = pl.load(zk_ref, (pl.dslice(t, 1), slice(None), slice(None)))[0]
+        bnd_in = pl.load(bnd_ref, (pl.dslice(t, 1), slice(None)))[0]
+        stopped = stopped_f > 0.5
+        # the accepted-length mask composes with the frozen-stop mask: a
+        # rejected draft position or a slot stopped earlier IN THIS CHAIN
+        # contributes no boundary, no update, no score emission
+        mask = (t < acc).astype(jnp.float32)
+        bnd = jnp.where(stopped, 0.0, bnd_in * mask)
+        s, w_upd, b_upd = P.score_then_update(w, b, zq, zk, 0.0, bnd, eta)
+        bnd_b = bnd > 0.5
+        ring_new = jnp.where(bnd_b[:, None],
+                             jnp.concatenate([ring[:, 1:], s[:, None]],
+                                             axis=1),
+                             ring)
+        n = n0 + bnd_b.astype(jnp.int32)
+        win = ring_new.shape[1]
+        denom = jnp.minimum(n, win).astype(jnp.float32)
+        smoothed = jnp.where(n > 0,
+                             jnp.sum(ring_new, axis=1)
+                             / jnp.maximum(denom, 1.0), 0.0)
+        stop_now = bnd_b & (smoothed >= lam) & (n > burn_in)
+        stopped_new = stopped | stop_now
+        step_new = jnp.where(stop_now & (step0 < 0), n, step0)
+        pl.store(s_out, (pl.dslice(t, 1), slice(None)), s[None])
+        pl.store(sm_seq_out, (pl.dslice(t, 1), slice(None)), smoothed[None])
+        pl.store(n_seq_out, (pl.dslice(t, 1), slice(None)), n[None])
+        return (jnp.where(stop_now[:, None], w, w_upd),
+                jnp.where(stop_now, b, b_upd),
+                ring_new, n, stopped_new.astype(jnp.float32), step_new)
+
+    carry = (w_ref[...], b_ref[...][:, 0], ring_ref[...], n_ref[...][:, 0],
+             stopped_ref[...][:, 0], step_ref[...][:, 0])
+    w, b, ring, n, stopped_f, step = jax.lax.fori_loop(0, t_total, body,
+                                                       carry)
+    # the smoothed score is derived state (always recomputed from the
+    # ring), so the post-chain recompute equals the last in-chain value
+    denom = jnp.minimum(n, ring.shape[1]).astype(jnp.float32)
+    smoothed = jnp.where(n > 0,
+                         jnp.sum(ring, axis=1) / jnp.maximum(denom, 1.0),
+                         0.0)
+    w_out[...] = w
+    b_out[...] = b[:, None]
+    ring_out[...] = ring
+    n_out[...] = n[:, None]
+    sm_out[...] = smoothed[:, None]
+    stopped_out[...] = stopped_f[:, None]
+    step_out[...] = step[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("burn_in", "interpret"))
+def serving_probe_spec_step(zq, zk, boundary, accept, W, b, ring, n_scores,
+                            stopped, stop_step, eta, lam, *, burn_in: int,
+                            interpret: bool = True) -> SpecProbeOut:
+    """Masked multi-token serving probe: T chained per-token steps in ONE
+    kernel call, gated by a per-slot accepted length.
+
+    zq/zk (B, T, f) per-token feature views (token t's features already
+    reflect the hidden-state pooling up to t); boundary (B, T) the raw
+    reasoning-step-crossing flags; accept (B,) int32 — slot i processes
+    only its first ``accept[i]`` tokens (the verifier's accepted prefix),
+    so the probe scores ONLY accepted tokens.  State args and semantics
+    are exactly :func:`serving_probe_step`'s, chained: running this over
+    (zq, zk) with accept[i] = a is bit-identical to ``a`` sequential
+    one-token ``serving_probe_step`` calls for slot i (the spec-decode
+    acceptance invariant; held to
+    ``repro.kernels.ref.serving_probe_spec_step_ref``).
+    A stop firing mid-chain freezes that slot for the remaining tokens —
+    same frozen-slot rule as the one-token kernel, applied within the
+    chain."""
+    batch, t_total, f = zq.shape
+    f32, i32 = jnp.float32, jnp.int32
+    f_pad = f if interpret else -(-f // 128) * 128
+    if f_pad != f:
+        zq = jnp.pad(zq.astype(f32), ((0, 0), (0, 0), (0, f_pad - f)))
+        zk = jnp.pad(zk.astype(f32), ((0, 0), (0, 0), (0, f_pad - f)))
+        W = jnp.pad(W.astype(f32), ((0, 0), (0, f_pad - f)))
+    win = ring.shape[1]
+    col = lambda a, dt: a.reshape(batch, 1).astype(dt)
+    kernel = functools.partial(_spec_kernel, burn_in=burn_in,
+                               t_total=t_total)
+    vmem = pl.BlockSpec(memory_space=pltpu.VMEM)        # whole-array block
+    s, sm_seq, n_seq, w_new, b_new, ring_new, n_new, sm_new, stopped_new, \
+        step_new = pl.pallas_call(
+            kernel,
+            in_specs=[vmem] * 10 + [
+                pl.BlockSpec(memory_space=pltpu.SMEM),          # eta
+                pl.BlockSpec(memory_space=pltpu.SMEM)],         # lam
+            out_specs=[vmem] * 10,
+            out_shape=[
+                jax.ShapeDtypeStruct((t_total, batch), f32),    # s
+                jax.ShapeDtypeStruct((t_total, batch), f32),    # smoothed
+                jax.ShapeDtypeStruct((t_total, batch), i32),    # n_scores
+                jax.ShapeDtypeStruct((batch, f_pad), f32),
+                jax.ShapeDtypeStruct((batch, 1), f32),
+                jax.ShapeDtypeStruct((batch, win), f32),
+                jax.ShapeDtypeStruct((batch, 1), i32),
+                jax.ShapeDtypeStruct((batch, 1), f32),
+                jax.ShapeDtypeStruct((batch, 1), f32),
+                jax.ShapeDtypeStruct((batch, 1), i32),
+            ],
+            interpret=interpret,
+        )(zq.astype(f32).transpose(1, 0, 2), zk.astype(f32).transpose(1, 0, 2),
+          jnp.asarray(boundary, f32).T, col(accept, i32), W.astype(f32),
+          col(b, f32), ring.astype(f32), col(n_scores, i32),
+          col(stopped, f32), col(stop_step, i32),
+          jnp.asarray(eta, f32).reshape(1), jnp.asarray(lam, f32).reshape(1))
+    return SpecProbeOut(
+        s=s.T, smoothed_seq=sm_seq.T, n_seq=n_seq.T,
+        W=w_new[:, :f], b=b_new[:, 0], ring=ring_new,
+        n_scores=n_new[:, 0], smoothed=sm_new[:, 0],
+        stopped=stopped_new[:, 0] > 0.5, stop_step=step_new[:, 0])
+
+
 @functools.partial(jax.jit, static_argnames=("burn_in", "interpret"))
 def serving_probe_step(zq, zk, boundary, W, b, ring, n_scores,
                        stopped, stop_step, eta, lam, *, burn_in: int,

@@ -92,6 +92,12 @@ def main(argv=None) -> int:
                          "token-budget step (0 = admission-time prefill)")
     ap.add_argument("--token-budget", type=int, default=0,
                     help="max tokens per unified step (0 -> slots + chunk)")
+    ap.add_argument("--spec-tokens", type=int, default=0,
+                    help="speculative draft-verify decode: each running "
+                         "slot proposes up to this many tokens per step "
+                         "(current token + drafts), scored in one fused "
+                         "verify pass; accepted prefix commits, rejects "
+                         "roll back (0 = one-token decode)")
     ap.add_argument("--policy", default="fifo",
                     choices=("fifo", "priority", "edf", "ttft"),
                     help="scheduling policy: admission order, per-step "
@@ -232,6 +238,12 @@ def main(argv=None) -> int:
               f"{fleet.group_savings:.0f} steps (mean "
               f"{fleet.group_savings_mean:.3f}), "
               f"{fleet.cancel_freed_blocks} pages freed at cancel")
+    if args.spec_tokens:
+        print(f"[serve] speculative: {fleet.spec_tokens_accepted}/"
+              f"{fleet.spec_tokens_proposed} drafts accepted "
+              f"(rate {fleet.acceptance_rate:.2f}), accepted length "
+              f"p50/p99 {fleet.accepted_len_p50:.1f}/"
+              f"{fleet.accepted_len_p99:.1f}")
     if fleet.preemptions:
         print(f"[serve] preemption: {fleet.preemptions} spills / "
               f"{fleet.restores} restores ({fleet.spilled_blocks} pages "

@@ -53,6 +53,17 @@ class Model:
     # isolated; the single-segment call IS the unpacked chunk path, so the
     # unified step serves both through ONE executable
     prefill_packed: Optional[Callable] = None
+    # speculative decode (None for families without it): the VERIFY pass
+    # — ``prefill_packed`` with the LM head kept: (cfg, params, tokens (C,),
+    # state, seg, slots, starts, lengths, block_rows=None) -> (logits
+    # (C, vocab), hidden (C, d), state); position j of each segment scores
+    # the next token after consuming draft token j
+    verify_packed: Optional[Callable] = None
+    # draft source for speculative decode: (cfg, params, state, token (B,),
+    # pos (B,), k) -> (B, k - 1) int32 proposed continuations; the default
+    # dense drafter repeats the last token (degenerate n-gram), the replay
+    # model drafts from its own trajectory
+    draft: Optional[Callable] = None
 
     @property
     def supports_paged(self) -> bool:
@@ -61,6 +72,11 @@ class Model:
     @property
     def supports_chunked(self) -> bool:
         return self.prefill_chunk is not None and self.prefill_packed is not None
+
+    @property
+    def supports_spec(self) -> bool:
+        return (self.verify_packed is not None and self.draft is not None
+                and self.supports_chunked)
 
     # ------------------------------------------------------------------
     def init(self, rng) -> Any:
@@ -192,7 +208,9 @@ def _build_dense(cfg: ModelConfig) -> Model:
                  decode_geometry=geom,
                  init_paged_state=init_paged_state,
                  prefill_chunk=transformer.prefill_chunk,
-                 prefill_packed=transformer.prefill_packed_chunk)
+                 prefill_packed=transformer.prefill_packed_chunk,
+                 verify_packed=transformer.verify_packed_chunk,
+                 draft=transformer.draft_tokens)
 
 
 def _build_rwkv(cfg: ModelConfig) -> Model:

@@ -261,24 +261,13 @@ def layer_prefill_packed(cfg, p, x, cache_l, rows, seg_tables, positions,
     return x + m, (k[0].transpose(1, 0, 2), v[0].transpose(1, 0, 2))
 
 
-def prefill_packed_chunk(cfg, params, tokens, state, seg, slots, starts,
-                         lengths, block_rows=None):
-    """PACKED chunked prefill: run one fused C-token chunk carrying prompt
-    tokens of up to R requests through the stack and scatter each token's
-    K/V into ITS OWN request's resident cache.
-
-    tokens (C,) int32 — the chunk, segments laid out contiguously in
-    request order, zero-padded at the tail; seg (C,) int32 — segment id
-    per token; slots (R,) batch rows; starts (R,) each segment's prefill
-    progress (= its readable cache prefix AND the absolute position of its
-    first chunk token); lengths (R,) tokens each segment contributes (0 =
-    unused segment).  Dense states scatter through per-token (lane,
-    position); a state carrying ``block_tables`` writes through
-    ``block_rows`` (R, nb), each segment's reserved physical pages.  All
-    of seg/slots/starts/lengths are traced data, so ONE compiled
-    executable covers every packing shape of every prompt length — the
-    single-segment call IS the unpacked chunk path.  Returns the updated
-    state."""
+def _packed_chunk_core(cfg, params, tokens, state, seg, slots, starts,
+                       lengths, block_rows=None):
+    """Shared body of ``prefill_packed_chunk`` / ``verify_packed_chunk``:
+    run one fused C-token packed chunk through the stack, scatter each
+    token's K/V into its own request's resident cache, and return
+    ``(new_state, x)`` with x (1, C, d) the post-stack activations (the
+    layer scan computes them either way; prefill merely discards them)."""
     c = tokens.shape[0]
     seg = jnp.asarray(seg, jnp.int32)
     slots = jnp.asarray(slots, jnp.int32)
@@ -308,15 +297,69 @@ def prefill_packed_chunk(cfg, params, tokens, state, seg, slots, starts,
                                      positions, seg, starts, chunk_mask)
         return x, kv
 
-    _, (ks, vs) = jax.lax.scan(body, x, (params["layers"], scanned))
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], scanned))
     # ks/vs (L, KV, C, dh): one per-token write for all layers
     if paged:
         pages = attn.cache_write_packed_paged(scanned, ks, vs,
                                               seg_tables[seg],
                                               positions, valid_tok)
-        return dict(pages, block_tables=state["block_tables"])
+        return dict(pages, block_tables=state["block_tables"]), x
     wpos = jnp.where(valid_tok, positions, n_virtual)    # padding dropped
-    return attn.cache_write_packed(state, ks, vs, rows, wpos)
+    return attn.cache_write_packed(state, ks, vs, rows, wpos), x
+
+
+def prefill_packed_chunk(cfg, params, tokens, state, seg, slots, starts,
+                         lengths, block_rows=None):
+    """PACKED chunked prefill: run one fused C-token chunk carrying prompt
+    tokens of up to R requests through the stack and scatter each token's
+    K/V into ITS OWN request's resident cache.
+
+    tokens (C,) int32 — the chunk, segments laid out contiguously in
+    request order, zero-padded at the tail; seg (C,) int32 — segment id
+    per token; slots (R,) batch rows; starts (R,) each segment's prefill
+    progress (= its readable cache prefix AND the absolute position of its
+    first chunk token); lengths (R,) tokens each segment contributes (0 =
+    unused segment).  Dense states scatter through per-token (lane,
+    position); a state carrying ``block_tables`` writes through
+    ``block_rows`` (R, nb), each segment's reserved physical pages.  All
+    of seg/slots/starts/lengths are traced data, so ONE compiled
+    executable covers every packing shape of every prompt length — the
+    single-segment call IS the unpacked chunk path.  Returns the updated
+    state."""
+    state, _ = _packed_chunk_core(cfg, params, tokens, state, seg, slots,
+                                  starts, lengths, block_rows=block_rows)
+    return state
+
+
+def verify_packed_chunk(cfg, params, tokens, state, seg, slots, starts,
+                        lengths, block_rows=None):
+    """Speculative VERIFY pass: the packed-chunk forward with the language
+    head kept.  Layout and cache semantics are ``prefill_packed_chunk``
+    verbatim — each segment is one request's draft block (current token +
+    proposed continuations) at absolute positions starts[r]..starts[r]+L-1,
+    attending its own committed cache prefix plus causally within the
+    block — but the post-stack activations feed final_norm + the LM head,
+    so position j of each segment scores the model's next token after
+    consuming draft token j.  Rejected positions need no undo: validity
+    masks derived from ``pos`` hide them and the next verify block
+    overwrites them in place before ``pos`` ever reaches them.  Returns
+    (logits (C, vocab), hidden (C, d), new_state)."""
+    state, x = _packed_chunk_core(cfg, params, tokens, state, seg, slots,
+                                  starts, lengths, block_rows=block_rows)
+    h = apply_norm(cfg, params["final_norm"], x)[0]       # (C, d)
+    logits = logits_from_hidden(cfg, params, h)
+    return logits, h, state
+
+
+def draft_tokens(cfg, params, state, token, pos, k):
+    """Default self-draft: propose ``k - 1`` repeats of the last committed
+    token (the degenerate n-gram drafter — zero extra forwards, zero extra
+    state; acceptance pays for whatever it gets right).  Families with a
+    cheaper oracle (e.g. the replay model, which drafts from its own
+    trajectory) override this on ``Model.draft``.  token (B,) int32;
+    returns (B, k - 1) int32 draft continuations."""
+    b = token.shape[0]
+    return jnp.broadcast_to(token[:, None], (b, k - 1))
 
 
 # ---------------------------------------------------------------------------

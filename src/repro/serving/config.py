@@ -74,6 +74,12 @@ class ServeConfig:
     pack_chunks: bool = True
     pack_max: int = 4
 
+    # -- speculative decode (PR 9) ----------------------------------------
+    spec_tokens: Optional[int] = None  # draft-verify block length per slot
+    #                               (current token + spec_tokens-1 drafts
+    #                               scored in one fused pass); None/0
+    #                               keeps one-token decode
+
     # -- scheduling policy (PR 5) ----------------------------------------
     policy: Any = None            # "fifo"/"priority"/"edf"/"ttft", a
     #                               SchedulingPolicy instance, or None
@@ -98,7 +104,7 @@ class ServeConfig:
     def __post_init__(self) -> None:
         # normalize the optional ints the CLI passes as 0-for-disabled
         for field in ("cache_len", "num_blocks", "chunk_tokens",
-                      "token_budget"):
+                      "token_budget", "spec_tokens"):
             val = getattr(self, field)
             if val is not None:
                 val = int(val)
@@ -140,6 +146,29 @@ class ServeConfig:
                 f"unknown probe_impl {self.probe_impl!r} (expected one of "
                 f"{_VALID_PROBE_IMPLS}); fix by passing 'kernel' (the "
                 "Pallas serving probe) or 'ref' (the jnp parity oracle)")
+        if self.spec_tokens is not None:
+            if self.spec_tokens < 2:
+                raise ValueError(
+                    f"spec_tokens={self.spec_tokens} must be >= 2: a "
+                    "verify block is the current token plus at least one "
+                    "draft; fix by passing spec_tokens >= 2 (or None/0 "
+                    "for one-token decode)")
+            if self.chunk_tokens is not None \
+                    and self.spec_tokens >= self.chunk_tokens:
+                raise ValueError(
+                    f"spec_tokens={self.spec_tokens} >= chunk_tokens="
+                    f"{self.chunk_tokens}: a verify block must fit inside "
+                    "the fused step's fixed chunk capacity alongside the "
+                    "prefill share; fix by lowering spec_tokens to < "
+                    f"{self.chunk_tokens} or raising chunk_tokens")
+            if self.token_budget is not None \
+                    and self.spec_tokens > self.token_budget:
+                raise ValueError(
+                    f"spec_tokens={self.spec_tokens} > token_budget="
+                    f"{self.token_budget}: one slot's verify block alone "
+                    "would blow the per-step token budget; fix by "
+                    "lowering spec_tokens to <= "
+                    f"{self.token_budget} or raising token_budget")
         if isinstance(self.n_hosts, bool) or int(self.n_hosts) < 1:
             raise ValueError(
                 f"n_hosts={self.n_hosts!r} must be an int >= 1: the number "
@@ -213,6 +242,7 @@ class ServeConfig:
         ("num_blocks", "num_blocks", None),      # 0 -> None in __post_init__
         ("chunk_tokens", "chunk_tokens", None),
         ("token_budget", "token_budget", None),
+        ("spec_tokens", "spec_tokens", None),    # 0 -> None in __post_init__
         ("policy", "policy", None),
         ("no_pack", "pack_chunks", "invert"),
         ("pack_max", "pack_max", None),

@@ -51,7 +51,7 @@ from repro.core.probe import ProbeConfig
 from repro.kernels import ops as K
 from repro.kernels import ref as KR
 from repro.kernels.ttt_probe import ProbeStepOut as KernelOut
-from repro.kernels.ttt_probe import serving_probe_step
+from repro.kernels.ttt_probe import SpecProbeOut, serving_probe_step
 from repro.models import attention as A
 from repro.models.registry import Model
 from repro.serving.config import ServeConfig
@@ -286,6 +286,87 @@ def probe_update(pc: ProbeConfig, theta, st: ProbeState, hidden: jnp.ndarray,
                       out.n_scores, out.smoothed, out.stopped, out.stop_step)
 
 
+def probe_update_spec(pc: ProbeConfig, theta, st: ProbeState,
+                      hidden_seq: jnp.ndarray, accept: jnp.ndarray,
+                      lam: float, tokens_per_step: int, burn_in: int, *,
+                      probe_impl: str = "kernel",
+                      interpret: Optional[bool] = None
+                      ) -> Tuple[ProbeState, jnp.ndarray, jnp.ndarray]:
+    """Multi-token probe advance for speculative decode: consume the T
+    verify positions' hidden states of every slot, but let only the first
+    ``accept[i]`` tokens of slot i touch probe state — the chain is
+    bit-identical to ``accept[i]`` sequential ``probe_update`` calls.
+
+    The per-token pooling (hid_sum / tok_count accumulate-and-reset) is
+    unrolled here at trace time — T is the static ``spec_tokens`` knob —
+    producing the (B, T) feature/boundary sequences; the stateful
+    score-then-update / smoothing / threshold chain then runs in ONE fused
+    masked kernel (``serving_probe_spec_step``), dispatched under the same
+    any-boundary ``lax.cond`` gate as the one-token path.  Tokens past an
+    IN-CHAIN stop are suppressed inside the kernel by its carried stopped
+    flag (the scheduler truncates collection at the stop and releases the
+    slot, so the pooled accumulators' post-stop drift is unobservable).
+
+    Returns (ProbeState, smoothed_seq (B, T), n_seq (B, T)) — per-token
+    smoothed score and cumulative score count for multi-score collection:
+    token t of slot i emitted a score iff n_seq[i, t] exceeds the count
+    before it.
+    """
+    t_total = hidden_seq.shape[1]
+    eta = P.inner_lr(pc, theta)
+    lam_ = jnp.asarray(lam, jnp.float32)
+    accept = jnp.asarray(accept, jnp.int32)
+    hid_sum, tok_count = st.hid_sum, st.tok_count
+    zqs, zks, bnds = [], [], []
+    for t in range(t_total):
+        m = t < accept
+        hid_sum = jnp.where(m[:, None],
+                            hid_sum + hidden_seq[:, t].astype(jnp.float32),
+                            hid_sum)
+        tok_count = jnp.where(m, tok_count + 1, tok_count)
+        bnd = m & (tok_count >= tokens_per_step)
+        phi = hid_sum / jnp.maximum(tok_count, 1)[:, None]
+        zq, zk = P.features(pc, theta, phi)
+        zqs.append(zq)
+        zks.append(zk)
+        bnds.append(bnd)
+        hid_sum = jnp.where(bnd[:, None], 0.0, hid_sum)
+        tok_count = jnp.where(bnd, 0, tok_count)
+    zq = jnp.stack(zqs, axis=1)
+    zk = jnp.stack(zks, axis=1)
+    boundary = jnp.stack(bnds, axis=1)
+    if probe_impl == "kernel":
+        interp = K.default_interpret() if interpret is None else interpret
+
+        def _probe(_):
+            return K.serving_probe_spec_step(
+                zq, zk, boundary, accept, st.W, st.b, st.ring, st.n_scores,
+                st.stopped, st.stop_step, eta, lam_, burn_in=int(burn_in),
+                interpret=interp)
+
+        def _skip(_):
+            rep = lambda a: jnp.repeat(a[:, None], t_total, axis=1)
+            return SpecProbeOut(s=rep(jnp.zeros_like(st.b)),
+                                smoothed_seq=rep(st.smoothed),
+                                n_seq=rep(st.n_scores), W=st.W, b=st.b,
+                                ring=st.ring, n_scores=st.n_scores,
+                                smoothed=st.smoothed, stopped=st.stopped,
+                                stop_step=st.stop_step)
+
+        out = jax.lax.cond(jnp.any(boundary), _probe, _skip, None)
+    elif probe_impl == "ref":
+        out = KR.serving_probe_spec_step_ref(
+            zq, zk, boundary, accept, st.W, st.b, st.ring, st.n_scores,
+            st.stopped, st.stop_step, eta, lam_, burn_in=int(burn_in))
+    else:
+        raise ValueError(f"unknown probe_impl {probe_impl!r} "
+                         "(expected 'kernel' or 'ref')")
+    new_st = ProbeState(out.W, out.b, hid_sum, tok_count, out.ring,
+                        out.n_scores, out.smoothed, out.stopped,
+                        out.stop_step)
+    return new_st, out.smoothed_seq, out.n_seq
+
+
 # The unified ServeConfig (repro.serving.config) replaced the step-level
 # dataclass that lived here through PR 7; re-exported so every existing
 # ``from repro.serving.engine import ServeConfig`` keeps working.  The
@@ -298,7 +379,8 @@ def make_serve_step(model: Model, pc: ProbeConfig, cfg: ServeConfig,
                     probe_impl: str = "kernel",
                     interpret: Optional[bool] = None,
                     chunk_tokens: int = 0,
-                    mask_stopped_writes: bool = False):
+                    mask_stopped_writes: bool = False,
+                    spec_tokens: int = 0):
     """Build the fused decode+ORCA step:
     (params, theta, token, cache, pos, probe_state) ->
     (next_token, cache, probe_state).
@@ -322,7 +404,24 @@ def make_serve_step(model: Model, pc: ProbeConfig, cfg: ServeConfig,
     the boundary gate already keeps the probe kernel off them) and, with
     ``mask_stopped_writes``, their dense no-op K/V write is dropped so it
     can never clobber chunk-written prompt K/V (paged parked rows already
-    write the NULL page)."""
+    write the NULL page).
+
+    With ``spec_tokens = k > 0`` the decode half becomes DRAFT-VERIFY
+    speculative decode riding the same packed-chunk machinery: the step
+    takes a trailing ``spec`` descriptor — ``{"lens": (n_slots,)}``, each
+    RUNNING slot's verify-block length in [0, k], drawn by the scheduler
+    from the same token budget the prefill share uses — drafts k-1
+    continuations per slot via ``model.draft``, runs one packed verify
+    chunk (``model.verify_packed`` — ``prefill_packed`` with the LM head
+    kept) whose segment r is slot r's [current token, drafts...] at
+    positions pos..pos+len-1, computes each slot's accepted prefix, and
+    advances that slot by ``gen`` in [1, len] committed tokens per step
+    (0 for parked rows).  Rejected K/V writes need no undo: validity masks
+    expose only [0, pos) and the next verify block overwrites them before
+    ``pos`` reaches them.  The probe consumes ONLY accepted tokens through
+    ``probe_update_spec``.  ``lens`` is traced data, so every draft-length
+    mix shares the ONE executable; the step returns a 4th element —
+    {"gen", "seq", "seq_scores", "seq_n"} for multi-token collection."""
     mcfg = model.cfg
 
     def decode_probe(params, theta, token, cache, pos, st: ProbeState):
@@ -339,6 +438,92 @@ def make_serve_step(model: Model, pc: ProbeConfig, cfg: ServeConfig,
         # token; only already-frozen sequences repeat (no-op compute slot)
         nxt = jnp.where(prev_stopped, token, nxt)
         return nxt, cache, st
+
+    if spec_tokens:
+        assert spec_tokens >= 2, "spec_tokens < 2 is one-token decode"
+        assert model.supports_spec, \
+            f"{mcfg.name}: no speculative decode for this family"
+        assert window is None, "speculative decode has no SWA ring buffer"
+        kk = int(spec_tokens)
+
+        def spec_verify(params, theta, token, cache, pos,
+                        st: ProbeState, lens):
+            bsz = token.shape[0]
+            c = bsz * kk
+            # parked rows contribute nothing: no writes (the one-token
+            # path's mask_stopped_writes contract), no probe, no advance
+            lens = jnp.where(st.stopped, 0, jnp.asarray(lens, jnp.int32))
+            pos = jnp.asarray(pos, jnp.int32)
+            drafts = model.draft(mcfg, params, cache, token, pos, kk)
+            blk = jnp.concatenate(
+                [token[:, None], jnp.asarray(drafts, jnp.int32)], axis=1)
+            # segments laid out contiguously in slot order (the packed-chunk
+            # layout contract); slots past their length scatter to the
+            # dropped tail and tail tokens keep seg 0, invalid by length
+            offs = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                    jnp.cumsum(lens)[:-1]])
+            jj = jnp.arange(kk, dtype=jnp.int32)[None, :]
+            dst = jnp.where(jj < lens[:, None], offs[:, None] + jj, c)
+            flat = dst.reshape(-1)
+            toks_c = jnp.zeros((c,), jnp.int32).at[flat].set(
+                blk.reshape(-1), mode="drop")
+            seg_src = jnp.broadcast_to(
+                jnp.arange(bsz, dtype=jnp.int32)[:, None], (bsz, kk))
+            seg_c = jnp.zeros((c,), jnp.int32).at[flat].set(
+                seg_src.reshape(-1), mode="drop")
+            rows_arg = cache["block_tables"] if "block_tables" in cache \
+                else None
+            logits, hidden, cache = model.verify_packed(
+                mcfg, params, toks_c, cache, seg_c,
+                jnp.arange(bsz, dtype=jnp.int32), pos, lens, rows_arg)
+            out_c = jnp.argmax(logits[:, :mcfg.vocab_size],
+                               axis=-1).astype(jnp.int32)
+            gdx = jnp.clip(dst, 0, c - 1)
+            out_blk = out_c[gdx]                          # (B, kk)
+            hid_blk = hidden[gdx]                         # (B, kk, d)
+            # accepted prefix: draft j+1 survives iff it equals the model's
+            # output after consuming draft j; the first miss is replaced by
+            # the model's own token, so gen = accepted drafts + 1
+            ok = (blk[:, 1:] == out_blk[:, :-1]) \
+                & (jj[:, :kk - 1] + 1 < lens[:, None])
+            n_acc = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1), axis=1)
+            g = jnp.where(lens > 0, n_acc + 1, 0)
+            st, sm_seq, n_seq = probe_update_spec(
+                pc, theta, st, hid_blk, g, cfg.lam, cfg.tokens_per_step,
+                cfg.burn_in, probe_impl=probe_impl, interpret=interpret)
+            nxt = jnp.where(
+                g > 0,
+                jnp.take_along_axis(
+                    out_blk, jnp.clip(g - 1, 0, kk - 1)[:, None],
+                    axis=1)[:, 0],
+                token)
+            extras = {"gen": g, "seq": out_blk, "seq_scores": sm_seq,
+                      "seq_n": n_seq}
+            return nxt, cache, st, extras
+
+        if not chunk_tokens:
+            def spec_step(params, theta, token, cache, pos, st: ProbeState,
+                          spec: Dict[str, jnp.ndarray]):
+                return spec_verify(params, theta, token, cache, pos, st,
+                                   spec["lens"])
+            return spec_step
+
+        def unified_spec_step(params, theta, token, cache, pos,
+                              st: ProbeState, chunk: Dict[str, jnp.ndarray],
+                              spec: Dict[str, jnp.ndarray]):
+            def run_chunk(cache):
+                return model.prefill_packed(mcfg, params, chunk["tokens"],
+                                            cache, chunk["seg"],
+                                            chunk["slots"], chunk["starts"],
+                                            chunk["lengths"],
+                                            chunk.get("rows"))
+
+            cache = jax.lax.cond(chunk["active"], run_chunk,
+                                 lambda cch: cch, cache)
+            return spec_verify(params, theta, token, cache, pos, st,
+                               spec["lens"])
+
+        return unified_spec_step
 
     if not chunk_tokens:
         def serve_step(params, theta, token, cache, pos, st: ProbeState):
@@ -536,12 +721,20 @@ def extract_trajectories(model: Model, params, batch, prompt_len: int,
 
 
 class SlotStepView(NamedTuple):
-    """Host-visible per-slot observation after one fused engine step."""
+    """Host-visible per-slot observation after one fused engine step.
+
+    The four trailing fields are ONLY populated by speculative steps
+    (``spec_tokens > 0``); one-token steps leave them None, keeping the
+    non-spec view byte-identical to before."""
     tokens: np.ndarray      # (n_slots,) token decoded this step
     stopped: np.ndarray     # (n_slots,) bool — ORCA threshold crossed
     stop_step: np.ndarray   # (n_slots,) reasoning step at stop (-1 active)
     n_scores: np.ndarray    # (n_slots,) scores emitted since admission
     smoothed: np.ndarray    # (n_slots,) current smoothed score
+    gen: Optional[np.ndarray] = None         # (n_slots,) tokens committed
+    seq: Optional[np.ndarray] = None         # (n_slots, k) committed tokens
+    seq_scores: Optional[np.ndarray] = None  # (n_slots, k) smoothed / token
+    seq_n: Optional[np.ndarray] = None       # (n_slots, k) n_scores / token
 
 
 def prefix_len(mcfg, batch_one: Dict[str, jnp.ndarray],
@@ -620,7 +813,7 @@ class ContinuousServingEngine:
                  interpret: Optional[bool] = None, paged: bool = False,
                  block_size: int = 16, num_blocks: Optional[int] = None,
                  chunk_tokens: Optional[int] = None,
-                 pack_max: int = 4):
+                 pack_max: int = 4, spec_tokens: Optional[int] = None):
         self.model, self.params, self.pc, self.theta, self.cfg = \
             model, params, pc, theta, cfg
         mcfg = model.cfg
@@ -650,6 +843,13 @@ class ContinuousServingEngine:
             assert window is None, "chunked prefill has no SWA ring buffer"
             assert model.supports_chunked, \
                 f"{mcfg.name}: no chunked prefill for this family"
+        # speculative draft-verify decode: every RUNNING slot may ride the
+        # packed verify chunk with up to spec_tokens tokens per step; lens
+        # are traced per-step data, so ONE executable covers every mix
+        self.spec_tokens = int(spec_tokens or 0)
+        if self.spec_tokens:
+            assert model.supports_spec, \
+                f"{mcfg.name}: no speculative decode for this family"
         st = init_probe_state(pc, theta, n_slots, mcfg.d_model)
         self.st = st._replace(stopped=jnp.ones((n_slots,), bool))
         self.token = jnp.zeros((n_slots,), jnp.int32)
@@ -658,8 +858,11 @@ class ContinuousServingEngine:
             make_serve_step(model, pc, cfg, window=window,
                             probe_impl=probe_impl, interpret=interpret,
                             chunk_tokens=self.chunk_tokens,
-                            mask_stopped_writes=bool(self.chunk_tokens)),
+                            mask_stopped_writes=bool(self.chunk_tokens),
+                            spec_tokens=self.spec_tokens),
             donate_argnums=_SERVE_STEP_DONATE)
+        if self.spec_tokens:
+            self._null_spec = {"lens": jnp.zeros((n_slots,), jnp.int32)}
         if self.chunk_tokens:
             r = self.max_pack
             null = {"tokens": jnp.zeros((self.chunk_tokens,), jnp.int32),
@@ -966,23 +1169,44 @@ class ContinuousServingEngine:
         return out
 
     # ------------------------------------------------------------------
-    def step(self, chunk: Optional[ChunkWork] = None) -> SlotStepView:
+    def step(self, chunk: Optional[ChunkWork] = None,
+             spec_lens=None) -> SlotStepView:
         """One fused step for every slot (vector pos): decode + probe — and,
         in chunked mode, up to ``chunk_tokens`` prompt tokens of up to
         ``max_pack`` mid-prefill requests packed into ``chunk`` (None =
         decode-only, the same executable runs with an inactive chunk);
-        several residents may finish their prefill in one step."""
+        several residents may finish their prefill in one step.
+
+        A spec engine additionally takes ``spec_lens`` — per-slot verify
+        lengths in [0, spec_tokens] (None = 0 everywhere) — and advances
+        each slot's ``pos`` by its ACCEPTED length instead of 1; the view's
+        spec fields carry the committed multi-token sequences."""
         pos = jnp.asarray(self.pos, jnp.int32)
+        args = [self.params, self.theta, self.token, self.state, pos,
+                self.st]
         if self.chunk_tokens:
-            dev = (self._null_chunk if chunk is None
-                   else self._chunk_to_device(chunk))
-            self.token, self.state, self.st = self._step_fn(
-                self.params, self.theta, self.token, self.state, pos,
-                self.st, dev)
+            args.append(self._null_chunk if chunk is None
+                        else self._chunk_to_device(chunk))
         else:
             assert chunk is None, "engine built without chunk_tokens"
-            self.token, self.state, self.st = self._step_fn(
-                self.params, self.theta, self.token, self.state, pos, self.st)
+        if self.spec_tokens:
+            spec = (self._null_spec if spec_lens is None
+                    else {"lens": jnp.asarray(np.asarray(spec_lens,
+                                                         np.int32))})
+            self.token, self.state, self.st, extras = self._step_fn(
+                *args, spec)
+            gen = np.asarray(extras["gen"])
+            self.pos = self.pos + gen
+            return SlotStepView(tokens=np.asarray(self.token),
+                                stopped=np.asarray(self.st.stopped),
+                                stop_step=np.asarray(self.st.stop_step),
+                                n_scores=np.asarray(self.st.n_scores),
+                                smoothed=np.asarray(self.st.smoothed),
+                                gen=gen, seq=np.asarray(extras["seq"]),
+                                seq_scores=np.asarray(extras["seq_scores"]),
+                                seq_n=np.asarray(extras["seq_n"]))
+        assert spec_lens is None, "engine built without spec_tokens"
+        self.token, self.state, self.st = self._step_fn(*args)
         self.pos = self.pos + 1
         return SlotStepView(tokens=np.asarray(self.token),
                             stopped=np.asarray(self.st.stopped),

@@ -124,11 +124,52 @@ def replay_model(phis: np.ndarray, *, prompt_len: int = 1,
     def init_decode_state(batch: int, cache_len: int, abstract: bool = False):
         return {"traj": jnp.zeros((1, batch), jnp.int32)}
 
+    def draft(cfg, params, state, token, pos, k):
+        # the replay model drafts from its own trajectory: every decode
+        # step emits answers[traj] (or token 0 without answers), so
+        # proposing exactly that token makes the verifier accept the
+        # whole block — the 100%-acceptance upper bound the speculative
+        # throughput benchmark measures against
+        traj = state["traj"][0]                           # (B,)
+        if "answers" in params:
+            tok = params["answers"][traj].astype(jnp.int32)
+        else:
+            tok = jnp.zeros_like(traj)
+        return jnp.broadcast_to(tok[:, None], (traj.shape[0], k - 1))
+
+    def verify_packed(cfg, params, tokens, state, seg, slots, starts,
+                      lengths, block_rows=None):
+        # packed verify: position c is token j of segment seg[c] at
+        # sequence position starts[seg[c]] + j — the SAME bank lookup
+        # (and one-hot logits) as decode_step at that position, so the
+        # spec path is bit-identical to one-token replay decode
+        traj_all = state["traj"][0]                       # (B,)
+        seg = jnp.asarray(seg, jnp.int32)
+        lengths = jnp.asarray(lengths, jnp.int32)
+        starts = jnp.asarray(starts, jnp.int32)
+        offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                   jnp.cumsum(lengths)[:-1]])
+        row = jnp.asarray(slots, jnp.int32)[seg]          # batch row per pos
+        traj = traj_all[row]                              # (C,)
+        c = tokens.shape[0]
+        j = jnp.arange(c, dtype=jnp.int32) - offsets[seg]
+        step = (starts[seg] + j - cfg.prompt_len) // cfg.tokens_per_step
+        bank = params["phis"]                             # (N, T, d)
+        hidden = bank[traj, jnp.clip(step, 0, bank.shape[1] - 1)]
+        if "answers" in params:
+            logits = jax.nn.one_hot(params["answers"][traj],
+                                    cfg.vocab_size, dtype=jnp.float32)
+        else:
+            logits = jnp.zeros((c, cfg.vocab_size), jnp.float32)
+        return logits, hidden, state
+
     return Model(cfg=cfg, decls=None, forward=None, prefill=prefill,
                  decode_step=decode_step, init_decode_state=init_decode_state,
                  decode_geometry=lambda shape: (shape.seq_len, None),
                  prefill_chunk=prefill_chunk,
-                 prefill_packed=prefill_packed)
+                 prefill_packed=prefill_packed,
+                 verify_packed=verify_packed,
+                 draft=draft)
 
 
 def replay_params(phis: np.ndarray, answers: Optional[np.ndarray] = None):

@@ -112,6 +112,14 @@ class Request:
     n_preempted: int = 0                  # times spilled to host RAM
     restored_step: int = -1               # engine step of the last restore
 
+    # speculative decode (owned by the scheduler; stay 0/empty without it)
+    spec_proposed: int = 0                # draft tokens proposed (excl. the
+    #                                       current token of each block)
+    spec_accepted: int = 0                # draft tokens the verifier kept
+    accepted_lens: List[int] = dataclasses.field(default_factory=list)
+    #                                       per-step accepted length g (incl.
+    #                                       the current token; g in [0, k])
+
     @property
     def done(self) -> bool:
         return self.state in (RequestState.STOPPED, RequestState.FINISHED,
@@ -199,10 +207,23 @@ class FleetMetrics:
     # fleet serving (multi-host tentpole): n_slots above is PER HOST
     n_hosts: int = 1
     routed_affine: int = 0       # placements that followed prefix affinity
+    # speculative decode (draft-verify tentpole): acceptance accounting
+    # over non-CANCELLED requests (consensus kills say nothing about the
+    # drafter, same exclusion as the TTFT tails)
+    spec_tokens_proposed: int = 0   # draft tokens proposed fleet-wide
+    spec_tokens_accepted: int = 0   # draft tokens the verifier kept
+    acceptance_rate: float = 0.0    # accepted / proposed (0 when disabled)
+    accepted_len_p50: float = 0.0   # per-step accepted length percentiles
+    accepted_len_p99: float = 0.0   # (incl. the block's current token)
 
     def row(self) -> Dict[str, float]:
         return {
             **self.per_class,
+            "spec_tokens_proposed": self.spec_tokens_proposed,
+            "spec_tokens_accepted": self.spec_tokens_accepted,
+            "acceptance_rate": self.acceptance_rate,
+            "accepted_len_p50": self.accepted_len_p50,
+            "accepted_len_p99": self.accepted_len_p99,
             "n_hosts": self.n_hosts,
             "routed_affine": self.routed_affine,
             "samples_cancelled": self.samples_cancelled,

@@ -55,7 +55,8 @@ from repro.serving.kv_pool import prompt_key
 from repro.serving.policy import (HostPressure, PlacementPolicy,
                                   SchedulingPolicy, make_placement,
                                   make_policy)
-from repro.serving.request import (FleetMetrics, Request, latency_stats)
+from repro.serving.request import (FleetMetrics, Request, RequestState,
+                                   latency_stats)
 from repro.serving.scheduler import OrcaScheduler, _pick, _UNSET
 
 
@@ -317,7 +318,22 @@ class FleetRouter:
         groups = [g for g in self.groups if g.size >= 2]
         tps, dmn = self.cfg.tokens_per_step, self.cfg.max_new_tokens
         g_sav = [g.savings(tps, dmn) for g in groups]
+        # speculative acceptance over the request UNION (counters sum via
+        # the requests themselves; percentiles recompute, never averaged)
+        live = [r for r in requests
+                if r.state is not RequestState.CANCELLED]
+        sp = sum(r.spec_proposed for r in live)
+        sa = sum(r.spec_accepted for r in live)
+        alens = np.asarray([g for r in live for g in r.accepted_lens],
+                           np.float64)
         return FleetMetrics(
+            spec_tokens_proposed=int(sp),
+            spec_tokens_accepted=int(sa),
+            acceptance_rate=(sa / sp if sp else 0.0),
+            accepted_len_p50=(float(np.percentile(alens, 50))
+                              if alens.size else 0.0),
+            accepted_len_p99=(float(np.percentile(alens, 99))
+                              if alens.size else 0.0),
             n_requests=n, n_slots=self.n_slots, engine_steps=steps,
             active_slot_steps=active, wall_time_s=wall,
             requests_per_s=n / wall, tokens_per_s=total_tokens / wall,

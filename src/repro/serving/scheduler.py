@@ -161,12 +161,14 @@ class OrcaScheduler:
                  pack_chunks: bool = _UNSET,
                  pack_max: int = _UNSET,
                  consensus: Union[GroupCalibrator, float, None] = _UNSET,
-                 preemption: bool = _UNSET):
+                 preemption: bool = _UNSET,
+                 spec_tokens: Optional[int] = _UNSET):
         self.model, self.params, self.pc, self.theta, self.cfg = \
             model, params, pc, theta, cfg
         n_slots = int(_pick(n_slots, cfg.n_slots))
         chunk_tokens = _pick(chunk_tokens, cfg.chunk_tokens)
         token_budget = _pick(token_budget, cfg.token_budget)
+        spec_tokens = _pick(spec_tokens, cfg.spec_tokens)
         policy = _pick(policy, cfg.policy)
         consensus = _pick(consensus, cfg.consensus)
         pack_chunks = _pick(pack_chunks, cfg.pack_chunks)
@@ -199,9 +201,23 @@ class OrcaScheduler:
                 "supports_chunked=True to silence this",
                 RuntimeWarning, stacklevel=2)
             self.chunk_tokens = None      # family without prefill_chunk
+        # speculative draft-verify decode: each RUNNING slot may ride the
+        # packed verify chunk with up to spec_tokens tokens per step, drawn
+        # from the same token budget the prefill share composes against
+        self.spec_tokens = int(spec_tokens) if spec_tokens else None
+        if self.spec_tokens is not None and not model.supports_spec:
+            warnings.warn(
+                f"spec_tokens={self.spec_tokens} ignored: model family "
+                f"{model.cfg.name!r} has no draft/verify speculative "
+                "decode — serving falls back to one-token decode; drop "
+                "spec_tokens or use a family with supports_spec=True to "
+                "silence this",
+                RuntimeWarning, stacklevel=2)
+            self.spec_tokens = None       # family without verify_packed
         if token_budget is not None:
             token_budget = int(token_budget)
-            floor = n_slots if self.chunk_tokens is not None else 1
+            floor = n_slots if (self.chunk_tokens is not None
+                                or self.spec_tokens is not None) else 1
             if token_budget < floor:
                 raise ValueError(
                     f"token_budget={token_budget} < n_slots={n_slots}: "
@@ -211,8 +227,12 @@ class OrcaScheduler:
                     f"to >= n_slots (default n_slots + chunk_tokens = "
                     f"{n_slots + (self.chunk_tokens or 0)}) or lowering "
                     "n_slots")
+        # default budget: one decode token per slot (spec_tokens of them
+        # in draft-verify mode) plus the prefill chunk; an EXPLICIT
+        # budget instead throttles spec extras before prefill share
         self.token_budget = (token_budget if token_budget
-                             else n_slots + (self.chunk_tokens or 0))
+                             else n_slots * (self.spec_tokens or 1)
+                             + (self.chunk_tokens or 0))
         # pluggable composer policy: admission order + per-step prefill
         # share (repro.serving.policy — "fifo", "priority", "ttft", or an
         # instance); packing is a composer property, not an executable one
@@ -348,7 +368,7 @@ class OrcaScheduler:
                     interpret=self.interpret, paged=device_paged,
                     block_size=self.block_size, num_blocks=num_blocks,
                     chunk_tokens=self.chunk_tokens,
-                    pack_max=self.pack_max)
+                    pack_max=self.pack_max, spec_tokens=self.spec_tokens)
         elif self._engine is None or self._engine.cache_len < cache_len:
             if self._engine is not None and self._resident():
                 self._refuse_rebuild("an engine cache_len",
@@ -357,7 +377,7 @@ class OrcaScheduler:
                 self.model, self.params, self.pc, self.theta, self.cfg,
                 self.n_slots, cache_len, probe_impl=self.probe_impl,
                 interpret=self.interpret, chunk_tokens=self.chunk_tokens,
-                pack_max=self.pack_max)
+                pack_max=self.pack_max, spec_tokens=self.spec_tokens)
         return self._engine
 
     # ------------------------------------------------------------------
@@ -840,17 +860,38 @@ class OrcaScheduler:
                     running[slot] = req
 
         # batch composer: every resident decode token rides this step;
-        # the POLICY sizes the prefill share of what's left of the
-        # token budget, and the share is PACKED across mid-prefill
-        # residents in admission order — the tail of one prompt and
-        # the head of the next fuse into one block-diagonal chunk
+        # in spec mode each RUNNING slot additionally claims up to
+        # spec_tokens - 1 extra verify tokens (greedy in slot order,
+        # capped by its remaining decode budget) from the SAME token
+        # budget; the POLICY then sizes the prefill share of what's
+        # left, and the share is PACKED across mid-prefill residents
+        # in admission order — the tail of one prompt and the head of
+        # the next fuse into one block-diagonal chunk
         # (pack_chunks=False: one request per chunk, PR-4's composer)
+        spec_lens = None
+        spec_total = len(running)
+        if self.spec_tokens:
+            spec_lens = np.zeros((self.n_slots,), np.int32)
+            # no token budget -> spec extras are bounded by block length
+            # alone (n_slots * (spec_tokens - 1) can never exceed this cap)
+            budget_left = (self.token_budget - len(running)
+                           if self.token_budget is not None
+                           else self.n_slots * self.spec_tokens)
+            for slot in sorted(running):
+                req = running[slot]
+                max_new = req.max_new_tokens or self.cfg.max_new_tokens
+                remaining = max_new - len(req.tokens)
+                extra = max(min(self.spec_tokens - 1, remaining - 1,
+                                budget_left), 0)
+                spec_lens[slot] = 1 + extra
+                budget_left -= extra
+            spec_total = int(spec_lens.sum())
         chunk = None
         if prefilling:
             share = self.policy.prefill_share(self._compose_view(
                 running, prefilling, waiting, eng))
             share = min(share, eng.chunk_tokens,
-                        self.token_budget - len(running))
+                        self.token_budget - spec_total)
             segs: List[ChunkSeg] = []
             residents = list(prefilling.items())
             if any(r.group_id is not None
@@ -885,9 +926,13 @@ class OrcaScheduler:
                 self._n_packed += int(len(segs) >= 2)
         self._peak_step_tokens = max(
             self._peak_step_tokens,
-            len(running) + (chunk.total_tokens if chunk else 0))
+            spec_total + (chunk.total_tokens if chunk else 0))
 
-        view = eng.step(chunk) if chunked else eng.step()
+        if self.spec_tokens:
+            view = (eng.step(chunk, spec_lens=spec_lens) if chunked
+                    else eng.step(spec_lens=spec_lens))
+        else:
+            view = eng.step(chunk) if chunked else eng.step()
         steps = self._steps = self._steps + 1
         self._active_slot_steps += len(running)
         now = time.perf_counter()
@@ -896,18 +941,45 @@ class OrcaScheduler:
             if req.first_token_step < 0:
                 req.first_token_step = steps
                 req.ttft_s = now - self._t0
-            req.tokens.append(int(view.tokens[slot]))
-            self._total_tokens += 1
-            n_scores = int(view.n_scores[slot])
-            if n_scores > len(req.scores):
-                req.scores.append(float(view.smoothed[slot]))
-                # the vote at this probe boundary: the answer hash is
-                # the token just decoded (the step's answer proxy,
-                # same convention as launch.serve's trajectory
-                # extraction) — recorded alongside the score so a
-                # group's consensus sees matched (confidence, answer)
-                # pairs
-                req.answers.append(int(view.tokens[slot]))
+            if self.spec_tokens:
+                # speculative block: the slot proposed spec_lens[slot]
+                # tokens and the verifier accepted a prefix of
+                # view.gen[slot]; append accepted tokens in order,
+                # collecting each probe boundary's (score, answer)
+                # vote as it lands, and TRUNCATE at the stop boundary
+                # — tokens past the stop were never "emitted" (the
+                # one-token engine would have evicted the slot there)
+                lp = int(spec_lens[slot])
+                g = int(view.gen[slot])
+                req.spec_proposed += max(lp - 1, 0)
+                req.spec_accepted += max(g - 1, 0)
+                if lp > 0:
+                    req.accepted_lens.append(g)
+                stopped_now = bool(view.stopped[slot])
+                stop_at = int(view.stop_step[slot]) if stopped_now else -1
+                for j in range(g):
+                    req.tokens.append(int(view.seq[slot, j]))
+                    self._total_tokens += 1
+                    nsj = int(view.seq_n[slot, j])
+                    if nsj > len(req.scores):
+                        req.scores.append(float(view.seq_scores[slot, j]))
+                        req.answers.append(int(view.seq[slot, j]))
+                    if stopped_now and nsj == stop_at:
+                        break
+                n_scores = int(view.n_scores[slot])
+            else:
+                req.tokens.append(int(view.tokens[slot]))
+                self._total_tokens += 1
+                n_scores = int(view.n_scores[slot])
+                if n_scores > len(req.scores):
+                    req.scores.append(float(view.smoothed[slot]))
+                    # the vote at this probe boundary: the answer hash
+                    # is the token just decoded (the step's answer
+                    # proxy, same convention as launch.serve's
+                    # trajectory extraction) — recorded alongside the
+                    # score so a group's consensus sees matched
+                    # (confidence, answer) pairs
+                    req.answers.append(int(view.tokens[slot]))
             max_new = req.max_new_tokens or self.cfg.max_new_tokens
             if bool(view.stopped[slot]):
                 # ORCA stop: evict NOW — the slot is free next step
@@ -1088,7 +1160,22 @@ class OrcaScheduler:
         # old per-group mean fraction survives as group_savings_mean)
         g_unspent = [max(g.budget_steps(tps, dmn) - g.steps_spent(), 0)
                      for g in real_groups]
+        # speculative-decode acceptance: CANCELLED siblings excluded —
+        # like the TTFT percentiles, a consensus kill mid-verify says
+        # nothing about the drafter's quality
+        live = [r for r in requests if r.state is not RequestState.CANCELLED]
+        sp = sum(r.spec_proposed for r in live)
+        sa = sum(r.spec_accepted for r in live)
+        alens = np.asarray([g for r in live for g in r.accepted_lens],
+                           np.float64)
         return FleetMetrics(
+            spec_tokens_proposed=int(sp),
+            spec_tokens_accepted=int(sa),
+            acceptance_rate=(sa / sp if sp else 0.0),
+            accepted_len_p50=(float(np.percentile(alens, 50))
+                              if alens.size else 0.0),
+            accepted_len_p99=(float(np.percentile(alens, 99))
+                              if alens.size else 0.0),
             samples_cancelled=n_cancelled,
             consensus_groups=len(fired),
             consensus_steps=(float(np.mean([g.consensus_index
