@@ -76,6 +76,27 @@ be IDENTICAL across paths (asserted):
     multiplies by the accepted length per step (the
     ``spec_vs_one_token`` gate metric, >= 1.3x enforced).
 
+  * TREE speculative decode vs LINEAR spec vs one-token decode on a
+    PARTIAL-ACCEPTANCE replay fleet at EQUAL KV HBM (same engine shape
+    and cache for all three; the replay drafter corrupts each drafted
+    token with ``--draft-wrong-rate``): where a linear draft chain dies
+    at its first wrong token, the tree verifies W independent chains
+    under per-token ancestor masks in the SAME fused step and commits
+    the LONGEST accepted root-to-leaf path — expected accepted length
+    per step goes from sum_i p^i to E[max over W chains], which is the
+    whole point of multi-draft verification.  Stop decisions stay
+    byte-identical across all three (asserted); the
+    ``tree_vs_linear_spec`` gate enforces >= 1.15x FEWER SEQUENTIAL
+    ENGINE STEPS than the PR-9 linear path at equal committed tokens —
+    the deterministic quantity tree verification shrinks.  Wall-clock
+    decode tokens/s is printed/recorded with a tolerant floor only: on
+    this single-core CPU build box the tree's larger packed chunk
+    (1+W*D verify nodes per slot vs k) costs real compute per step,
+    muting the wall gain to ~1.1-1.2x, whereas bandwidth-bound decode
+    on real accelerators pays ~nothing for the extra in-flight tokens
+    and realizes the step ratio (same box caveat as the fleet
+    requests/s row).
+
 ``--check`` is the CI perf-regression gate: re-run, then compare against the
 committed ``results/serving_throughput.json`` baseline — stop decisions must
 be byte-identical and every tracked metric must stay within the tolerance
@@ -167,6 +188,12 @@ def main(argv=None) -> int:
     ap.add_argument("--spec-steps", type=int, default=64,
                     help="replay trajectory length (decode-bound: every "
                          "token is one reasoning step)")
+    # partial-acceptance workload for the tree-vs-linear-spec row triple
+    ap.add_argument("--spec-tree", default="3.3",
+                    help="tree shape 'W.D' for the tree-spec row")
+    ap.add_argument("--draft-wrong-rate", type=float, default=0.45,
+                    help="per-token draft corruption rate of the "
+                         "partial-acceptance replay drafter")
     ap.add_argument("--check", action="store_true",
                     help="CI gate: compare against the committed baseline "
                          "instead of overwriting it; nonzero exit on "
@@ -623,6 +650,92 @@ def main(argv=None) -> int:
           f"vs {fleet_ot.tokens_per_s:.1f}), engine steps "
           f"{fleet_ot.engine_steps} -> {fleet_sp.engine_steps}")
 
+    # --- tree vs linear spec vs one-token, PARTIAL acceptance ------------
+    # same replay bank, but every drafted token is corrupted with
+    # --draft-wrong-rate: the linear chain dies at its first wrong token,
+    # the tree's W chains fail independently and the verifier commits the
+    # longest surviving root-to-leaf path.  EQUAL KV HBM by construction
+    # (replay carries no KV; engine shape identical across the triple)
+    wrong = args.draft_wrong_rate
+    # the ratio gate needs walls well clear of scheduler jitter: tile the
+    # bank so each timed pass serves 4x the trajectories (~200 ms walls
+    # instead of ~50 ms; stop decisions stay per-trajectory deterministic
+    # so the byte-identity asserts below are unchanged in meaning), and
+    # take extra best-of reps on top — both knobs attack the same
+    # single-core noise that once flipped this ratio run to run
+    pa_tile = 4
+    pa_bank = np.tile(s_bank, (pa_tile, 1, 1))
+    pa_model = replay_model(pa_bank, draft_wrong_rate=wrong)
+    pa_params = replay_params(pa_bank)
+
+    def pa_requests():
+        return replay_requests([s_steps] * (s_traj * pa_tile))
+
+    pa_reps = max(args.reps, 8)
+    pt_sched = OrcaScheduler(pa_model, pa_params, s_pc, s_theta, s_scfg,
+                             n_slots=4)
+    pt_sched.run(pa_requests())
+    done_pt, fleet_pt = best_of(lambda: pt_sched.run(pa_requests()),
+                                n=pa_reps)
+    pl_sched = OrcaScheduler(pa_model, pa_params, s_pc, s_theta, s_scfg,
+                             n_slots=4, spec_tokens=args.spec_tokens)
+    pl_sched.run(pa_requests())
+    done_pl, fleet_pl = best_of(lambda: pl_sched.run(pa_requests()),
+                                n=pa_reps)
+    tr_sched = OrcaScheduler(pa_model, pa_params, s_pc, s_theta, s_scfg,
+                             n_slots=4, spec_tree=args.spec_tree)
+    tr_sched.run(pa_requests())
+    done_tr, fleet_tr = best_of(lambda: tr_sched.run(pa_requests()),
+                                n=pa_reps)
+    stop_pt = np.array([r.stop_step for r in done_pt])
+    stop_pl = np.array([r.stop_step for r in done_pl])
+    stop_tr = np.array([r.stop_step for r in done_tr])
+    # wrong drafts are the verifier's problem, never the user's: the stop
+    # decisions survive ANY draft quality, linear or tree
+    assert (stop_pt == stop_pl).all(), \
+        f"partial-accept linear spec changed stops: {stop_pt} vs {stop_pl}"
+    assert (stop_pt == stop_tr).all(), \
+        f"tree spec changed stops: {stop_pt} vs {stop_tr}"
+    for r_pt, r_tr in zip(done_pt, done_tr):
+        assert r_pt.tokens == r_tr.tokens, "tree spec changed tokens"
+    assert 0 < fleet_pl.acceptance_rate < 1.0, \
+        f"linear acceptance {fleet_pl.acceptance_rate} not partial"
+    assert fleet_tr.tree_nodes_proposed > 0
+    assert fleet_tr.engine_steps < fleet_pl.engine_steps < \
+        fleet_pt.engine_steps
+    assert tr_sched._engine.compile_counts()["step"] == 1
+    # the gated ratio is SEQUENTIAL ENGINE STEPS at equal committed
+    # tokens — the quantity tree verification actually shrinks, and fully
+    # deterministic (seeded drafts, seeded wrongness).  Wall-clock
+    # tokens/s is printed and recorded too, but on a single-core CPU the
+    # tree's larger per-step packed chunk (1+W*D nodes/slot vs k)
+    # costs real compute per step and mutes the wall gain to ~1.1-1.2x;
+    # bandwidth-bound decode on real accelerators realizes the step
+    # ratio, so the wall number only gets a tolerant informational floor
+    # (same box caveat as the fleet requests/s row above)
+    tree_ratio = fleet_pl.engine_steps / max(fleet_tr.engine_steps, 1)
+    assert tree_ratio >= 1.15, \
+        f"tree spec only {tree_ratio:.2f}x fewer sequential steps than " \
+        f"linear (need >= 1.15x)"
+    # no wall-clock direction assert here: on a single serial core the
+    # per-step compute grows with the packed chunk, so tree-vs-one-token
+    # wall ordering is genuinely load-dependent — the deterministic step
+    # asserts above are the contract, the walls are reporting
+    tree_wall_ratio = (fleet_tr.tokens_per_s
+                       / max(fleet_pl.tokens_per_s, 1e-9))
+    print(f"[throughput] tree == linear == one-token stop decisions at "
+          f"wrong-rate {wrong} ({stop_tr.tolist()}); accepted path p50/p99 "
+          f"{fleet_tr.tree_path_accepted_p50:.1f}/"
+          f"{fleet_tr.tree_path_accepted_p99:.1f} over "
+          f"{fleet_tr.tree_nodes_proposed} proposed nodes")
+    print(f"[throughput] tree spec ({args.spec_tree}) vs linear "
+          f"(k={args.spec_tokens}): {tree_ratio:.2f}x fewer sequential "
+          f"steps ({fleet_pt.engine_steps} -> {fleet_pl.engine_steps} -> "
+          f"{fleet_tr.engine_steps}), wall {tree_wall_ratio:.2f}x decode "
+          f"tokens/s ({fleet_tr.tokens_per_s:.1f} vs "
+          f"{fleet_pl.tokens_per_s:.1f}; single-core mutes this, see "
+          f"docstring)")
+
     util_b = base.active_slot_steps / max(base.total_slot_steps, 1)
     steps_s = fleet.engine_steps / max(fleet.wall_time_s, 1e-9)
     steps_s_ref = fleet_ref.engine_steps / max(fleet_ref.wall_time_s, 1e-9)
@@ -664,6 +777,12 @@ def main(argv=None) -> int:
          "wall_s": fleet_ot.wall_time_s},
         {"mode": f"spec-decode-k{args.spec_tokens}", **fleet_sp.row(),
          "wall_s": fleet_sp.wall_time_s},
+        {"mode": "one-token-partial", **fleet_pt.row(),
+         "wall_s": fleet_pt.wall_time_s},
+        {"mode": f"linear-spec-k{args.spec_tokens}-partial",
+         **fleet_pl.row(), "wall_s": fleet_pl.wall_time_s},
+        {"mode": f"tree-spec-{args.spec_tree}-partial", **fleet_tr.row(),
+         "wall_s": fleet_tr.wall_time_s},
     ]
     print_table("serving throughput (same lambda*, same stop decisions)",
                 rows, ("mode", "engine_steps", "requests_per_s",
@@ -685,7 +804,7 @@ def main(argv=None) -> int:
           f"{fleet_d.requests_per_s:.2f})")
 
     report = {
-        "schema": 8,
+        "schema": 9,
         "quick": QUICK,
         "rows": rows,
         # the gate requires these BYTE-IDENTICAL against the baseline: the
@@ -708,6 +827,9 @@ def main(argv=None) -> int:
             "fleet": stop_fl.tolist(),
             # spec == one-token (asserted above): one list covers both
             "spec_decode": stop_sp.tolist(),
+            # tree == linear == one-token at partial acceptance (asserted
+            # above): one list covers the whole triple
+            "tree_spec": stop_tr.tolist(),
         },
         # every metric must stay >= min_frac * baseline value; tolerances
         # live IN the baseline so re-baselining is an explicit commit
@@ -765,6 +887,21 @@ def main(argv=None) -> int:
                 "spec_vs_one_token":
                     {"value": spec_ratio,
                      "min_frac": min(0.95, 1.3 / spec_ratio)},
+                # tree speculative decode on the PARTIAL-acceptance replay
+                # fleet at equal KV HBM.  The gated ratio is SEQUENTIAL
+                # ENGINE STEPS (linear/tree at equal committed tokens) —
+                # deterministic, so the 1.15x floor cannot flake (min_frac
+                # scaled so baseline * min_frac == 1.15 whenever the
+                # committed ratio clears 1.15/0.95).  Wall tokens/s is
+                # informational with a tolerant floor: the single-core
+                # per-step cost of the bigger tree chunk mutes it here,
+                # while bandwidth-bound decode on real accelerators
+                # realizes the step ratio (see module docstring)
+                "tree_spec_tokens_per_s":
+                    {"value": fleet_tr.tokens_per_s, "min_frac": 0.3},
+                "tree_vs_linear_spec":
+                    {"value": tree_ratio,
+                     "min_frac": min(0.95, 1.15 / tree_ratio)},
             },
         },
     }

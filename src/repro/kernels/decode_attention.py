@@ -311,7 +311,13 @@ def paged_flash_packed_chunk(q, k_pages, v_pages, seg, seg_tables, seg_valid,
     segment's pass.  Cross-request cache isolation is block-diagonal by
     construction (a token can only ever see its own request's pages); the
     within-chunk block (keys not yet in pages) is the caller's merge under
-    the block-diagonal ``attention.packed_chunk_mask``.
+    ``attention.packed_chunk_mask`` — block-diagonal causal for chunked
+    prefill / linear speculative verify, or the per-token ANCESTOR mask
+    when the segment carries a speculative token tree.  The kernel itself
+    is ancestor-oblivious on purpose: every tree node shares its slot's
+    committed cache prefix [0, pos) verbatim (``seg_valid`` is per
+    segment, not per token), so the tree shape only ever reaches the
+    caller-side within-chunk merge, never the page loop.
 
     q (C, H, d); seg (C,) int32 in [0, R); seg_tables (R, nb) int32;
     seg_valid (R, nb * bs) bool; k/v_scale_pages (P, KV, bs, 1) or None.

@@ -171,6 +171,30 @@ def paged_prefill_chunk_ref(q, k_pages, v_pages, block_tables, valid,
             m.reshape(b, n_kv, g, c))
 
 
+def packed_chunk_mask_ref(seg, valid_tok, ancestors=None):
+    """Oracle for ``attention.packed_chunk_mask``: the within-chunk key
+    mask spelled as an explicit per-token root-path walk.  Without
+    ``ancestors`` this is block-diagonal causality; with ``ancestors``
+    (C,) parent pointers (roots self-pointing) token i may attend chunk
+    token j iff j is i or one of i's transitive ancestors — the tree
+    speculative verify mask.  Pure python/jnp loop, held against the
+    fori_loop closure in the model path."""
+    seg = jnp.asarray(seg, jnp.int32)
+    c = int(seg.shape[0])
+    i = jnp.arange(c)
+    base = ((seg[:, None] == seg[None, :])
+            & jnp.asarray(valid_tok, bool)[None, :])
+    if ancestors is None:
+        return base & (i[None, :] <= i[:, None])
+    anc = jnp.asarray(ancestors, jnp.int32)
+    reach = i[:, None] == i[None, :]
+    cur = i
+    for _ in range(c):
+        cur = anc[cur]
+        reach = reach | (cur[:, None] == i[None, :])
+    return base & reach
+
+
 def paged_packed_chunk_ref(q, k_pages, v_pages, seg, seg_tables, seg_valid,
                            k_scale_pages=None, v_scale_pages=None):
     """Oracle for ``paged_flash_packed_chunk``: gather each SEGMENT's pages

@@ -98,6 +98,17 @@ def main(argv=None) -> int:
                          "(current token + drafts), scored in one fused "
                          "verify pass; accepted prefix commits, rejects "
                          "roll back (0 = one-token decode)")
+    ap.add_argument("--spec-tree", default="",
+                    help="tree speculative decode as 'W.D': each running "
+                         "slot proposes W branches x D tokens verified in "
+                         "one pass under per-token ancestor masks; the "
+                         "longest accepted root-to-leaf path commits "
+                         "(exclusive with --spec-tokens; '' = off)")
+    ap.add_argument("--draft-cache", type=int, default=4096,
+                    help="capacity (n-gram keys) of the fleet-wide shared "
+                         "draft cache that feeds speculation from "
+                         "verifier-accepted continuations (0 = model "
+                         "self-draft only)")
     ap.add_argument("--policy", default="fifo",
                     choices=("fifo", "priority", "edf", "ttft"),
                     help="scheduling policy: admission order, per-step "
@@ -238,12 +249,23 @@ def main(argv=None) -> int:
               f"{fleet.group_savings:.0f} steps (mean "
               f"{fleet.group_savings_mean:.3f}), "
               f"{fleet.cancel_freed_blocks} pages freed at cancel")
-    if args.spec_tokens:
+    if args.spec_tokens or args.spec_tree:
+        # the acceptance summary only means something when speculation is
+        # actually on — one-token runs stay silent here
         print(f"[serve] speculative: {fleet.spec_tokens_accepted}/"
               f"{fleet.spec_tokens_proposed} drafts accepted "
               f"(rate {fleet.acceptance_rate:.2f}), accepted length "
               f"p50/p99 {fleet.accepted_len_p50:.1f}/"
               f"{fleet.accepted_len_p99:.1f}")
+        if args.spec_tree:
+            print(f"[serve] tree: {fleet.tree_nodes_proposed} nodes "
+                  f"proposed, accepted path length p50/p99 "
+                  f"{fleet.tree_path_accepted_p50:.1f}/"
+                  f"{fleet.tree_path_accepted_p99:.1f}")
+        if fleet.draft_cache_hits or fleet.draft_cache_misses:
+            print(f"[serve] draft cache: {fleet.draft_cache_hits} hits / "
+                  f"{fleet.draft_cache_misses} misses "
+                  f"(rate {fleet.draft_cache_hit_rate:.2f})")
     if fleet.preemptions:
         print(f"[serve] preemption: {fleet.preemptions} spills / "
               f"{fleet.restores} restores ({fleet.spilled_blocks} pages "

@@ -411,19 +411,42 @@ def attn_prefill_chunk(q, k_new, v_new, cache_l: Dict[str, jnp.ndarray],
     return out.transpose(0, 3, 1, 2, 4).reshape(b, c, h, d).astype(dtype)
 
 
-def packed_chunk_mask(seg: jnp.ndarray, valid_tok: jnp.ndarray
+def packed_chunk_mask(seg: jnp.ndarray, valid_tok: jnp.ndarray,
+                      ancestors: Optional[jnp.ndarray] = None
                       ) -> jnp.ndarray:
-    """Block-diagonal causal mask for a PACKED chunk's within-chunk keys:
-    token i may attend chunk token j iff both belong to the same segment
-    (request), j precedes i in the chunk (segments are laid out
-    contiguously in request order, so this is exactly per-request
-    causality) and j is a real token (padding never serves as a key).
-    seg (C,), valid_tok (C,) -> (C, C)."""
+    """Block-diagonal mask for a PACKED chunk's within-chunk keys.
+
+    Without ``ancestors`` (chunked prefill, linear verify): token i may
+    attend chunk token j iff both belong to the same segment (request),
+    j precedes i in the chunk (segments are laid out contiguously in
+    request order, so this is exactly per-request causality) and j is a
+    real token (padding never serves as a key).
+
+    With ``ancestors`` (C,) — per-token parent pointers into the chunk,
+    root tokens pointing at THEMSELVES — each segment's tokens form a
+    candidate TREE instead of a chain (tree speculative decode): token i
+    may attend chunk token j iff j lies on i's root path (i itself, its
+    parent, its parent's parent, ...).  The closure is computed by
+    following parent pointers to their fixpoint, so the width-1 tree
+    (ancestors[i] = i - 1 within each segment) reproduces the causal
+    chain mask bit for bit.  seg (C,), valid_tok (C,) -> (C, C)."""
     seg = jnp.asarray(seg, jnp.int32)
-    i = jnp.arange(seg.shape[0])
-    return ((seg[:, None] == seg[None, :])
-            & (i[None, :] <= i[:, None])
+    c = seg.shape[0]
+    i = jnp.arange(c)
+    base = ((seg[:, None] == seg[None, :])
             & jnp.asarray(valid_tok, bool)[None, :])
+    if ancestors is None:
+        return base & (i[None, :] <= i[:, None])
+    anc = jnp.asarray(ancestors, jnp.int32)
+
+    def walk(_, carry):
+        cur, reach = carry
+        cur = anc[cur]
+        return cur, reach | (cur[:, None] == i[None, :])
+
+    _, reach = jax.lax.fori_loop(
+        0, c, walk, (i, i[:, None] == i[None, :]))
+    return base & reach
 
 
 def _merge_packed_block(qg, o, l, m, k_new, v_new, mask):

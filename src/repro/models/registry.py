@@ -64,6 +64,29 @@ class Model:
     # dense drafter repeats the last token (degenerate n-gram), the replay
     # model drafts from its own trajectory
     draft: Optional[Callable] = None
+    # TREE speculative verify (None for families without it): the packed
+    # verify pass over a candidate token TREE — (cfg, params, tokens (C,),
+    # state, seg, slots, starts, lengths, depths (C,), ancestors (C,),
+    # block_rows=None) -> (logits (C, vocab), hidden (C, d), ks, vs); the
+    # cache write is DEFERRED (ks/vs returned instead) because same-depth
+    # siblings share a position — the engine commits only the accepted
+    # root-to-leaf path through ``commit_kv``
+    verify_tree: Optional[Callable] = None
+    # lands a deferred verify chunk's K/V: (cfg, state, ks, vs, slots, seg,
+    # positions (C,), valid (C,), block_rows=None) -> state.  ``valid`` is
+    # True exactly for the accepted path; families without a KV cache
+    # (replay) no-op
+    commit_kv: Optional[Callable] = None
+    # tree draft source: (cfg, params, state, token (B,), pos (B,), width,
+    # depth) -> (B, width, depth) int32 — the device-side FALLBACK when the
+    # serving layer's shared draft cache misses (hits arrive as traced data
+    # through the spec descriptor and override per slot)
+    draft_tree: Optional[Callable] = None
+    # True when ``draft`` is the degenerate repeat-last-token self-draft —
+    # the signal for the serving layer to put the fleet-wide shared draft
+    # cache in front of it (families with a real drafter, e.g. replay's
+    # trajectory oracle, keep theirs unless a cache is injected explicitly)
+    self_draft: bool = False
 
     @property
     def supports_paged(self) -> bool:
@@ -77,6 +100,11 @@ class Model:
     def supports_spec(self) -> bool:
         return (self.verify_packed is not None and self.draft is not None
                 and self.supports_chunked)
+
+    @property
+    def supports_tree(self) -> bool:
+        return (self.verify_tree is not None and self.draft_tree is not None
+                and self.commit_kv is not None and self.supports_spec)
 
     # ------------------------------------------------------------------
     def init(self, rng) -> Any:
@@ -210,7 +238,11 @@ def _build_dense(cfg: ModelConfig) -> Model:
                  prefill_chunk=transformer.prefill_chunk,
                  prefill_packed=transformer.prefill_packed_chunk,
                  verify_packed=transformer.verify_packed_chunk,
-                 draft=transformer.draft_tokens)
+                 draft=transformer.draft_tokens,
+                 verify_tree=transformer.verify_packed_tree,
+                 commit_kv=transformer.commit_packed_kv,
+                 draft_tree=transformer.draft_tree_tokens,
+                 self_draft=True)
 
 
 def _build_rwkv(cfg: ModelConfig) -> Model:

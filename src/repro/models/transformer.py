@@ -262,12 +262,25 @@ def layer_prefill_packed(cfg, p, x, cache_l, rows, seg_tables, positions,
 
 
 def _packed_chunk_core(cfg, params, tokens, state, seg, slots, starts,
-                       lengths, block_rows=None):
-    """Shared body of ``prefill_packed_chunk`` / ``verify_packed_chunk``:
-    run one fused C-token packed chunk through the stack, scatter each
-    token's K/V into its own request's resident cache, and return
-    ``(new_state, x)`` with x (1, C, d) the post-stack activations (the
-    layer scan computes them either way; prefill merely discards them)."""
+                       lengths, block_rows=None, *, depths=None,
+                       ancestors=None, write=True):
+    """Shared body of ``prefill_packed_chunk`` / ``verify_packed_chunk`` /
+    ``verify_packed_tree``: run one fused C-token packed chunk through the
+    stack, scatter each token's K/V into its own request's resident cache,
+    and return ``(new_state, x, ks, vs)`` with x (1, C, d) the post-stack
+    activations (the layer scan computes them either way; prefill merely
+    discards them) and ks/vs (L, KV, C, dh) the chunk's own K/V.
+
+    The default shape of a segment is a causal CHAIN at positions
+    starts[r] + 0..len-1.  ``depths``/``ancestors`` (C,) generalize it to
+    a candidate TREE (speculative multi-draft verify): per-token position
+    becomes starts[seg] + depths and the within-chunk mask follows the
+    ancestor closure instead of layout order.  ``write=False`` DEFERS the
+    cache write entirely (tree verify: same-depth siblings share a target
+    position, so only the accepted root-to-leaf path may land — the
+    caller commits it through ``commit_packed_kv`` once acceptance is
+    known; within-chunk attention never reads the cache for chunk tokens,
+    so the forward is write-order independent)."""
     c = tokens.shape[0]
     seg = jnp.asarray(seg, jnp.int32)
     slots = jnp.asarray(slots, jnp.int32)
@@ -277,9 +290,10 @@ def _packed_chunk_core(cfg, params, tokens, state, seg, slots, starts,
                                jnp.cumsum(lengths)[:-1]])
     off = jnp.arange(c, dtype=jnp.int32) - offsets[seg]
     valid_tok = (off >= 0) & (off < lengths[seg])
-    positions = starts[seg] + off                        # (C,)
+    positions = starts[seg] + (off if depths is None
+                               else jnp.asarray(depths, jnp.int32))  # (C,)
     rows = slots[seg]                                    # (C,)
-    chunk_mask = attn.packed_chunk_mask(seg, valid_tok)
+    chunk_mask = attn.packed_chunk_mask(seg, valid_tok, ancestors=ancestors)
     x = embed_tokens(cfg, params, tokens[None])          # (1, C, d)
     paged = "block_tables" in state
     if paged:
@@ -298,14 +312,16 @@ def _packed_chunk_core(cfg, params, tokens, state, seg, slots, starts,
         return x, kv
 
     x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], scanned))
+    if not write:
+        return state, x, ks, vs
     # ks/vs (L, KV, C, dh): one per-token write for all layers
     if paged:
         pages = attn.cache_write_packed_paged(scanned, ks, vs,
                                               seg_tables[seg],
                                               positions, valid_tok)
-        return dict(pages, block_tables=state["block_tables"]), x
+        return dict(pages, block_tables=state["block_tables"]), x, ks, vs
     wpos = jnp.where(valid_tok, positions, n_virtual)    # padding dropped
-    return attn.cache_write_packed(state, ks, vs, rows, wpos), x
+    return attn.cache_write_packed(state, ks, vs, rows, wpos), x, ks, vs
 
 
 def prefill_packed_chunk(cfg, params, tokens, state, seg, slots, starts,
@@ -326,8 +342,9 @@ def prefill_packed_chunk(cfg, params, tokens, state, seg, slots, starts,
     executable covers every packing shape of every prompt length — the
     single-segment call IS the unpacked chunk path.  Returns the updated
     state."""
-    state, _ = _packed_chunk_core(cfg, params, tokens, state, seg, slots,
-                                  starts, lengths, block_rows=block_rows)
+    state, _, _, _ = _packed_chunk_core(cfg, params, tokens, state, seg,
+                                        slots, starts, lengths,
+                                        block_rows=block_rows)
     return state
 
 
@@ -344,11 +361,80 @@ def verify_packed_chunk(cfg, params, tokens, state, seg, slots, starts,
     masks derived from ``pos`` hide them and the next verify block
     overwrites them in place before ``pos`` ever reaches them.  Returns
     (logits (C, vocab), hidden (C, d), new_state)."""
-    state, x = _packed_chunk_core(cfg, params, tokens, state, seg, slots,
-                                  starts, lengths, block_rows=block_rows)
+    state, x, _, _ = _packed_chunk_core(cfg, params, tokens, state, seg,
+                                        slots, starts, lengths,
+                                        block_rows=block_rows)
     h = apply_norm(cfg, params["final_norm"], x)[0]       # (C, d)
     logits = logits_from_hidden(cfg, params, h)
     return logits, h, state
+
+
+def verify_packed_tree(cfg, params, tokens, state, seg, slots, starts,
+                       lengths, depths, ancestors, block_rows=None):
+    """TREE speculative verify: the packed-chunk forward where each
+    segment carries a candidate token TREE instead of a chain.
+
+    Layout stays the packed-chunk contract (segments contiguous, tails
+    dropped by ``lengths``) but two per-token arrays reshape the segment:
+    ``depths`` (C,) — each token's depth in its tree, so its absolute
+    position is starts[r] + depth (same-depth siblings SHARE a position,
+    exactly as the committed sequence would) — and ``ancestors`` (C,) —
+    parent pointers into the chunk (roots self-pointing), so each token
+    attends its own root path instead of everything before it.  Position
+    j of each node scores the model's next token after consuming that
+    node's root-to-node path.
+
+    The cache write is DEFERRED: same-depth siblings would race on one
+    (lane, position) target and a rejected sibling could shadow the
+    accepted token, so nothing lands here — the caller computes
+    acceptance from the logits and commits ONLY the accepted root-to-leaf
+    path through ``commit_packed_kv``.  Validity masks still expose just
+    [0, pos), so the missing writes are unobservable within the step.
+    Returns (logits (C, vocab), hidden (C, d), ks, vs) with ks/vs
+    (L, KV, C, dh) the chunk's uncommitted K/V."""
+    _, x, ks, vs = _packed_chunk_core(cfg, params, tokens, state, seg,
+                                      slots, starts, lengths,
+                                      block_rows=block_rows, depths=depths,
+                                      ancestors=ancestors, write=False)
+    h = apply_norm(cfg, params["final_norm"], x)[0]       # (C, d)
+    logits = logits_from_hidden(cfg, params, h)
+    return logits, h, ks, vs
+
+
+def commit_packed_kv(cfg, state, ks, vs, slots, seg, positions, valid,
+                     block_rows=None):
+    """Land a verify chunk's DEFERRED K/V (``verify_packed_tree``) into
+    the resident caches: chunk token t writes its (lane, position) target
+    iff ``valid[t]`` — the engine sets it True exactly for the accepted
+    root-to-leaf path, whose targets are unique by construction (one node
+    per depth), so the scatter is race-free.  ks/vs (L, KV, C, dh);
+    slots (R,); seg (C,); positions (C,) absolute targets."""
+    seg = jnp.asarray(seg, jnp.int32)
+    slots = jnp.asarray(slots, jnp.int32)
+    positions = jnp.asarray(positions, jnp.int32)
+    valid = jnp.asarray(valid, bool)
+    if "block_tables" in state:
+        assert block_rows is not None, "paged tree commit needs block rows"
+        scanned = {k: v for k, v in state.items() if k != "block_tables"}
+        seg_tables = jnp.asarray(block_rows, jnp.int32)
+        pages = attn.cache_write_packed_paged(scanned, ks, vs,
+                                              seg_tables[seg],
+                                              positions, valid)
+        return dict(pages, block_tables=state["block_tables"])
+    n_virtual = state["k"].shape[3]
+    wpos = jnp.where(valid, positions, n_virtual)        # rejected dropped
+    return attn.cache_write_packed(state, ks, vs, slots[seg], wpos)
+
+
+def draft_tree_tokens(cfg, params, state, token, pos, width, depth):
+    """Default tree self-draft, the ``draft_tokens`` fallback lifted to a
+    (width, depth) tree: every branch repeats the last committed token.
+    Only reached when the serving layer's shared draft cache MISSES (the
+    cache is the real drafter for dense families); keeps the step total —
+    a miss costs nothing and accepts whatever it happens to get right.
+    token (B,) int32; returns (B, width, depth) int32."""
+    b = token.shape[0]
+    return jnp.broadcast_to(token[:, None, None], (b, width, depth))
 
 
 def draft_tokens(cfg, params, state, token, pos, k):

@@ -1,4 +1,5 @@
 from repro.serving.config import ServeConfig
+from repro.serving.draft_cache import DraftCache
 from repro.serving.engine import (ChunkSeg, ChunkWork,
                                   ContinuousServingEngine,
                                   ProbeState, ServeResult,
@@ -23,12 +24,13 @@ from repro.serving.replay import (GroupFleet, make_group_fleet,
                                   replay_requests, serve_replay,
                                   served_stop_times)
 from repro.serving.request import (FleetMetrics, Request, RequestState,
-                                   latency_stats, make_request)
+                                   latency_stats, make_request, spec_stats)
 from repro.serving.router import FleetRouter
 from repro.serving.scheduler import OrcaScheduler
 
 __all__ = ["BlockPool", "ChunkSeg", "ChunkWork", "ComposeView",
-           "ContinuousServingEngine", "EDFPolicy", "FIFOPolicy",
+           "ContinuousServingEngine", "DraftCache", "EDFPolicy",
+           "FIFOPolicy",
            "FleetMetrics", "FleetRouter", "GroupFleet", "HostPressure",
            "NULL_BLOCK", "OrcaScheduler",
            "PlacementPolicy", "PrefixEntry", "PressurePlacement",
@@ -47,4 +49,4 @@ __all__ = ["BlockPool", "ChunkSeg", "ChunkWork", "ComposeView",
            "prefix_len", "probe_update", "prompt_key", "replay_model",
            "replay_params", "replay_requests", "reset_probe_slot",
            "serve_queue_static", "serve_replay", "served_stop_times",
-           "write_probe_slot"]
+           "spec_stats", "write_probe_slot"]

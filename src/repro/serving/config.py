@@ -80,6 +80,18 @@ class ServeConfig:
     #                               scored in one fused pass); None/0
     #                               keeps one-token decode
 
+    # -- tree speculative decode (PR 10) ----------------------------------
+    spec_tree: Optional[str] = None   # "W.D" — W draft chains of depth D
+    #                               per slot, verified as one token TREE
+    #                               under the ancestor mask (1 + W*D nodes
+    #                               claim the step budget); exclusive with
+    #                               spec_tokens ("1.D" == linear D+1).
+    #                               A (W, D) tuple is accepted and
+    #                               normalized to the string form.
+    draft_cache_size: int = 4096  # shared n-gram draft cache entries
+    #                               (fleet-wide, LRU); 0 disables the
+    #                               cache (model self-draft only)
+
     # -- scheduling policy (PR 5) ----------------------------------------
     policy: Any = None            # "fifo"/"priority"/"edf"/"ttft", a
     #                               SchedulingPolicy instance, or None
@@ -109,7 +121,35 @@ class ServeConfig:
             if val is not None:
                 val = int(val)
                 object.__setattr__(self, field, val if val > 0 else None)
+        # normalize spec_tree: (W, D) tuples and "" both reach here from
+        # programmatic / CLI paths; canonical form is the "W.D" string
+        if self.spec_tree is not None:
+            tree = self.spec_tree
+            if isinstance(tree, (tuple, list)):
+                tree = ".".join(str(int(x)) for x in tree)
+            tree = str(tree).strip()
+            object.__setattr__(self, "spec_tree", tree or None)
         self.validate()
+
+    # ------------------------------------------------------------------
+    def tree_shape(self) -> Optional[tuple]:
+        """Parsed ``spec_tree``: (width, depth) ints, or None."""
+        if self.spec_tree is None:
+            return None
+        parts = str(self.spec_tree).split(".")
+        if len(parts) != 2:
+            raise ValueError(
+                f"spec_tree={self.spec_tree!r} is not 'W.D': the tree "
+                "shape is width.depth (e.g. '3.4' = 3 draft chains of "
+                "depth 4); fix by passing two dot-separated positive ints")
+        try:
+            w, d = int(parts[0]), int(parts[1])
+        except ValueError:
+            raise ValueError(
+                f"spec_tree={self.spec_tree!r} is not 'W.D': both parts "
+                "must be ints (e.g. '3.4'); fix by passing two "
+                "dot-separated positive ints") from None
+        return (w, d)
 
     # ------------------------------------------------------------------
     def validate(self) -> None:
@@ -169,6 +209,42 @@ class ServeConfig:
                     "would blow the per-step token budget; fix by "
                     "lowering spec_tokens to <= "
                     f"{self.token_budget} or raising token_budget")
+        if self.spec_tree is not None:
+            if self.spec_tokens is not None:
+                raise ValueError(
+                    f"spec_tree={self.spec_tree!r} with spec_tokens="
+                    f"{self.spec_tokens} is ambiguous — they are two "
+                    "shapes of the same verify segment; fix by passing "
+                    "ONE of them (spec_tree='1.k-1' is the linear "
+                    "spec_tokens=k path)")
+            w, d = self.tree_shape()
+            if w < 1 or d < 1:
+                raise ValueError(
+                    f"spec_tree={self.spec_tree!r} needs width >= 1 and "
+                    "depth >= 1: a tree is at least one draft chain of "
+                    "one token; fix by passing e.g. '2.3' (or None for "
+                    "one-token decode)")
+            nodes = 1 + w * d
+            if self.chunk_tokens is not None and nodes >= self.chunk_tokens:
+                raise ValueError(
+                    f"spec_tree={self.spec_tree!r} needs {nodes} nodes "
+                    f">= chunk_tokens={self.chunk_tokens}: the verify "
+                    "tree must fit inside the fused step's fixed chunk "
+                    "capacity alongside the prefill share; fix by "
+                    "shrinking the tree or raising chunk_tokens to > "
+                    f"{nodes}")
+            if self.token_budget is not None and nodes > self.token_budget:
+                raise ValueError(
+                    f"spec_tree={self.spec_tree!r} needs {nodes} nodes "
+                    f"> token_budget={self.token_budget}: one slot's "
+                    "verify tree alone would blow the per-step token "
+                    "budget; fix by shrinking the tree or raising "
+                    f"token_budget to >= {nodes}")
+        if int(self.draft_cache_size) < 0:
+            raise ValueError(
+                f"draft_cache_size={self.draft_cache_size} must be >= 0: "
+                "the shared draft cache's entry bound (0 disables it); "
+                "fix by passing a non-negative count")
         if isinstance(self.n_hosts, bool) or int(self.n_hosts) < 1:
             raise ValueError(
                 f"n_hosts={self.n_hosts!r} must be an int >= 1: the number "
@@ -243,6 +319,8 @@ class ServeConfig:
         ("chunk_tokens", "chunk_tokens", None),
         ("token_budget", "token_budget", None),
         ("spec_tokens", "spec_tokens", None),    # 0 -> None in __post_init__
+        ("spec_tree", "spec_tree", None),        # "" -> None in __post_init__
+        ("draft_cache", "draft_cache_size", None),
         ("policy", "policy", None),
         ("no_pack", "pack_chunks", "invert"),
         ("pack_max", "pack_max", None),

@@ -380,7 +380,8 @@ def make_serve_step(model: Model, pc: ProbeConfig, cfg: ServeConfig,
                     interpret: Optional[bool] = None,
                     chunk_tokens: int = 0,
                     mask_stopped_writes: bool = False,
-                    spec_tokens: int = 0):
+                    spec_tokens: int = 0,
+                    spec_tree: Optional[Tuple[int, int]] = None):
     """Build the fused decode+ORCA step:
     (params, theta, token, cache, pos, probe_state) ->
     (next_token, cache, probe_state).
@@ -421,7 +422,27 @@ def make_serve_step(model: Model, pc: ProbeConfig, cfg: ServeConfig,
     ``pos`` reaches them.  The probe consumes ONLY accepted tokens through
     ``probe_update_spec``.  ``lens`` is traced data, so every draft-length
     mix shares the ONE executable; the step returns a 4th element —
-    {"gen", "seq", "seq_scores", "seq_n"} for multi-token collection."""
+    {"gen", "seq", "seq_scores", "seq_n"} for multi-token collection.
+    The ``spec`` descriptor additionally carries host drafts —
+    ``drafts`` (n_slots, k-1) plus a per-slot ``have`` mask — supplied by
+    the scheduler's shared draft cache; slots with ``have=False`` fall
+    back to ``model.draft`` (all-False is bit-identical to PR 9).
+
+    With ``spec_tree = (W, D)`` the verify segment generalizes from a
+    chain to a token TREE: W independent draft chains of depth D hang off
+    the root (BFS comb layout — node ``1 + j*W + b`` is branch b at depth
+    j+1, parent ``i - W`` or the root), so ``k = 1 + W*D`` nodes per slot
+    claim the same token budget.  The packed forward swaps block-causal
+    for the per-token ANCESTOR mask (``model.verify_tree``), K/V writes
+    are DEFERRED (same-depth siblings share a position), acceptance picks
+    the longest root-to-leaf path whose every node matches the model's
+    output after its parent — a linear chain by construction, so the SAME
+    masked probe kernel consumes it and stops stay byte-identical to
+    one-token decode — and only that path's K/V lands via
+    ``model.commit_kv``.  ``drafts`` becomes (n_slots, W, D); per-slot
+    ``lens`` in [0, k] count-truncates the tree breadth-first (prefix-
+    closed: a truncated tree is still a tree).  ``spec_tree`` overrides
+    ``spec_tokens``; W = 1 reproduces the linear path bit-for-bit."""
     mcfg = model.cfg
 
     def decode_probe(params, theta, token, cache, pos, st: ProbeState):
@@ -439,6 +460,147 @@ def make_serve_step(model: Model, pc: ProbeConfig, cfg: ServeConfig,
         nxt = jnp.where(prev_stopped, token, nxt)
         return nxt, cache, st
 
+    if spec_tree is not None:
+        tw, td = int(spec_tree[0]), int(spec_tree[1])
+        assert tw >= 1 and td >= 1, spec_tree
+        assert model.supports_tree, \
+            f"{mcfg.name}: no tree speculative decode for this family"
+        assert window is None, "speculative decode has no SWA ring buffer"
+        kk = 1 + tw * td
+        # static BFS comb tables: node 0 = root; node 1 + j*W + b = branch
+        # b at depth j+1, parent one level up on the SAME branch (the root
+        # for j = 0).  Index order == BFS order, so per-slot count
+        # truncation by ``lens`` keeps parents (prefix-closed).
+        par_np = np.zeros((kk,), np.int32)
+        dep_np = np.zeros((kk,), np.int32)
+        for j in range(td):
+            for b_ in range(tw):
+                i = 1 + j * tw + b_
+                dep_np[i] = j + 1
+                par_np[i] = 0 if j == 0 else i - tw
+        par_l = jnp.asarray(par_np)
+        dep_l = jnp.asarray(dep_np)
+
+        def tree_verify(params, theta, token, cache, pos, st: ProbeState,
+                        lens, drafts_in, have):
+            bsz = token.shape[0]
+            c = bsz * kk
+            lens = jnp.where(st.stopped, 0, jnp.asarray(lens, jnp.int32))
+            pos = jnp.asarray(pos, jnp.int32)
+            # drafts: shared-cache hits from the host where available, the
+            # model family's own tree drafter elsewhere — traced data, one
+            # executable across every hit/miss mix
+            dev = model.draft_tree(mcfg, params, cache, token, pos, tw, td)
+            drafts = jnp.where(jnp.asarray(have, bool)[:, None, None],
+                               jnp.asarray(drafts_in, jnp.int32),
+                               jnp.asarray(dev, jnp.int32))
+            # BFS layout: blk[:, 1 + j*W + b] = drafts[:, b, j]
+            blk = jnp.concatenate(
+                [token[:, None],
+                 drafts.transpose(0, 2, 1).reshape(bsz, tw * td)], axis=1)
+            offs = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                    jnp.cumsum(lens)[:-1]])
+            jj = jnp.arange(kk, dtype=jnp.int32)[None, :]
+            dst = jnp.where(jj < lens[:, None], offs[:, None] + jj, c)
+            flat = dst.reshape(-1)
+
+            def scat(src):
+                return jnp.zeros((c,), jnp.int32).at[flat].set(
+                    src.reshape(-1), mode="drop")
+
+            toks_c = scat(blk)
+            seg_c = scat(jnp.broadcast_to(
+                jnp.arange(bsz, dtype=jnp.int32)[:, None], (bsz, kk)))
+            dep_c = scat(jnp.broadcast_to(dep_l[None, :], (bsz, kk)))
+            # global parent pointers: the root points at ITSELF (par 0 ->
+            # offs + 0); dropped tail tokens default to 0, masked by length
+            anc_c = scat(offs[:, None] + par_l[None, :])
+            rows_arg = cache["block_tables"] if "block_tables" in cache \
+                else None
+            logits, hidden, ks, vs = model.verify_tree(
+                mcfg, params, toks_c, cache, seg_c,
+                jnp.arange(bsz, dtype=jnp.int32), pos, lens, dep_c, anc_c,
+                rows_arg)
+            out_c = jnp.argmax(logits[:, :mcfg.vocab_size],
+                               axis=-1).astype(jnp.int32)
+            gdx = jnp.clip(dst, 0, c - 1)
+            out_blk = out_c[gdx]                          # (B, kk)
+            # per-node acceptance, rooted: node i survives iff its parent
+            # did AND it equals the model's output after its parent —
+            # unrolled over the static kk at trace time
+            accs = [lens > 0]
+            for i in range(1, kk):
+                p = int(par_np[i])
+                accs.append(accs[p] & (i < lens)
+                            & (blk[:, i] == out_blk[:, p]))
+            acc_m = jnp.stack(accs, axis=1)               # (B, kk) bool
+            plen = jnp.where(acc_m, dep_l[None, :] + 1, 0)
+            g = jnp.max(plen, axis=1)                     # path len incl root
+            best = jnp.argmax(plen, axis=1).astype(jnp.int32)
+            # root-first path via the ancestor walk from ``best``: entry d
+            # is best's ancestor at distance dep[best] - d (clamped — the
+            # tail repeats ``best``, masked by d < g everywhere below)
+            curs = [best]
+            for _ in range(td):
+                curs.append(par_l[curs[-1]])
+            curs = jnp.stack(curs, axis=1)                # (B, D+1)
+            dd = jnp.arange(td + 1, dtype=jnp.int32)
+            walk = jnp.clip(dep_l[best][:, None] - dd[None, :], 0, td)
+            path = jnp.take_along_axis(curs, walk, axis=1)
+            pdx = jnp.clip(offs[:, None] + path, 0, c - 1)
+            seq = out_c[pdx]                              # (B, D+1)
+            hid_path = hidden[pdx]                        # (B, D+1, d)
+            # the accepted path IS a linear chain: the PR-9 masked spec
+            # probe consumes it unchanged, so stops are byte-identical to
+            # sequential one-token decode
+            st, sm_seq, n_seq = probe_update_spec(
+                pc, theta, st, hid_path, g, cfg.lam, cfg.tokens_per_step,
+                cfg.burn_in, probe_impl=probe_impl, interpret=interpret)
+            # commit ONLY the accepted path's deferred K/V — one node per
+            # depth, unique (lane, position) targets, race-free scatter
+            on_path = jnp.any(
+                (path[:, :, None] == jnp.arange(kk)[None, None, :])
+                & (dd[None, :, None] < g[:, None, None]), axis=1)
+            valid_c = jnp.zeros((c,), bool).at[flat].set(
+                on_path.reshape(-1), mode="drop")
+            pos_c = scat(pos[:, None] + dep_l[None, :])
+            cache = model.commit_kv(mcfg, cache, ks, vs,
+                                    jnp.arange(bsz, dtype=jnp.int32),
+                                    seg_c, pos_c, valid_c, rows_arg)
+            nxt = jnp.where(
+                g > 0,
+                jnp.take_along_axis(
+                    seq, jnp.clip(g - 1, 0, td)[:, None], axis=1)[:, 0],
+                token)
+            extras = {"gen": g, "seq": seq, "seq_scores": sm_seq,
+                      "seq_n": n_seq}
+            return nxt, cache, st, extras
+
+        if not chunk_tokens:
+            def tree_step(params, theta, token, cache, pos, st: ProbeState,
+                          spec: Dict[str, jnp.ndarray]):
+                return tree_verify(params, theta, token, cache, pos, st,
+                                   spec["lens"], spec["drafts"],
+                                   spec["have"])
+            return tree_step
+
+        def unified_tree_step(params, theta, token, cache, pos,
+                              st: ProbeState, chunk: Dict[str, jnp.ndarray],
+                              spec: Dict[str, jnp.ndarray]):
+            def run_chunk(cache):
+                return model.prefill_packed(mcfg, params, chunk["tokens"],
+                                            cache, chunk["seg"],
+                                            chunk["slots"], chunk["starts"],
+                                            chunk["lengths"],
+                                            chunk.get("rows"))
+
+            cache = jax.lax.cond(chunk["active"], run_chunk,
+                                 lambda cch: cch, cache)
+            return tree_verify(params, theta, token, cache, pos, st,
+                               spec["lens"], spec["drafts"], spec["have"])
+
+        return unified_tree_step
+
     if spec_tokens:
         assert spec_tokens >= 2, "spec_tokens < 2 is one-token decode"
         assert model.supports_spec, \
@@ -447,16 +609,21 @@ def make_serve_step(model: Model, pc: ProbeConfig, cfg: ServeConfig,
         kk = int(spec_tokens)
 
         def spec_verify(params, theta, token, cache, pos,
-                        st: ProbeState, lens):
+                        st: ProbeState, lens, drafts_in, have):
             bsz = token.shape[0]
             c = bsz * kk
             # parked rows contribute nothing: no writes (the one-token
             # path's mask_stopped_writes contract), no probe, no advance
             lens = jnp.where(st.stopped, 0, jnp.asarray(lens, jnp.int32))
             pos = jnp.asarray(pos, jnp.int32)
-            drafts = model.draft(mcfg, params, cache, token, pos, kk)
-            blk = jnp.concatenate(
-                [token[:, None], jnp.asarray(drafts, jnp.int32)], axis=1)
+            # host drafts (shared draft cache) where ``have``, the model
+            # family's own drafter elsewhere — all-False is bit-identical
+            # to the pre-cache path
+            dev = model.draft(mcfg, params, cache, token, pos, kk)
+            drafts = jnp.where(jnp.asarray(have, bool)[:, None],
+                               jnp.asarray(drafts_in, jnp.int32),
+                               jnp.asarray(dev, jnp.int32))
+            blk = jnp.concatenate([token[:, None], drafts], axis=1)
             # segments laid out contiguously in slot order (the packed-chunk
             # layout contract); slots past their length scatter to the
             # dropped tail and tail tokens keep seg 0, invalid by length
@@ -505,7 +672,8 @@ def make_serve_step(model: Model, pc: ProbeConfig, cfg: ServeConfig,
             def spec_step(params, theta, token, cache, pos, st: ProbeState,
                           spec: Dict[str, jnp.ndarray]):
                 return spec_verify(params, theta, token, cache, pos, st,
-                                   spec["lens"])
+                                   spec["lens"], spec["drafts"],
+                                   spec["have"])
             return spec_step
 
         def unified_spec_step(params, theta, token, cache, pos,
@@ -521,7 +689,7 @@ def make_serve_step(model: Model, pc: ProbeConfig, cfg: ServeConfig,
             cache = jax.lax.cond(chunk["active"], run_chunk,
                                  lambda cch: cch, cache)
             return spec_verify(params, theta, token, cache, pos, st,
-                               spec["lens"])
+                               spec["lens"], spec["drafts"], spec["have"])
 
         return unified_spec_step
 
@@ -813,7 +981,8 @@ class ContinuousServingEngine:
                  interpret: Optional[bool] = None, paged: bool = False,
                  block_size: int = 16, num_blocks: Optional[int] = None,
                  chunk_tokens: Optional[int] = None,
-                 pack_max: int = 4, spec_tokens: Optional[int] = None):
+                 pack_max: int = 4, spec_tokens: Optional[int] = None,
+                 spec_tree: Optional[Tuple[int, int]] = None):
         self.model, self.params, self.pc, self.theta, self.cfg = \
             model, params, pc, theta, cfg
         mcfg = model.cfg
@@ -845,9 +1014,20 @@ class ContinuousServingEngine:
                 f"{mcfg.name}: no chunked prefill for this family"
         # speculative draft-verify decode: every RUNNING slot may ride the
         # packed verify chunk with up to spec_tokens tokens per step; lens
-        # are traced per-step data, so ONE executable covers every mix
+        # are traced per-step data, so ONE executable covers every mix.
+        # spec_tree=(W,D) is the TREE generalization: 1 + W*D candidate
+        # NODES per slot claim the budget (``spec_tokens`` becomes that
+        # node count — the scheduler's per-slot unit either way)
+        self.spec_tree = (tuple(int(x) for x in spec_tree) if spec_tree
+                          else None)
         self.spec_tokens = int(spec_tokens or 0)
-        if self.spec_tokens:
+        if self.spec_tree:
+            assert not self.spec_tokens, \
+                "spec_tree and spec_tokens are mutually exclusive"
+            assert model.supports_tree, \
+                f"{mcfg.name}: no tree speculative decode for this family"
+            self.spec_tokens = 1 + self.spec_tree[0] * self.spec_tree[1]
+        elif self.spec_tokens:
             assert model.supports_spec, \
                 f"{mcfg.name}: no speculative decode for this family"
         st = init_probe_state(pc, theta, n_slots, mcfg.d_model)
@@ -859,10 +1039,20 @@ class ContinuousServingEngine:
                             probe_impl=probe_impl, interpret=interpret,
                             chunk_tokens=self.chunk_tokens,
                             mask_stopped_writes=bool(self.chunk_tokens),
-                            spec_tokens=self.spec_tokens),
+                            spec_tokens=(0 if self.spec_tree
+                                         else self.spec_tokens),
+                            spec_tree=self.spec_tree),
             donate_argnums=_SERVE_STEP_DONATE)
         if self.spec_tokens:
-            self._null_spec = {"lens": jnp.zeros((n_slots,), jnp.int32)}
+            if self.spec_tree:
+                w_, d_ = self.spec_tree
+                zero_drafts = jnp.zeros((n_slots, w_, d_), jnp.int32)
+            else:
+                zero_drafts = jnp.zeros((n_slots, self.spec_tokens - 1),
+                                        jnp.int32)
+            self._null_spec = {"lens": jnp.zeros((n_slots,), jnp.int32),
+                               "drafts": zero_drafts,
+                               "have": jnp.zeros((n_slots,), bool)}
         if self.chunk_tokens:
             r = self.max_pack
             null = {"tokens": jnp.zeros((self.chunk_tokens,), jnp.int32),
@@ -1170,7 +1360,8 @@ class ContinuousServingEngine:
 
     # ------------------------------------------------------------------
     def step(self, chunk: Optional[ChunkWork] = None,
-             spec_lens=None) -> SlotStepView:
+             spec_lens=None, spec_drafts=None,
+             spec_have=None) -> SlotStepView:
         """One fused step for every slot (vector pos): decode + probe — and,
         in chunked mode, up to ``chunk_tokens`` prompt tokens of up to
         ``max_pack`` mid-prefill requests packed into ``chunk`` (None =
@@ -1180,7 +1371,11 @@ class ContinuousServingEngine:
         A spec engine additionally takes ``spec_lens`` — per-slot verify
         lengths in [0, spec_tokens] (None = 0 everywhere) — and advances
         each slot's ``pos`` by its ACCEPTED length instead of 1; the view's
-        spec fields carry the committed multi-token sequences."""
+        spec fields carry the committed multi-token sequences.
+        ``spec_drafts``/``spec_have`` inject host-side drafts (the shared
+        draft cache): slots with ``have=False`` fall back to the model
+        family's own drafter.  Tree engines (``spec_tree``) take drafts
+        shaped (n_slots, W, D) and lens counts NODES in [0, 1 + W*D]."""
         pos = jnp.asarray(self.pos, jnp.int32)
         args = [self.params, self.theta, self.token, self.state, pos,
                 self.st]
@@ -1190,9 +1385,15 @@ class ContinuousServingEngine:
         else:
             assert chunk is None, "engine built without chunk_tokens"
         if self.spec_tokens:
-            spec = (self._null_spec if spec_lens is None
-                    else {"lens": jnp.asarray(np.asarray(spec_lens,
-                                                         np.int32))})
+            spec = dict(self._null_spec)
+            if spec_lens is not None:
+                spec["lens"] = jnp.asarray(np.asarray(spec_lens, np.int32))
+            if spec_drafts is not None:
+                assert spec_have is not None, \
+                    "spec_drafts needs its per-slot have mask"
+                spec["drafts"] = jnp.asarray(np.asarray(spec_drafts,
+                                                        np.int32))
+                spec["have"] = jnp.asarray(np.asarray(spec_have, bool))
             self.token, self.state, self.st, extras = self._step_fn(
                 *args, spec)
             gen = np.asarray(extras["gen"])
@@ -1205,7 +1406,8 @@ class ContinuousServingEngine:
                                 gen=gen, seq=np.asarray(extras["seq"]),
                                 seq_scores=np.asarray(extras["seq_scores"]),
                                 seq_n=np.asarray(extras["seq_n"]))
-        assert spec_lens is None, "engine built without spec_tokens"
+        assert spec_lens is None and spec_drafts is None, \
+            "engine built without spec_tokens"
         self.token, self.state, self.st = self._step_fn(*args)
         self.pos = self.pos + 1
         return SlotStepView(tokens=np.asarray(self.token),

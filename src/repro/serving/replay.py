@@ -42,9 +42,25 @@ class ReplayConfig:
     tokens_per_step: int = 1
 
 
+def _draft_coin(traj, step, branch):
+    """Deterministic per-(trajectory, step, branch) hash in [0, 1000) —
+    the wrong-branch coin for the replay drafters.  Pure integer mixing
+    (no RNG state), so the same (traj, step, branch) always lands the
+    same way: branch 0 of the tree drafter reproduces the linear drafter
+    bit for bit, and reruns are bytewise stable."""
+    h = (jnp.asarray(traj, jnp.uint32) * jnp.uint32(2654435761)
+         + jnp.asarray(step, jnp.uint32) * jnp.uint32(40503)
+         + jnp.asarray(branch, jnp.uint32) * jnp.uint32(2246822519)
+         + jnp.uint32(977))
+    h = (h ^ (h >> 13)) * jnp.uint32(0x5bd1e995)
+    h = h ^ (h >> 15)
+    return (h % jnp.uint32(1000)).astype(jnp.int32)
+
+
 def replay_model(phis: np.ndarray, *, prompt_len: int = 1,
                  tokens_per_step: int = 1,
-                 answers: Optional[np.ndarray] = None) -> Model:
+                 answers: Optional[np.ndarray] = None,
+                 draft_wrong_rate: float = 0.0) -> Model:
     """Model whose decode-step hidden states replay ``phis`` (N, T, d).
 
     The decode state is {"traj": (1, B) int32} — batch axis 1 like every
@@ -57,12 +73,26 @@ def replay_model(phis: np.ndarray, *, prompt_len: int = 1,
     the per-sample answer the group consensus should aggregate, driving
     consensus end-to-end without a real model.  Pass the same array to
     ``replay_params``.
+
+    ``draft_wrong_rate`` in [0, 1] corrupts each drafted token with that
+    probability (deterministic per (trajectory, step, branch) — see
+    ``_draft_coin``), turning the default 100%-acceptance oracle drafter
+    into a PARTIAL-acceptance one: the verifier rejects corrupted drafts
+    and the accepted prefix/path lengths become genuinely variable, which
+    is what tree-vs-linear speculative comparisons need.  Branch b of the
+    tree drafter flips its coins independently of branch b', so a wrong
+    branch-0 guess can still be rescued by a sibling — the tree's whole
+    advantage.  0.0 (default) keeps the historical always-right drafter.
     """
     phis = np.asarray(phis, np.float32)
     n, t, d = phis.shape
     vocab = max(8, n)
     if answers is not None:
         vocab = max(vocab, int(np.asarray(answers).max()) + 1)
+    if not 0.0 <= draft_wrong_rate <= 1.0:
+        raise ValueError(f"draft_wrong_rate={draft_wrong_rate} is outside "
+                         "[0, 1]")
+    wrong_mil = int(round(float(draft_wrong_rate) * 1000))
     cfg = ReplayConfig(name=f"replay-{n}x{t}", d_model=d,
                        vocab_size=vocab, prompt_len=prompt_len,
                        tokens_per_step=tokens_per_step)
@@ -124,18 +154,50 @@ def replay_model(phis: np.ndarray, *, prompt_len: int = 1,
     def init_decode_state(batch: int, cache_len: int, abstract: bool = False):
         return {"traj": jnp.zeros((1, batch), jnp.int32)}
 
+    def _true_token(params, traj):
+        if "answers" in params:
+            return params["answers"][traj].astype(jnp.int32)
+        return jnp.zeros_like(traj)
+
     def draft(cfg, params, state, token, pos, k):
         # the replay model drafts from its own trajectory: every decode
         # step emits answers[traj] (or token 0 without answers), so
         # proposing exactly that token makes the verifier accept the
         # whole block — the 100%-acceptance upper bound the speculative
-        # throughput benchmark measures against
+        # throughput benchmark measures against.  With a wrong rate, each
+        # drafted token is independently corrupted (branch-0 coins, so
+        # this chain == the tree drafter's branch 0).
         traj = state["traj"][0]                           # (B,)
-        if "answers" in params:
-            tok = params["answers"][traj].astype(jnp.int32)
-        else:
-            tok = jnp.zeros_like(traj)
-        return jnp.broadcast_to(tok[:, None], (traj.shape[0], k - 1))
+        tok = _true_token(params, traj)
+        drafts = jnp.broadcast_to(tok[:, None], (traj.shape[0], k - 1))
+        if wrong_mil:
+            dd = jnp.arange(1, k, dtype=jnp.int32)[None, :]
+            step = (jnp.asarray(pos, jnp.int32)[:, None] + dd
+                    - cfg.prompt_len) // cfg.tokens_per_step
+            bad = _draft_coin(traj[:, None], step, 0) < wrong_mil
+            drafts = jnp.where(bad, (drafts + 1) % cfg.vocab_size, drafts)
+        return drafts
+
+    def draft_tree(cfg, params, state, token, pos, width, depth):
+        # W independent draft chains from the root: branch b repeats the
+        # trajectory's true continuation, each token corrupted with the
+        # wrong rate under its OWN (traj, step, branch) coin — so the
+        # best accepted root-to-leaf path is the max over W partially-
+        # right chains, the controllable partial-acceptance workload the
+        # tree tests and benchmark exercise.  branch 0 == ``draft``.
+        traj = state["traj"][0]                           # (B,)
+        b = traj.shape[0]
+        tok = _true_token(params, traj)
+        drafts = jnp.broadcast_to(tok[:, None, None], (b, width, depth))
+        if wrong_mil:
+            dd = jnp.arange(1, depth + 1, dtype=jnp.int32)[None, None, :]
+            br = jnp.arange(width, dtype=jnp.int32)[None, :, None]
+            step = (jnp.asarray(pos, jnp.int32)[:, None, None] + dd
+                    - cfg.prompt_len) // cfg.tokens_per_step
+            bad = _draft_coin(traj[:, None, None], step, br) < wrong_mil
+            drafts = jnp.where(bad, (drafts + 1 + br) % cfg.vocab_size,
+                               drafts)
+        return drafts
 
     def verify_packed(cfg, params, tokens, state, seg, slots, starts,
                       lengths, block_rows=None):
@@ -163,13 +225,46 @@ def replay_model(phis: np.ndarray, *, prompt_len: int = 1,
             logits = jnp.zeros((c, cfg.vocab_size), jnp.float32)
         return logits, hidden, state
 
+    def verify_tree(cfg, params, tokens, state, seg, slots, starts,
+                    lengths, depths, ancestors, block_rows=None):
+        # tree verify: node c sits at sequence position starts[seg[c]] +
+        # depths[c] — the SAME bank lookup as decode_step at that
+        # position, whatever branch the node came from (the replay
+        # trajectory is a function of position only), so the accepted
+        # path's hidden states are bit-identical to one-token decode.
+        # No KV cache -> nothing to defer; ks/vs are None and commit_kv
+        # below is the no-op.
+        traj_all = state["traj"][0]                       # (B,)
+        seg = jnp.asarray(seg, jnp.int32)
+        starts = jnp.asarray(starts, jnp.int32)
+        depths = jnp.asarray(depths, jnp.int32)
+        row = jnp.asarray(slots, jnp.int32)[seg]          # batch row per pos
+        traj = traj_all[row]                              # (C,)
+        c = tokens.shape[0]
+        step = (starts[seg] + depths - cfg.prompt_len) // cfg.tokens_per_step
+        bank = params["phis"]                             # (N, T, d)
+        hidden = bank[traj, jnp.clip(step, 0, bank.shape[1] - 1)]
+        if "answers" in params:
+            logits = jax.nn.one_hot(params["answers"][traj],
+                                    cfg.vocab_size, dtype=jnp.float32)
+        else:
+            logits = jnp.zeros((c, cfg.vocab_size), jnp.float32)
+        return logits, hidden, None, None
+
+    def commit_kv(cfg, state, ks, vs, slots, seg, positions, valid,
+                  block_rows=None):
+        return state                 # replay carries no KV cache
+
     return Model(cfg=cfg, decls=None, forward=None, prefill=prefill,
                  decode_step=decode_step, init_decode_state=init_decode_state,
                  decode_geometry=lambda shape: (shape.seq_len, None),
                  prefill_chunk=prefill_chunk,
                  prefill_packed=prefill_packed,
                  verify_packed=verify_packed,
-                 draft=draft)
+                 draft=draft,
+                 verify_tree=verify_tree,
+                 commit_kv=commit_kv,
+                 draft_tree=draft_tree)
 
 
 def replay_params(phis: np.ndarray, answers: Optional[np.ndarray] = None):

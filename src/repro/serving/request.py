@@ -119,6 +119,15 @@ class Request:
     accepted_lens: List[int] = dataclasses.field(default_factory=list)
     #                                       per-step accepted length g (incl.
     #                                       the current token; g in [0, k])
+    # tree speculative decode (PR 10; stay 0/empty without spec_tree)
+    tree_nodes: int = 0                   # tree nodes proposed (excl. roots)
+    tree_path_lens: List[int] = dataclasses.field(default_factory=list)
+    #                                       per-step accepted root-to-leaf
+    #                                       path length (== accepted_lens
+    #                                       entries, kept separate so linear
+    #                                       and tree runs aggregate apart)
+    draft_hits: int = 0                   # shared draft-cache lookups that hit
+    draft_misses: int = 0                 # ... that missed (self-draft fallback)
 
     @property
     def done(self) -> bool:
@@ -215,6 +224,15 @@ class FleetMetrics:
     acceptance_rate: float = 0.0    # accepted / proposed (0 when disabled)
     accepted_len_p50: float = 0.0   # per-step accepted length percentiles
     accepted_len_p99: float = 0.0   # (incl. the block's current token)
+    # tree speculative decode (PR 10): tree-shape + shared-draft-cache
+    # accounting, same CANCELLED exclusion as the linear spec stats
+    tree_nodes_proposed: int = 0    # candidate tree nodes verified (excl.
+    #                                 roots; 0 for linear/disabled runs)
+    tree_path_accepted_p50: float = 0.0  # accepted root-to-leaf path length
+    tree_path_accepted_p99: float = 0.0  # percentiles (incl. the root)
+    draft_cache_hits: int = 0       # shared draft-cache lookups that hit
+    draft_cache_misses: int = 0     # ... that missed (self-draft fallback)
+    draft_cache_hit_rate: float = 0.0    # hits / lookups (0 when disabled)
 
     def row(self) -> Dict[str, float]:
         return {
@@ -224,6 +242,12 @@ class FleetMetrics:
             "acceptance_rate": self.acceptance_rate,
             "accepted_len_p50": self.accepted_len_p50,
             "accepted_len_p99": self.accepted_len_p99,
+            "tree_nodes_proposed": self.tree_nodes_proposed,
+            "tree_path_accepted_p50": self.tree_path_accepted_p50,
+            "tree_path_accepted_p99": self.tree_path_accepted_p99,
+            "draft_cache_hits": self.draft_cache_hits,
+            "draft_cache_misses": self.draft_cache_misses,
+            "draft_cache_hit_rate": self.draft_cache_hit_rate,
             "n_hosts": self.n_hosts,
             "routed_affine": self.routed_affine,
             "samples_cancelled": self.samples_cancelled,
@@ -285,3 +309,46 @@ def latency_stats(requests: List[Request]
     return (float(np.percentile(ttft, 50)) if ttft.size else 0.0,
             float(np.percentile(ttft, 99)) if ttft.size else 0.0,
             per_class)
+
+
+def spec_stats(requests: List[Request]) -> Dict[str, float]:
+    """Speculative-decode aggregation over a served population, as
+    ``FleetMetrics`` keyword arguments: linear acceptance accounting,
+    tree-path percentiles and shared draft-cache hit rates, all computed
+    purely from per-request counters.
+
+    The ONE home for this math: ``OrcaScheduler._metrics`` and the
+    ``FleetRouter``'s cross-host aggregation both call it (the router over
+    the union of every host's requests), so fleet-level percentiles are
+    recomputed over the union rather than averaged across per-host
+    percentiles, and the two layers can never drift apart.  CANCELLED
+    samples are excluded throughout — a consensus kill says nothing about
+    the drafter (the same exclusion the TTFT tails use).
+    """
+    live = [r for r in requests if r.state is not RequestState.CANCELLED]
+    sp = sum(r.spec_proposed for r in live)
+    sa = sum(r.spec_accepted for r in live)
+    alens = np.asarray([g for r in live for g in r.accepted_lens],
+                       np.float64)
+    plens = np.asarray([g for r in live for g in r.tree_path_lens],
+                       np.float64)
+    hits = sum(r.draft_hits for r in live)
+    misses = sum(r.draft_misses for r in live)
+    return {
+        "spec_tokens_proposed": int(sp),
+        "spec_tokens_accepted": int(sa),
+        "acceptance_rate": float(sa / sp) if sp else 0.0,
+        "accepted_len_p50": (float(np.percentile(alens, 50))
+                             if alens.size else 0.0),
+        "accepted_len_p99": (float(np.percentile(alens, 99))
+                             if alens.size else 0.0),
+        "tree_nodes_proposed": int(sum(r.tree_nodes for r in live)),
+        "tree_path_accepted_p50": (float(np.percentile(plens, 50))
+                                   if plens.size else 0.0),
+        "tree_path_accepted_p99": (float(np.percentile(plens, 99))
+                                   if plens.size else 0.0),
+        "draft_cache_hits": int(hits),
+        "draft_cache_misses": int(misses),
+        "draft_cache_hit_rate": (float(hits / (hits + misses))
+                                 if (hits + misses) else 0.0),
+    }

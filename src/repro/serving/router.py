@@ -55,8 +55,9 @@ from repro.serving.kv_pool import prompt_key
 from repro.serving.policy import (HostPressure, PlacementPolicy,
                                   SchedulingPolicy, make_placement,
                                   make_policy)
-from repro.serving.request import (FleetMetrics, Request, RequestState,
-                                   latency_stats)
+from repro.serving.draft_cache import DraftCache
+from repro.serving.request import (FleetMetrics, Request, latency_stats,
+                                   spec_stats)
 from repro.serving.scheduler import OrcaScheduler, _pick, _UNSET
 
 
@@ -107,13 +108,24 @@ class FleetRouter:
                     f"{self.n_hosts} or lowering n_hosts")
             shares = [per + (1 if i < rem else 0)
                       for i in range(self.n_hosts)]
+        # ONE shared draft cache for the whole fleet (prefix-registry
+        # style): a continuation accepted on any host drafts for every
+        # other host's traffic.  Host-locally safe — hosts step in
+        # threads but lookups/promotions happen in the scheduler's
+        # host-side composer/collection, and the cache is pure Python
+        spec_on = bool(cfg.spec_tokens or cfg.spec_tree)
+        self.draft_cache: Optional[DraftCache] = (
+            DraftCache(capacity=cfg.draft_cache_size)
+            if spec_on and cfg.draft_cache_size
+            and getattr(model, "self_draft", False) else None)
         self.hosts: List[OrcaScheduler] = []
         for share in shares:
             host_cfg = dataclasses.replace(
                 cfg, n_hosts=1, num_blocks=share,
                 policy=_clone_policy(cfg.policy))
             self.hosts.append(OrcaScheduler(
-                model, params, probe_config, theta, host_cfg))
+                model, params, probe_config, theta, host_cfg,
+                draft_cache=self.draft_cache))
         # mirror the resolved single-host attributes callers introspect
         h0 = self.hosts[0]
         self.n_slots = h0.n_slots            # PER HOST
@@ -318,22 +330,12 @@ class FleetRouter:
         groups = [g for g in self.groups if g.size >= 2]
         tps, dmn = self.cfg.tokens_per_step, self.cfg.max_new_tokens
         g_sav = [g.savings(tps, dmn) for g in groups]
-        # speculative acceptance over the request UNION (counters sum via
-        # the requests themselves; percentiles recompute, never averaged)
-        live = [r for r in requests
-                if r.state is not RequestState.CANCELLED]
-        sp = sum(r.spec_proposed for r in live)
-        sa = sum(r.spec_accepted for r in live)
-        alens = np.asarray([g for r in live for g in r.accepted_lens],
-                           np.float64)
+        # speculative acceptance over the request UNION via the ONE
+        # shared helper the scheduler's _metrics also calls (counters sum
+        # via the requests themselves; percentiles recompute over the
+        # union, never averaged across hosts)
         return FleetMetrics(
-            spec_tokens_proposed=int(sp),
-            spec_tokens_accepted=int(sa),
-            acceptance_rate=(sa / sp if sp else 0.0),
-            accepted_len_p50=(float(np.percentile(alens, 50))
-                              if alens.size else 0.0),
-            accepted_len_p99=(float(np.percentile(alens, 99))
-                              if alens.size else 0.0),
+            **spec_stats(list(requests)),
             n_requests=n, n_slots=self.n_slots, engine_steps=steps,
             active_slot_steps=active, wall_time_s=wall,
             requests_per_s=n / wall, tokens_per_s=total_tokens / wall,

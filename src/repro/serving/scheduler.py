@@ -96,8 +96,9 @@ from repro.serving.groups import RequestGroup, group_requests
 from repro.serving.kv_pool import BlockPool, blocks_needed, prompt_key
 from repro.serving.policy import (ComposeView, HostPressure,
                                   SchedulingPolicy, make_policy)
+from repro.serving.draft_cache import DraftCache
 from repro.serving.request import (FleetMetrics, Request, RequestState,
-                                   latency_stats)
+                                   latency_stats, spec_stats)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -162,7 +163,9 @@ class OrcaScheduler:
                  pack_max: int = _UNSET,
                  consensus: Union[GroupCalibrator, float, None] = _UNSET,
                  preemption: bool = _UNSET,
-                 spec_tokens: Optional[int] = _UNSET):
+                 spec_tokens: Optional[int] = _UNSET,
+                 spec_tree: Optional[str] = _UNSET,
+                 draft_cache: Optional[DraftCache] = None):
         self.model, self.params, self.pc, self.theta, self.cfg = \
             model, params, pc, theta, cfg
         n_slots = int(_pick(n_slots, cfg.n_slots))
@@ -214,6 +217,49 @@ class OrcaScheduler:
                 "silence this",
                 RuntimeWarning, stacklevel=2)
             self.spec_tokens = None       # family without verify_packed
+        # tree speculative decode: "W.D" generalizes the verify block to
+        # 1 + W*D candidate NODES per slot; self.spec_tokens becomes that
+        # node count so every budget computation below stays unit-correct
+        spec_tree = _pick(spec_tree, cfg.spec_tree)
+        self.spec_tree: Optional[Tuple[int, int]] = None
+        if spec_tree:
+            if self.spec_tokens is not None:
+                raise ValueError(
+                    f"spec_tree={spec_tree!r} with spec_tokens="
+                    f"{self.spec_tokens} is ambiguous — they are two "
+                    "shapes of the same verify segment; fix by passing "
+                    "ONE of them")
+            if isinstance(spec_tree, (tuple, list)):
+                shape = (int(spec_tree[0]), int(spec_tree[1]))
+            else:
+                shape = dataclasses.replace(
+                    cfg, spec_tree=str(spec_tree),
+                    spec_tokens=None).tree_shape()
+            if not model.supports_tree:
+                warnings.warn(
+                    f"spec_tree={spec_tree!r} ignored: model family "
+                    f"{model.cfg.name!r} has no tree speculative decode "
+                    "— serving falls back to one-token decode; drop "
+                    "spec_tree or use a family with supports_tree=True "
+                    "to silence this",
+                    RuntimeWarning, stacklevel=2)
+            else:
+                self.spec_tree = shape
+                self.spec_tokens = 1 + shape[0] * shape[1]
+        # shared n-gram draft cache: the serving layer's drafter for
+        # families whose own draft is the degenerate repeat-last-token
+        # self-draft.  The FleetRouter passes ONE instance to every host
+        # (prefix-registry style); explicit injection also lets tests /
+        # callers front ANY family with it
+        if draft_cache is not None:
+            self.draft_cache: Optional[DraftCache] = draft_cache
+        elif (self.spec_tokens is not None and model.self_draft
+                and cfg.draft_cache_size):
+            self.draft_cache = DraftCache(capacity=cfg.draft_cache_size)
+        else:
+            self.draft_cache = None
+        if self.spec_tokens is None:
+            self.draft_cache = None       # nothing to draft for
         if token_budget is not None:
             token_budget = int(token_budget)
             floor = n_slots if (self.chunk_tokens is not None
@@ -368,7 +414,10 @@ class OrcaScheduler:
                     interpret=self.interpret, paged=device_paged,
                     block_size=self.block_size, num_blocks=num_blocks,
                     chunk_tokens=self.chunk_tokens,
-                    pack_max=self.pack_max, spec_tokens=self.spec_tokens)
+                    pack_max=self.pack_max,
+                    spec_tokens=(None if self.spec_tree
+                                 else self.spec_tokens),
+                    spec_tree=self.spec_tree)
         elif self._engine is None or self._engine.cache_len < cache_len:
             if self._engine is not None and self._resident():
                 self._refuse_rebuild("an engine cache_len",
@@ -377,7 +426,10 @@ class OrcaScheduler:
                 self.model, self.params, self.pc, self.theta, self.cfg,
                 self.n_slots, cache_len, probe_impl=self.probe_impl,
                 interpret=self.interpret, chunk_tokens=self.chunk_tokens,
-                pack_max=self.pack_max, spec_tokens=self.spec_tokens)
+                pack_max=self.pack_max,
+                spec_tokens=(None if self.spec_tree
+                             else self.spec_tokens),
+                spec_tree=self.spec_tree)
         return self._engine
 
     # ------------------------------------------------------------------
@@ -394,6 +446,22 @@ class OrcaScheduler:
 
     def _request_blocks(self, req: Request) -> int:
         return blocks_needed(self._request_tokens(req), self.block_size)
+
+    def _draft_context(self, req: Request, before: int = 0) -> List[int]:
+        """The request's last draft-cache n-gram of committed tokens
+        (prompt tail + decoded tokens), as plain ints.  ``before`` drops
+        that many just-landed trailing tokens — the PRE-step context the
+        promotion path keys on."""
+        n = self.draft_cache.ngram
+        toks = req.tokens[:len(req.tokens) - before] if before \
+            else req.tokens
+        if len(toks) >= n:
+            return [int(t) for t in toks[-n:]]
+        prompt = (np.asarray(req.inputs["tokens"][0]).tolist()
+                  if "tokens" in req.inputs else [])
+        need = n - len(toks)
+        return ([int(t) for t in prompt[max(len(prompt) - need, 0):]]
+                + [int(t) for t in toks])
 
     def _sharing_key(self, req: Request) -> Optional[str]:
         if not (self.prefix_sharing and self._engine is not None
@@ -869,6 +937,8 @@ class OrcaScheduler:
         # the next fuse into one block-diagonal chunk
         # (pack_chunks=False: one request per chunk, PR-4's composer)
         spec_lens = None
+        spec_drafts = spec_have = None
+        draft_ctx: Dict[int, List[int]] = {}
         spec_total = len(running)
         if self.spec_tokens:
             spec_lens = np.zeros((self.n_slots,), np.int32)
@@ -877,15 +947,44 @@ class OrcaScheduler:
             budget_left = (self.token_budget - len(running)
                            if self.token_budget is not None
                            else self.n_slots * self.spec_tokens)
+            # tree mode: the accepted path is at most one node per DEPTH,
+            # so extra nodes beyond width * (remaining - 1) can never
+            # commit — the depth cap that keeps a near-budget slot from
+            # claiming nodes it cannot use (width 1 == the linear cap)
+            width = self.spec_tree[0] if self.spec_tree else 1
             for slot in sorted(running):
                 req = running[slot]
                 max_new = req.max_new_tokens or self.cfg.max_new_tokens
                 remaining = max_new - len(req.tokens)
-                extra = max(min(self.spec_tokens - 1, remaining - 1,
-                                budget_left), 0)
+                extra = max(min(self.spec_tokens - 1,
+                                width * (remaining - 1), budget_left), 0)
                 spec_lens[slot] = 1 + extra
                 budget_left -= extra
             spec_total = int(spec_lens.sum())
+            if self.draft_cache is not None:
+                # shared-cache drafts for every slot actually drafting
+                # this step; misses keep have=False — the engine falls
+                # back to the family drafter inside the same executable
+                if self.spec_tree:
+                    w_, d_ = self.spec_tree
+                    spec_drafts = np.zeros((self.n_slots, w_, d_), np.int32)
+                else:
+                    w_, d_ = 1, self.spec_tokens - 1
+                    spec_drafts = np.zeros((self.n_slots, d_), np.int32)
+                spec_have = np.zeros((self.n_slots,), bool)
+                for slot in sorted(running):
+                    if spec_lens[slot] < 2:
+                        continue
+                    req = running[slot]
+                    ctx = self._draft_context(req)
+                    draft_ctx[slot] = ctx
+                    tree, hit = self.draft_cache.lookup(ctx, w_, d_)
+                    spec_drafts[slot] = tree if self.spec_tree else tree[0]
+                    spec_have[slot] = hit
+                    if hit:
+                        req.draft_hits += 1
+                    else:
+                        req.draft_misses += 1
         chunk = None
         if prefilling:
             share = self.policy.prefill_share(self._compose_view(
@@ -929,8 +1028,9 @@ class OrcaScheduler:
             spec_total + (chunk.total_tokens if chunk else 0))
 
         if self.spec_tokens:
-            view = (eng.step(chunk, spec_lens=spec_lens) if chunked
-                    else eng.step(spec_lens=spec_lens))
+            kw = dict(spec_lens=spec_lens, spec_drafts=spec_drafts,
+                      spec_have=spec_have)
+            view = eng.step(chunk, **kw) if chunked else eng.step(**kw)
         else:
             view = eng.step(chunk) if chunked else eng.step()
         steps = self._steps = self._steps + 1
@@ -955,17 +1055,31 @@ class OrcaScheduler:
                 req.spec_accepted += max(g - 1, 0)
                 if lp > 0:
                     req.accepted_lens.append(g)
+                    if self.spec_tree:
+                        req.tree_nodes += max(lp - 1, 0)
+                        req.tree_path_lens.append(g)
                 stopped_now = bool(view.stopped[slot])
                 stop_at = int(view.stop_step[slot]) if stopped_now else -1
+                landed: List[int] = []
                 for j in range(g):
-                    req.tokens.append(int(view.seq[slot, j]))
+                    tok = int(view.seq[slot, j])
+                    req.tokens.append(tok)
+                    landed.append(tok)
                     self._total_tokens += 1
                     nsj = int(view.seq_n[slot, j])
                     if nsj > len(req.scores):
                         req.scores.append(float(view.seq_scores[slot, j]))
-                        req.answers.append(int(view.seq[slot, j]))
+                        req.answers.append(tok)
                     if stopped_now and nsj == stop_at:
                         break
+                if self.draft_cache is not None and landed:
+                    # promote what the VERIFIER accepted: the cache
+                    # learns exactly the continuations this traffic
+                    # commits, shared fleet-wide
+                    ctx = draft_ctx.get(slot)
+                    if ctx is None:
+                        ctx = self._draft_context(req, before=len(landed))
+                    self.draft_cache.observe(ctx, landed)
                 n_scores = int(view.n_scores[slot])
             else:
                 req.tokens.append(int(view.tokens[slot]))
@@ -1160,22 +1274,11 @@ class OrcaScheduler:
         # old per-group mean fraction survives as group_savings_mean)
         g_unspent = [max(g.budget_steps(tps, dmn) - g.steps_spent(), 0)
                      for g in real_groups]
-        # speculative-decode acceptance: CANCELLED siblings excluded —
-        # like the TTFT percentiles, a consensus kill mid-verify says
-        # nothing about the drafter's quality
-        live = [r for r in requests if r.state is not RequestState.CANCELLED]
-        sp = sum(r.spec_proposed for r in live)
-        sa = sum(r.spec_accepted for r in live)
-        alens = np.asarray([g for r in live for g in r.accepted_lens],
-                           np.float64)
+        # speculative-decode acceptance via the ONE shared helper
+        # (CANCELLED siblings excluded there; the FleetRouter calls the
+        # same function over the fleet union, so the two can never drift)
         return FleetMetrics(
-            spec_tokens_proposed=int(sp),
-            spec_tokens_accepted=int(sa),
-            acceptance_rate=(sa / sp if sp else 0.0),
-            accepted_len_p50=(float(np.percentile(alens, 50))
-                              if alens.size else 0.0),
-            accepted_len_p99=(float(np.percentile(alens, 99))
-                              if alens.size else 0.0),
+            **spec_stats(list(requests)),
             samples_cancelled=n_cancelled,
             consensus_groups=len(fired),
             consensus_steps=(float(np.mean([g.consensus_index

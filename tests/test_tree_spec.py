@@ -1,0 +1,715 @@
+"""Tree speculative decode + the fleet-wide shared draft cache.
+
+The tentpole invariants: the per-token ancestor mask equals its explicit
+root-path oracle (and collapses to the PR-9 block-causal chain at
+width 1, bit for bit); packed attention under a tree mask is
+pallas==jnp; serving with ``spec_tree="W.D"`` produces IDENTICAL stop
+decisions, token streams and score trajectories to one-token decode
+across tree shape x policy x packing x paged x int8 x forced preemption
+x grouped consensus; the width-1 tree serves step-for-step identically
+to PR-9 linear ``spec_tokens``; the token budget is never exceeded and
+pages always drain; ONE step executable covers every draft-cache
+hit/miss mix; spilling a mid-tree-verify slot restores bit-for-bit; and
+the scheduler and router aggregate speculation metrics through the SAME
+helper (they can never drift).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.probe import ProbeConfig, init_outer
+from repro.kernels import ref as R
+from repro.models import build
+from repro.models.attention import attn_prefill_packed, packed_chunk_mask
+from repro.serving import (ContinuousServingEngine, DraftCache, FleetRouter,
+                           OrcaScheduler, RequestState, ServeConfig,
+                           make_request, replay_model, replay_params,
+                           replay_requests, served_stop_times, spec_stats)
+
+from tests._hypothesis_stub import given, settings, st
+
+
+# ---------------------------------------------------------------------------
+# ancestor mask: fori_loop closure vs explicit root-path oracle
+
+def _comb_layout(n_segs, width, depth):
+    """The scheduler's BFS comb layout, packed contiguously: per segment
+    1 + width*depth nodes; node 0 is the root (self-pointing), node
+    1 + j*width + b is branch b at depth j+1, parent = root for j == 0
+    else the same branch one level up."""
+    kk = 1 + width * depth
+    seg, anc = [], []
+    for s in range(n_segs):
+        off = s * kk
+        seg.extend([s] * kk)
+        anc.append(off)                       # root -> itself
+        for j in range(depth):
+            for b in range(width):
+                i = 1 + j * width + b
+                anc.append(off if j == 0 else off + i - width)
+    return (jnp.asarray(seg, jnp.int32), jnp.asarray(anc, jnp.int32), kk)
+
+
+@pytest.mark.parametrize("n_segs,width,depth", [
+    (1, 2, 3), (2, 3, 2), (3, 1, 4), (2, 4, 1),
+])
+def test_ancestor_mask_matches_ref(n_segs, width, depth):
+    """The fori_loop reachability closure equals the python root-path
+    walk for comb trees of every aspect ratio, multi-segment packs
+    included — and padding never serves as a key."""
+    seg, anc, kk = _comb_layout(n_segs, width, depth)
+    c = n_segs * kk
+    valid = jnp.asarray([i % 5 != 3 for i in range(c)], bool)
+    got = packed_chunk_mask(seg, valid, anc)
+    want = R.packed_chunk_mask_ref(seg, valid, anc)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # no token ever attends another segment's nodes
+    s = np.asarray(seg)
+    assert not np.asarray(got)[s[:, None] != s[None, :]].any()
+    # every node attends itself when valid
+    diag = np.diag(np.asarray(got))
+    np.testing.assert_array_equal(diag, np.asarray(valid))
+
+
+def test_ancestor_mask_random_trees_match_ref():
+    """Arbitrary (non-comb) parent pointers: any forest where parents
+    precede children within their segment agrees with the oracle."""
+    rs = np.random.RandomState(7)
+    for trial in range(5):
+        bounds = [0, 4, 9, 14]
+        c = bounds[-1]
+        seg = np.zeros((c,), np.int32)
+        anc = np.zeros((c,), np.int32)
+        for s in range(len(bounds) - 1):
+            lo, hi = bounds[s], bounds[s + 1]
+            seg[lo:hi] = s
+            anc[lo] = lo                       # root self-points
+            for i in range(lo + 1, hi):
+                anc[i] = rs.randint(lo, i)     # any earlier node
+        valid = rs.rand(c) > 0.2
+        got = packed_chunk_mask(jnp.asarray(seg), jnp.asarray(valid),
+                                jnp.asarray(anc))
+        want = R.packed_chunk_mask_ref(jnp.asarray(seg), jnp.asarray(valid),
+                                       jnp.asarray(anc))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=f"trial {trial}")
+
+
+def test_width_one_tree_mask_equals_causal_chain():
+    """The degenerate width-1 tree (each node's parent is the previous
+    segment token) IS the PR-9 linear verify: its ancestor mask equals
+    the block-causal chunk mask bit for bit."""
+    seg = jnp.asarray([0, 0, 0, 1, 1, 1, 1, 2], jnp.int32)
+    c = int(seg.shape[0])
+    s = np.asarray(seg)
+    anc = np.arange(c, dtype=np.int32)
+    for i in range(1, c):
+        if s[i] == s[i - 1]:
+            anc[i] = i - 1                     # chain; roots self-point
+    valid = jnp.asarray([1, 1, 0, 1, 1, 1, 1, 1], bool)
+    tree = packed_chunk_mask(seg, valid, jnp.asarray(anc))
+    causal = packed_chunk_mask(seg, valid)
+    np.testing.assert_array_equal(np.asarray(tree), np.asarray(causal))
+
+
+def test_packed_attention_tree_mask_pallas_equals_jnp():
+    """Full packed attention under an ancestor mask: the pallas kernel's
+    cache partials + the masked within-chunk merge equal the jnp
+    single-softmax path.  The kernel never sees the tree — the ancestor
+    structure lives entirely in the merge mask."""
+    seg, anc, kk = _comb_layout(2, 2, 2)       # two 5-node trees
+    c = int(seg.shape[0])
+    h, kv, d, bs, p, nb = 8, 4, 64, 8, 16, 4
+    ks = jax.random.split(jax.random.PRNGKey(41), 5)
+    q = jax.random.normal(ks[0], (c, h, d))
+    k_new = jax.random.normal(ks[1], (c, kv, d))
+    v_new = jax.random.normal(ks[2], (c, kv, d))
+    cache = {"k": jax.random.normal(ks[3], (p, kv, bs, d)),
+             "v": jax.random.normal(ks[4], (p, kv, bs, d))}
+    tables = jax.random.randint(ks[0], (2, nb), 0, p)
+    starts = jnp.asarray([13, 6], jnp.int32)
+    mask = packed_chunk_mask(seg, jnp.ones((c,), bool), anc)
+    out_j = attn_prefill_packed(q, k_new, v_new, cache, seg, starts, mask,
+                                jnp.float32, seg_tables=tables, impl="jnp")
+    out_p = attn_prefill_packed(q, k_new, v_new, cache, seg, starts, mask,
+                                jnp.float32, seg_tables=tables,
+                                impl="pallas", interpret=True)
+    np.testing.assert_allclose(np.asarray(out_j), np.asarray(out_p),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# ServeConfig: spec_tree parsing + validation
+
+def test_spec_tree_config_validation():
+    assert ServeConfig(spec_tree="2.3").tree_shape() == (2, 3)
+    # tuples and "" normalize like the other CLI-facing optionals
+    assert ServeConfig(spec_tree=(2, 3)).spec_tree == "2.3"
+    assert ServeConfig(spec_tree="").spec_tree is None
+    with pytest.raises(ValueError, match="not 'W.D'"):
+        ServeConfig(spec_tree="2x3").validate()
+    with pytest.raises(ValueError, match="is ambiguous"):
+        ServeConfig(spec_tree="2.2", spec_tokens=4).validate()
+    with pytest.raises(ValueError, match="width >= 1"):
+        ServeConfig(spec_tree="0.3").validate()
+    # 1 + W*D nodes must fit under chunk_tokens and token_budget
+    with pytest.raises(ValueError, match="chunk_tokens"):
+        ServeConfig(spec_tree="2.3", chunk_tokens=7).validate()
+    with pytest.raises(ValueError, match="token_budget"):
+        ServeConfig(spec_tree="3.3", token_budget=9).validate()
+    ServeConfig(spec_tree="2.2", chunk_tokens=8, token_budget=12).validate()
+    with pytest.raises(ValueError, match="draft_cache_size"):
+        ServeConfig(draft_cache_size=-1).validate()
+
+
+def test_spec_tree_warns_and_falls_back_without_support():
+    cfg = get_config("rwkv6_1b6").reduced()
+    model = build(cfg)
+    assert not model.supports_tree
+    pc = ProbeConfig(d_phi=cfg.d_model, smooth_window=2)
+    theta = init_outer(pc, jax.random.PRNGKey(1))
+    scfg = ServeConfig(tokens_per_step=2, max_new_tokens=6, lam=2.0,
+                       burn_in=0, spec_tree="2.2")
+    with pytest.warns(RuntimeWarning, match="ignored"):
+        sched = OrcaScheduler(model, None, pc, theta, scfg, n_slots=2)
+    assert sched.spec_tree is None and sched.spec_tokens is None
+    assert sched.draft_cache is None
+
+
+def test_spec_tree_with_spec_tokens_is_rejected():
+    model = replay_model(np.zeros((2, 4, 8), np.float32))
+    pc = ProbeConfig(d_phi=8, smooth_window=2)
+    theta = init_outer(pc, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="ambiguous"):
+        OrcaScheduler(model, replay_params(np.zeros((2, 4, 8), np.float32)),
+                      pc, theta, ServeConfig(max_new_tokens=4),
+                      n_slots=1, spec_tokens=3, spec_tree="2.2")
+
+
+# ---------------------------------------------------------------------------
+# DraftCache: the fleet-wide shared n-gram drafter
+
+def test_draft_cache_observe_then_lookup():
+    dc = DraftCache(capacity=16, ngram=2, fanout=2, store_len=4)
+    dc.observe([1, 2, 3], [4, 5, 6])
+    drafts, hit = dc.lookup([2, 3], width=2, depth=3)
+    assert hit and dc.hits == 1
+    np.testing.assert_array_equal(drafts[0], [4, 5, 6])
+    # a second continuation of the same n-gram fills branch 1 (MRU first)
+    dc.observe([1, 2, 3], [7, 8, 9])
+    drafts, hit = dc.lookup([2, 3], width=2, depth=3)
+    assert hit
+    np.testing.assert_array_equal(drafts[0], [7, 8, 9])
+    np.testing.assert_array_equal(drafts[1], [4, 5, 6])
+    # misses count and return the model-fallback signal
+    _, hit = dc.lookup([99, 98], width=2, depth=3)
+    assert not hit and dc.misses == 1
+    assert 0 < dc.hit_rate < 1
+
+
+def test_draft_cache_chained_extension_and_padding():
+    """Short stored continuations extend through chained lookups of
+    their own tail; depth beyond all knowledge pads the tail token."""
+    dc = DraftCache(capacity=16, ngram=2, fanout=2, store_len=2)
+    dc.observe([1, 2], [3, 4])                # (1,2) -> (3,4)
+    dc.observe([3, 4], [5, 6])                # (3,4) -> (5,6)
+    drafts, hit = dc.lookup([1, 2], width=1, depth=6)
+    assert hit
+    np.testing.assert_array_equal(drafts[0], [3, 4, 5, 6, 6, 6])
+
+
+def test_draft_cache_lru_eviction_and_fanout_trim():
+    dc = DraftCache(capacity=2, ngram=1, fanout=2, store_len=2)
+    dc.observe([1], [10])
+    dc.observe([2], [20])
+    dc.observe([3], [30])                     # evicts the LRU key
+    assert len(dc) == 2
+    _, hit = dc.lookup([1], 1, 1)
+    assert not hit                            # (1,) was evicted
+    for t in (40, 41, 42):
+        dc.observe([3], [t])
+    drafts, hit = dc.lookup([3], width=3, depth=1)
+    assert hit
+    # fanout=2: only the two most recent survive, cycled across branches
+    np.testing.assert_array_equal(drafts[:, 0], [42, 41, 42])
+
+
+def test_draft_cache_prefix_supersede_dedup():
+    """Re-accepting a longer continuation of the same n-gram replaces
+    its shorter prefix instead of duplicating it."""
+    dc = DraftCache(capacity=8, ngram=1, fanout=4, store_len=4)
+    dc.observe([1], [2])
+    dc.observe([1], [2, 3, 4])
+    drafts, hit = dc.lookup([1], width=2, depth=3)
+    assert hit
+    np.testing.assert_array_equal(drafts[0], [2, 3, 4])
+    np.testing.assert_array_equal(drafts[1], [2, 3, 4])   # cycled, not (2,)
+
+
+def test_draft_cache_is_deterministic():
+    def run():
+        dc = DraftCache(capacity=32, ngram=3, fanout=4, store_len=4)
+        rs = np.random.RandomState(3)
+        out = []
+        for _ in range(50):
+            ctx = rs.randint(0, 5, size=3).tolist()
+            dc.observe(ctx, rs.randint(0, 5, size=4).tolist())
+            d, h = dc.lookup(ctx, 2, 3)
+            out.append((d.tolist(), h))
+        return out, dc.hits, dc.misses, len(dc)
+    assert run() == run()
+
+
+# ---------------------------------------------------------------------------
+# replay fleets: byte-identical serving under partial acceptance
+
+def _tree_setup(seed=0, n=10, t=16, d=16, prompt_len=4, wrong=0.4):
+    rs = np.random.RandomState(seed)
+    bank = (rs.randn(n, t, d) * 0.6).astype(np.float32)
+    model = replay_model(bank, prompt_len=prompt_len,
+                         draft_wrong_rate=wrong)
+    params = replay_params(bank)
+    pc = ProbeConfig(d_phi=d, smooth_window=2)
+    theta = init_outer(pc, jax.random.PRNGKey(2))
+    theta["b0"] = jnp.asarray(0.4)
+    cfg = ServeConfig(tokens_per_step=1, max_new_tokens=t, lam=0.62,
+                      burn_in=2)
+    return model, params, pc, theta, cfg, bank
+
+
+def _reqs(bank, ids, prompt_len=4):
+    return [make_request(np.full((prompt_len,), i, np.int64),
+                         max_new_tokens=int(bank.shape[1]))
+            for i in ids]
+
+
+def _assert_identical(done_a, done_b, *, exact_scores=True, atol=1e-4):
+    assert [r.stop_step for r in done_a] == [r.stop_step for r in done_b]
+    assert [r.steps_run for r in done_a] == [r.steps_run for r in done_b]
+    assert [r.tokens for r in done_a] == [r.tokens for r in done_b]
+    for ra, rb in zip(done_a, done_b):
+        a, b = np.asarray(ra.scores), np.asarray(rb.scores)
+        if exact_scores:
+            np.testing.assert_array_equal(a, b)
+        else:
+            np.testing.assert_allclose(a, b, atol=atol)
+
+
+@pytest.mark.parametrize("tree", ["1.3", "2.2", "3.2", "2.3"])
+def test_replay_tree_serves_identical_and_saves_steps(tree):
+    """Partial-acceptance tree fleets: stops, tokens and scores
+    byte-equal to one-token decode for every tree aspect ratio, with
+    fewer engine steps and populated tree metrics."""
+    model, params, pc, theta, cfg, bank = _tree_setup()
+    ids = range(bank.shape[0])
+    base = OrcaScheduler(model, params, pc, theta, cfg, n_slots=3)
+    done_o, fleet_o = base.run(_reqs(bank, ids))
+    sched = OrcaScheduler(model, params, pc, theta, cfg, n_slots=3,
+                          spec_tree=tree)
+    done_s, fleet_s = sched.run(_reqs(bank, ids))
+    _assert_identical(done_o, done_s)
+    assert fleet_s.engine_steps < fleet_o.engine_steps
+    assert fleet_s.tree_nodes_proposed > 0
+    assert fleet_s.tree_nodes_proposed == sum(r.tree_nodes for r in done_s)
+    assert fleet_s.tree_path_accepted_p99 >= fleet_s.tree_path_accepted_p50
+    assert 0 < fleet_s.acceptance_rate <= 1.0
+    counts = sched._engine.compile_counts()
+    assert counts["step"] == 1, counts
+
+
+def test_width_one_tree_equals_linear_spec_step_for_step():
+    """spec_tree='1.3' IS spec_tokens=4: the same done lists, the same
+    engine step count, the same acceptance counters — the probe kernel
+    and acceptance rule are shared, not merely equivalent."""
+    model, params, pc, theta, cfg, bank = _tree_setup(wrong=0.4)
+    ids = range(bank.shape[0])
+    lin = OrcaScheduler(model, params, pc, theta, cfg, n_slots=3,
+                        spec_tokens=4)
+    done_l, fleet_l = lin.run(_reqs(bank, ids))
+    tr = OrcaScheduler(model, params, pc, theta, cfg, n_slots=3,
+                       spec_tree="1.3")
+    done_t, fleet_t = tr.run(_reqs(bank, ids))
+    _assert_identical(done_l, done_t)
+    assert fleet_t.engine_steps == fleet_l.engine_steps
+    assert fleet_t.spec_tokens_proposed == fleet_l.spec_tokens_proposed
+    assert fleet_t.spec_tokens_accepted == fleet_l.spec_tokens_accepted
+
+
+def test_tree_consensus_groups_identical_and_cancelled_excluded():
+    """Grouped consensus under tree decode: same groups fire at the same
+    step, same siblings cancel, CANCELLED samples excluded from both the
+    acceptance and the tree stats."""
+    n_groups, gsz, t = 3, 3, 10
+    n = n_groups * gsz
+    rs = np.random.RandomState(6)
+    drift = np.linspace(0, 1.0, t)[None, :, None]
+    bank = (rs.randn(n, t, 8) * 0.3
+            + drift * rs.rand(n, 1, 8)).astype(np.float32)
+    answers = np.repeat(np.arange(n_groups), gsz)
+    model = replay_model(bank, answers=answers, draft_wrong_rate=0.35)
+    params = replay_params(bank, answers=answers)
+    pc = ProbeConfig(d_phi=8, smooth_window=2)
+    theta = init_outer(pc, jax.random.PRNGKey(4))
+    theta["b0"] = jnp.asarray(1.5)
+    cfg = ServeConfig(tokens_per_step=1, max_new_tokens=t, lam=2.0,
+                      burn_in=2)
+
+    def reqs():
+        out = replay_requests([t] * n)
+        for i, r in enumerate(out):
+            r.group_id, r.sample_idx = int(i // gsz), int(i % gsz)
+        return out
+
+    runs = {}
+    for tree in (None, "2.2"):
+        sched = OrcaScheduler(model, params, pc, theta, cfg, n_slots=4,
+                              paged=True, block_size=4, consensus=0.8,
+                              spec_tree=tree)
+        done, fleet = sched.run(reqs())
+        runs[tree] = (done, fleet, sched.groups)
+        assert fleet.consensus_groups == n_groups
+        assert sched.pool.num_free == sched.pool.num_usable
+        sched.pool.check()
+    done_o, fleet_o, grp_o = runs[None]
+    done_s, fleet_s, grp_s = runs["2.2"]
+    assert [r.state for r in done_s] == [r.state for r in done_o]
+    # the group OUTCOMES are invariant; a doomed sibling's score count at
+    # the cancel instant is not (partial acceptance de-phases siblings,
+    # so the cancel lands mid-block) — the contract covers survivors
+    assert ([ (g.consensus_answer, g.consensus_agreement) for g in grp_s]
+            == [(g.consensus_answer, g.consensus_agreement) for g in grp_o])
+    assert fleet_s.samples_cancelled == fleet_o.samples_cancelled
+    for rs_, ro in zip(done_s, done_o):
+        if ro.state is not RequestState.CANCELLED:
+            assert rs_.stop_step == ro.stop_step
+            np.testing.assert_array_equal(np.asarray(rs_.scores),
+                                          np.asarray(ro.scores))
+    live = [r for r in done_s if r.state is not RequestState.CANCELLED]
+    assert fleet_s.tree_nodes_proposed == sum(r.tree_nodes for r in live)
+    cancelled = [r for r in done_s if r.state is RequestState.CANCELLED]
+    assert cancelled and any(r.tree_nodes for r in cancelled)
+
+
+def test_tree_forced_preemption_is_stop_invariant():
+    """Tree fleets under REAL contention: mid-tree-verify residents are
+    spilled AND restored, stops stay byte-identical to the abundant
+    no-spec run."""
+    n, t, d = 9, 24, 16
+    rs = np.random.RandomState(0)
+    drift = np.linspace(0, 1.2, t)[None, :, None]
+    bank = (rs.randn(n, t, d) * 0.3
+            + drift * rs.rand(n, 1, d)).astype(np.float32)
+    theta = {"W0": (rs.randn(d) * 0.4).astype(np.float32),
+             "b0": np.float32(-0.2)}
+    pc = ProbeConfig(d_phi=d, smooth_window=4)
+    cfg = ServeConfig(tokens_per_step=1, max_new_tokens=t, lam=0.62,
+                      burn_in=3)
+    blocks_per_req = -(-(1 + t) // 4)
+
+    def fleet(n_slots, tree, num_blocks, wrong):
+        sched = OrcaScheduler(replay_model(bank, draft_wrong_rate=wrong),
+                              replay_params(bank), pc, theta, cfg,
+                              n_slots=n_slots, paged=True, block_size=4,
+                              num_blocks=num_blocks, spec_tree=tree)
+        reqs = replay_requests([t] * n)
+        for i, r in enumerate(reqs):
+            r.priority = [1, 1, 1, 0, 0, 2, 2, 2, 2][i]
+        return sched, reqs
+
+    sched_a, reqs_a = fleet(n, None, 1 + n * blocks_per_req, 0.0)
+    done_a, fleet_a = sched_a.run(reqs_a)
+    assert fleet_a.preemptions == 0
+    tau = served_stop_times(done_a, [t] * n)
+    assert 0 < int((tau < t).sum()) < n
+    sched_s, reqs_s = fleet(3, "2.2", 1 + 3 * blocks_per_req, 0.4)
+    done_s, fleet_s = sched_s.run(reqs_s)
+    assert fleet_s.preemptions > 0, "contention never materialized (vacuous)"
+    assert fleet_s.restores == fleet_s.preemptions
+    np.testing.assert_array_equal(served_stop_times(done_s, [t] * n), tau)
+    assert fleet_s.tree_nodes_proposed > 0
+    assert sched_s.pool.num_free == sched_s.pool.num_usable
+    sched_s.pool.check()
+    victims = [r for r in done_s if r.n_preempted > 0]
+    assert victims and all(r.tree_nodes > 0 for r in victims)
+
+
+def test_tree_engine_spill_restore_bit_for_bit():
+    """Engine-level: preempting a mid-tree-verify slot and restoring it
+    into a DIFFERENT physical slot replays the identical multi-token
+    future, node count and all."""
+    rs = np.random.RandomState(1)
+    bank = (rs.randn(4, 20, 16) * 0.5).astype(np.float32)
+    pc = ProbeConfig(d_phi=16, smooth_window=3)
+    theta = init_outer(pc, jax.random.PRNGKey(1))
+
+    def make():
+        cfg = ServeConfig(tokens_per_step=1, max_new_tokens=20, lam=0.9,
+                          burn_in=1)
+        return ContinuousServingEngine(
+            replay_model(bank, draft_wrong_rate=0.3), replay_params(bank),
+            pc, theta, cfg, n_slots=3, cache_len=26, spec_tree=(2, 2))
+    eng_a, eng_b = make(), make()
+    kk = 1 + 2 * 2
+    lens = np.asarray([kk, kk, 0], np.int32)
+    for eng in (eng_a, eng_b):
+        eng.admit(0, {"tokens": jnp.full((1, 1), 0, jnp.int32)}, 1)
+        eng.admit(1, {"tokens": jnp.full((1, 1), 1, jnp.int32)}, 1)
+        for _ in range(2):
+            eng.step(spec_lens=lens)
+    pos_before = int(eng_a.pos[0])
+    spill = eng_a.preempt(0)
+    assert spill.pos == pos_before
+    eng_a.restore(2, spill)
+    assert int(eng_a.pos[2]) == pos_before
+    lens_a = np.asarray([0, kk, kk], np.int32)
+    for i in range(4):
+        va = eng_a.step(spec_lens=lens_a)
+        vb = eng_b.step(spec_lens=lens)
+        for f in ("gen", "seq", "seq_scores", "seq_n", "stopped",
+                  "stop_step", "n_scores", "tokens"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(va, f))[2], np.asarray(getattr(vb, f))[0],
+                err_msg=f"step {i}: {f} diverged after restore")
+            np.testing.assert_array_equal(
+                np.asarray(getattr(va, f))[1], np.asarray(getattr(vb, f))[1],
+                err_msg=f"step {i}: {f} of the UNDISTURBED slot moved")
+
+
+# ---------------------------------------------------------------------------
+# the shared draft cache in the serving loop
+
+def test_draft_cache_feeds_fleet_and_keeps_stops_identical():
+    """An injected draft cache fronting the replay drafter: hit/miss
+    mixes serve through ONE executable, stops stay byte-identical, and
+    the hit/miss counters surface in the fleet metrics."""
+    model, params, pc, theta, cfg, bank = _tree_setup(wrong=0.6)
+    ids = list(range(bank.shape[0])) * 2      # repeat traffic -> cache hits
+    base = OrcaScheduler(model, params, pc, theta, cfg, n_slots=3)
+    done_o, _ = base.run(_reqs(bank, ids))
+    dc = DraftCache(capacity=256, ngram=3)
+    sched = OrcaScheduler(model, params, pc, theta, cfg, n_slots=3,
+                          spec_tree="2.2", draft_cache=dc)
+    assert sched.draft_cache is dc
+    done_s, fleet = sched.run(_reqs(bank, ids))
+    _assert_identical(done_o, done_s)
+    assert dc.hits + dc.misses > 0
+    assert fleet.draft_cache_hits == dc.hits > 0
+    assert fleet.draft_cache_misses == dc.misses
+    assert fleet.draft_cache_hit_rate == pytest.approx(dc.hit_rate)
+    counts = sched._engine.compile_counts()
+    assert counts["step"] == 1, counts
+
+
+def test_draft_cache_not_created_without_speculation():
+    model, params, pc, theta, cfg, bank = _tree_setup()
+    sched = OrcaScheduler(model, params, pc, theta, cfg, n_slots=2)
+    assert sched.draft_cache is None
+
+
+# ---------------------------------------------------------------------------
+# satellite: scheduler and router aggregate through the SAME helper
+
+def _metrics_spec_fields(m):
+    return {k: getattr(m, k)
+            for k in ("spec_tokens_proposed", "spec_tokens_accepted",
+                      "acceptance_rate", "accepted_len_p50",
+                      "accepted_len_p99", "tree_nodes_proposed",
+                      "tree_path_accepted_p50", "tree_path_accepted_p99",
+                      "draft_cache_hits", "draft_cache_misses",
+                      "draft_cache_hit_rate")}
+
+
+def test_scheduler_and_router_share_spec_aggregation():
+    """Both the scheduler's ``_metrics`` and the router's ``_aggregate``
+    must be ``spec_stats`` verbatim: their FleetMetrics spec fields equal
+    the helper applied to their own done lists, scheduler == router for
+    the same traffic."""
+    model, params, pc, theta, cfg, bank = _tree_setup(wrong=0.4)
+    ids = range(bank.shape[0])
+    sched = OrcaScheduler(model, params, pc, theta, cfg, n_slots=3,
+                          spec_tree="2.2")
+    done_s, fleet_s = sched.run(_reqs(bank, ids))
+    assert _metrics_spec_fields(fleet_s) == spec_stats(done_s)
+    rcfg = dataclasses.replace(cfg, spec_tree="2.2")
+    router = FleetRouter(model, params, pc, theta, rcfg, n_hosts=2,
+                         parallel_hosts=False)
+    done_r, fleet_r = router.run(_reqs(bank, ids))
+    assert _metrics_spec_fields(fleet_r) == spec_stats(done_r)
+    # same traffic, one host vs two: the union-level counters agree
+    assert (fleet_r.spec_tokens_accepted + fleet_r.spec_tokens_proposed) > 0
+
+
+def test_router_shares_one_draft_cache_across_hosts():
+    """The router's cache is the prefix-registry pattern: ONE object,
+    every host scheduler holds the same reference (a continuation
+    accepted on host 0 drafts for host 1)."""
+    model, params, pc, theta, cfg, bank = _tree_setup()
+    # replay has self_draft=False -> the router creates no cache ...
+    rcfg = dataclasses.replace(cfg, spec_tree="2.2")
+    router = FleetRouter(model, params, pc, theta, rcfg, n_hosts=2,
+                         parallel_hosts=False)
+    assert router.draft_cache is None
+    # ... but a self-draft family gets exactly one, shared by reference
+    scfg = get_config("smollm_360m").reduced()
+    dense = build(scfg)
+    assert dense.self_draft
+    pc2 = ProbeConfig(d_phi=scfg.d_model, smooth_window=2)
+    theta2 = init_outer(pc2, jax.random.PRNGKey(1))
+    dcfg = ServeConfig(tokens_per_step=2, max_new_tokens=6, lam=0.6,
+                       burn_in=1, spec_tree="2.2", n_slots=2)
+    router2 = FleetRouter(dense, None, pc2, theta2, dcfg, n_hosts=2,
+                          parallel_hosts=False)
+    assert isinstance(router2.draft_cache, DraftCache)
+    assert all(h.draft_cache is router2.draft_cache for h in router2.hosts)
+
+
+# ---------------------------------------------------------------------------
+# real model: tree decode == one-token decode through the dense family
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("smollm_360m").reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+@pytest.fixture(scope="module")
+def int8_model():
+    cfg = dataclasses.replace(get_config("smollm_360m").reduced(),
+                              kv_cache_dtype="int8")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _probe(mcfg, bias):
+    pc = ProbeConfig(d_phi=mcfg.d_model, smooth_window=2)
+    theta = init_outer(pc, jax.random.PRNGKey(1))
+    theta["b0"] = jnp.asarray(float(bias))
+    return pc, theta
+
+
+def _prompts(mcfg, lens, seed=31):
+    return [jax.random.randint(jax.random.PRNGKey(seed + i), (L,), 0,
+                               mcfg.vocab_size)
+            for i, L in enumerate(lens)]
+
+
+_ORACLE_CACHE = {}
+
+
+def _oracle(model, params):
+    key = id(model)
+    if key not in _ORACLE_CACHE:
+        pc, theta = _probe(model.cfg, 1.5)
+        cfg = ServeConfig(tokens_per_step=2, max_new_tokens=14, lam=0.6,
+                          burn_in=1)
+        prompts = _prompts(model.cfg, [5, 9, 3, 12, 7])
+        sched = OrcaScheduler(model, params, pc, theta, cfg, n_slots=2)
+        _ORACLE_CACHE[key] = sched.run([make_request(p) for p in prompts])
+    return _ORACLE_CACHE[key]
+
+
+@pytest.mark.parametrize("tree,paged,chunk,policy,pack,int8", [
+    ("2.2", False, None, "fifo", False, False),  # pure tree decode
+    ("3.2", False, 8, "priority", True, False),
+    ("2.2", True, None, "fifo", False, False),
+    ("2.3", True, 8, "ttft", True, False),
+    ("2.2", True, None, "fifo", False, True),    # int8 KV
+    ("1.3", True, 8, "priority", True, True),    # width-1 == linear, int8
+])
+def test_tree_stops_match_one_token_matrix(small_model, int8_model, tree,
+                                           paged, chunk, policy, pack, int8):
+    """spec_tree serves the SAME stop decisions, token streams and (to fp
+    tolerance) score trajectories as one-token decode across tree shape x
+    policy x packing x paged x int8 — through ONE step executable, with
+    every page back in the pool (off-path rollback never leaks)."""
+    model, params = int8_model if int8 else small_model
+    done_o, _ = _oracle(model, params)
+    pc, theta = _probe(model.cfg, 1.5)
+    cfg = ServeConfig(tokens_per_step=2, max_new_tokens=14, lam=0.6,
+                      burn_in=1)
+    prompts = _prompts(model.cfg, [5, 9, 3, 12, 7])
+    kw = dict(n_slots=2, spec_tree=tree, chunk_tokens=chunk, policy=policy,
+              pack_chunks=pack)
+    if chunk:
+        kw["token_budget"] = 14
+    if paged:
+        kw.update(paged=True, block_size=4, num_blocks=64)
+    sched = OrcaScheduler(model, params, pc, theta, cfg, **kw)
+    done_s, fleet = sched.run([make_request(p) for p in prompts])
+    # int8: same ulp-vs-quantization-bucket story as the linear matrix
+    _assert_identical(done_o, done_s, exact_scores=False,
+                      atol=(2e-2 if int8 else 1e-4))
+    counts = sched._engine.compile_counts()
+    assert counts["step"] == 1, counts
+    if chunk:
+        assert fleet.peak_step_tokens <= 14
+    if paged:
+        assert sched.pool.num_free == sched.pool.num_usable
+        sched.pool.check()
+        assert sched.pool.blocks_in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# sweep: tree shape x budget x packing x paged
+
+def _tree_sweep_case(width, depth, budget, pack, paged, lens):
+    """Serving invariants under arbitrary (tree shape, budget, packing,
+    paged, queue): the token budget is NEVER exceeded, ``pos`` only moves
+    forward, stops are byte-equal to the unsped oracle, pages drain."""
+    model, params, pc, theta, cfg, bank = _tree_setup(wrong=0.4)
+    n_slots = 3
+    kk = 1 + width * depth
+    chunk = max(kk + 1, 4)
+    budget = max(budget, n_slots, kk, chunk)
+    ids = [L % bank.shape[0] for L in lens]
+    oracle = OrcaScheduler(model, params, pc, theta, cfg, n_slots=n_slots)
+    done_o, _ = oracle.run(_reqs(bank, ids))
+    kw = dict(n_slots=n_slots, spec_tree=f"{width}.{depth}",
+              chunk_tokens=chunk, token_budget=budget, pack_chunks=pack)
+    if paged:
+        kw.update(paged=True, block_size=4)
+    sched = OrcaScheduler(model, params, pc, theta, cfg, **kw)
+    sched.submit(_reqs(bank, ids))
+    last_pos = None
+    while sched.step():
+        pos = np.asarray(sched._engine.pos).copy()
+        if last_pos is not None:
+            assert (pos >= last_pos).all() or (pos == 0)[pos < last_pos].all()
+        # slots only rewind at release/admit (pos reset to 0, re-armed)
+        last_pos = pos
+    done_s, fleet = sched.drain()
+    _assert_identical(done_o, done_s)
+    assert fleet.peak_step_tokens <= budget
+    assert fleet.spec_tokens_proposed >= fleet.spec_tokens_accepted
+    assert fleet.tree_nodes_proposed >= 0
+    if paged:
+        assert sched.pool.num_free == sched.pool.num_usable
+        sched.pool.check()
+
+
+@pytest.mark.parametrize("width,depth,budget,pack,paged,lens", [
+    (2, 2, 3, False, False, [1, 2, 3]),      # budget == n_slots: no extras
+    (2, 3, 16, True, True, [9, 1, 5, 7]),    # roomy budget, full trees
+    (3, 2, 8, True, False, [4, 4, 4, 4, 4]), # tight budget throttles trees
+    (1, 4, 9, False, True, [8, 3, 9, 1, 6, 2]),
+    (2, 2, 7, True, True, [7, 7, 1, 3]),
+])
+def test_tree_sweep_explicit_cases(width, depth, budget, pack, paged, lens):
+    """Pinned corners of the sweep space — runs even without the optional
+    ``hypothesis`` dependency (the property test below skips there)."""
+    _tree_sweep_case(width, depth, budget, pack, paged, lens)
+
+
+@settings(max_examples=8, deadline=None)
+@given(width=st.integers(1, 3), depth=st.integers(1, 3),
+       budget=st.integers(3, 16), pack=st.booleans(), paged=st.booleans(),
+       lens=st.lists(st.integers(1, 9), min_size=3, max_size=7))
+def test_tree_sweep_invariants(width, depth, budget, pack, paged, lens):
+    _tree_sweep_case(width, depth, budget, pack, paged, lens)
